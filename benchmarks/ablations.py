@@ -1,0 +1,105 @@
+"""Benchmark 8 (beyond-paper science): routing-component ablations.
+
+The paper composes four routing mechanisms — kNN candidate stage,
+hierarchical task-type/domain filtering, complexity-adjusted task
+vectors, and the trained analyzer itself — without quantifying their
+individual contributions.  This ablation removes each one and measures
+the quality/cost impact on the standard workload:
+
+  full            — everything on (oracle analyzer isolates routing)
+  no-filter       — hierarchical filters skipped (confidence gate 1.1)
+  no-complexity   — task vector does not raise the accuracy demand
+  no-knn          — kNN widened to the whole catalog (score-only)
+  noisy-analyzer  — trained analyzer replaced by 30%-corrupted sigs
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_result
+from repro.core.preferences import DOMAINS, TASK_TYPES, TaskSignature, UserPreferences
+from repro.core.routing import RoutingEngine
+from repro.data.workload import make_workload, quality_of
+from repro.serving.catalog import build_catalog
+
+
+def entry_meta(e):
+    return {"accuracy": e.raw_metrics["accuracy"],
+            "task_types": e.task_types, "domains": e.domains}
+
+
+def run(n_queries: int = 400, seed: int = 0, verbose: bool = True):
+    mres = build_catalog(smoke_runners=False)
+    entries = {e.name: e for e in mres.entries}
+    wl = make_workload(n_queries, seed=seed)
+    rng = np.random.default_rng(seed)
+    prefs = UserPreferences(weights=dict(
+        accuracy=0.8, cheapness=0.7, speed=0.5, helpfulness=0.4,
+        harmlessness=0.4, honesty=0.4, steerability=0.2, creativity=0.2))
+
+    def corrupt(sig: TaskSignature) -> TaskSignature:
+        if rng.random() < 0.3:
+            return TaskSignature(
+                task_type=str(rng.choice(TASK_TYPES)),
+                domain=str(rng.choice(DOMAINS)),
+                complexity=float(rng.random()), confidence=1.0)
+        return sig
+
+    variants = {
+        "full": (RoutingEngine(mres), lambda s: s),
+        "no-filter": (RoutingEngine(mres, confidence_threshold=1.1),
+                      lambda s: s),
+        "no-complexity": (RoutingEngine(mres, use_complexity=False),
+                          lambda s: s),
+        "no-knn": (RoutingEngine(mres, knn_k=len(mres)), lambda s: s),
+        "noisy-analyzer": (RoutingEngine(mres), corrupt),
+    }
+    out = {}
+    for name, (eng, sig_fn) in variants.items():
+        qual, cost = [], []
+        for r in wl:
+            d = eng.route(prefs, sig_fn(r.sig))
+            e = entries[d.model]
+            qual.append(quality_of(entry_meta(e), r.sig))
+            cost.append(e.raw_metrics["cost_per_mtok"])
+        out[name] = {"quality": float(np.mean(qual)),
+                     "cost_per_mtok": float(np.mean(cost))}
+        if verbose:
+            print(f"  {name:<15} quality={out[name]['quality']:.4f} "
+                  f"cost={out[name]['cost_per_mtok']:.5f}")
+
+    full_q = out["full"]["quality"]
+    out["derived"] = {
+        f"dq_{k}": out[k]["quality"] - full_q for k in variants if k != "full"
+    }
+
+    # The complexity mechanism only binds when the user's own accuracy
+    # weight is LOW (task_vector takes max(w_acc, complexity)) — re-run
+    # that ablation under a cost-focused user to expose it.
+    cheap_prefs = UserPreferences(weights=dict(
+        accuracy=0.1, cheapness=1.0, speed=0.6, helpfulness=0.3,
+        harmlessness=0.3, honesty=0.3, steerability=0.1, creativity=0.1))
+    for name, eng in (("full", RoutingEngine(mres)),
+                      ("no-complexity", RoutingEngine(mres,
+                                                      use_complexity=False))):
+        qual = [quality_of(entry_meta(entries[
+            eng.route(cheap_prefs, r.sig).model]), r.sig) for r in wl]
+        out[f"lowacc_{name}"] = {"quality": float(np.mean(qual))}
+    dq_low = (out["lowacc_no-complexity"]["quality"]
+              - out["lowacc_full"]["quality"])
+    out["derived"]["dq_no-complexity_lowacc_user"] = dq_low
+    if verbose:
+        print(f"  [low-accuracy user] complexity ablation dq={dq_low:+.4f}")
+    save_result("ablations", out)
+    assert dq_low < 0.01, "complexity raise must not hurt"
+    # every ablation must not IMPROVE on the full system's quality
+    # beyond noise — each component must pull its weight
+    assert out["no-filter"]["quality"] <= full_q + 0.01
+    assert out["noisy-analyzer"]["quality"] <= full_q + 0.01
+    deltas = ", ".join(f"{k[3:]}{v:+.3f}"
+                       for k, v in out["derived"].items())
+    return ("ablations", 0.0, f"quality deltas vs full: {deltas}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,92 @@
+"""Benchmark 5 (paper §3.2): long-query pruning keeps analyzer fidelity
+while bounding latency.
+
+The paper prunes long queries to first-n + last-n + sampled-middle words
+because "the task description usually lives at the edges".  We measure,
+on synthetic long queries (up to ~2k words of context blob around an
+edge task description):
+  * prediction agreement (task type / domain) pruned vs unpruned-truth,
+  * analyzer wall latency vs raw query length, pruned and unpruned.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import cached_analyzer, save_result
+from repro.core.analyzer import AnalyzerConfig, prune_text
+from repro.data.workload import _FILLER as _FILL
+from repro.data.workload import make_workload
+
+
+def _inflate(text: str, target_words: int, rng) -> str:
+    """Pad a query's middle with filler to the target length, keeping the
+    task description at the edges (the paper's long-query shape)."""
+    words = text.split()
+    need = target_words - len(words)
+    if need <= 0:
+        return text
+    blob = list(rng.choice(_FILL, need))
+    cut = max(len(words) // 2, 1)
+    return " ".join(words[:cut] + blob + words[cut:])
+
+
+def run(n: int = 120, lengths=(64, 256, 1024, 2048), seed: int = 0,
+        verbose: bool = True):
+    analyzer, _ = cached_analyzer()
+    rng = np.random.default_rng(seed)
+    wl = make_workload(n, seed=seed)
+    base_sigs = analyzer.analyze_batch([r.text for r in wl])
+
+    rows = []
+    for L in lengths:
+        texts = [_inflate(r.text, L, rng) for r in wl]
+        # pruned path (production default); warm jit before timing
+        analyzer.analyze_batch(texts)
+        t0 = time.perf_counter()
+        pr_sigs = analyzer.analyze_batch(texts)
+        t_pruned = (time.perf_counter() - t0) / n * 1e3
+        # unpruned path: same encoder with the position table tiled to
+        # cover the raw length (latency comparison only)
+        raw_cfg = AnalyzerConfig(max_len=min(L + 8, 2048),
+                                 prune_head=10**9, prune_tail=0, prune_mid=0)
+        toks = analyzer.tok.encode_batch(texts, raw_cfg.max_len)
+        import jax.numpy as jnp
+        from repro.core.analyzer import analyzer_forward
+        raw_params = dict(analyzer.params)
+        reps = -(-raw_cfg.max_len // analyzer.cfg.max_len)
+        raw_params["pos"] = jnp.tile(analyzer.params["pos"], (reps, 1))
+        fwd = jax.jit(lambda p, t: analyzer_forward(p, raw_cfg, t))
+        fwd(raw_params, jnp.asarray(toks))          # compile outside timing
+        t0 = time.perf_counter()
+        jax.block_until_ready(fwd(raw_params, jnp.asarray(toks)))
+        t_raw = (time.perf_counter() - t0) / n * 1e3
+
+        tt_agree = float(np.mean([p.task_type == b.task_type
+                                  for p, b in zip(pr_sigs, base_sigs)]))
+        dm_agree = float(np.mean([p.domain == b.domain
+                                  for p, b in zip(pr_sigs, base_sigs)]))
+        tt_true = float(np.mean([p.task_type == r.sig.task_type
+                                 for p, r in zip(pr_sigs, wl)]))
+        rows.append({"words": L, "pruned_ms_per_q": t_pruned,
+                     "raw_ms_per_q": t_raw, "tt_agree": tt_agree,
+                     "dm_agree": dm_agree, "tt_acc_vs_truth": tt_true})
+        if verbose:
+            print(f"  {L:>5} words: pruned {t_pruned:6.2f} ms/q vs raw "
+                  f"{t_raw:7.2f} ms/q | tt-agree {tt_agree:.1%} "
+                  f"dm-agree {dm_agree:.1%} tt-acc {tt_true:.1%}")
+
+    save_result("analyzer_pruning", {"rows": rows})
+    last = rows[-1]
+    assert last["tt_agree"] > 0.9, "pruning must preserve task-type"
+    assert last["pruned_ms_per_q"] < last["raw_ms_per_q"], \
+        "pruning must be faster on long queries"
+    return ("analyzer_pruning", last["pruned_ms_per_q"] * 1e3,
+            f"@2k words: {last['raw_ms_per_q']/last['pruned_ms_per_q']:.1f}x "
+            f"faster, tt-agree {last['tt_agree']:.0%}")
+
+
+if __name__ == "__main__":
+    run()

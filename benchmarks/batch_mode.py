@@ -1,0 +1,103 @@
+"""Benchmark 2 (paper §3 modes): batch mode amortizes the analyzer.
+
+A homogeneous batch (the paper's target case) is routed two ways:
+  * interactive — every query analyzed + routed;
+  * batch       — ~2% sampled, one aggregate route for the whole batch.
+
+Reported: analyzer calls / wall time per query, and routing agreement
+(fraction of queries whose interactive decision equals the batch
+decision) — agreement is the quality cost of amortization.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import cached_analyzer, save_result
+from repro.core.orchestrator import OptiRoute
+from repro.data.workload import make_workload
+from repro.serving.catalog import build_catalog
+
+
+def run(batch_size: int = 200, seed: int = 0, verbose: bool = True):
+    analyzer, metrics = cached_analyzer()
+    mres = build_catalog(smoke_runners=False)
+    router = OptiRoute(mres, analyzer, batch_sample_frac=0.02)
+
+    # homogeneous batch: one task type/domain, complexity spread
+    wl = make_workload(batch_size, seed=seed, task_type="summarization",
+                       domain="finance")
+    texts = [r.text for r in wl]
+    prefs = "cost-effective"
+
+    # warm the jit caches of both paths (steady-state amortization claim)
+    router.route(texts[0], prefs)
+    router.route_batch(texts, prefs, seed=seed + 1)
+
+    t0 = time.perf_counter()
+    inter = [router.route(t, prefs) for t in texts]
+    t_inter = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    decision, sigs, stats = router.route_batch(texts, prefs, seed=seed)
+    t_batch = time.perf_counter() - t0
+
+    inter_models = [rq.decision.model for rq in inter]
+    agreement = float(np.mean([m == decision.model for m in inter_models]))
+    # quality parity: batch mode routes the whole batch to a model able
+    # to handle the HARDEST sampled query (max-complexity aggregation),
+    # so identity agreement underestimates it — measure the fraction of
+    # queries where the batch model's ground-truth quality is within
+    # 0.05 of the per-query interactive choice
+    from repro.data.workload import quality_of
+    entries = {e.name: e for e in mres.entries}
+
+    def meta(e):
+        return {"accuracy": e.raw_metrics["accuracy"],
+                "task_types": e.task_types, "domains": e.domains}
+
+    parity = float(np.mean([
+        quality_of(meta(entries[decision.model]), r.sig)
+        >= quality_of(meta(entries[m]), r.sig) - 0.05
+        for r, m in zip(wl, inter_models)]))
+    out = {
+        "batch_size": batch_size,
+        "analyzer_metrics": metrics,
+        "interactive": {
+            "analyzer_calls": batch_size,
+            "wall_s_total": t_inter,
+            "wall_ms_per_query": t_inter / batch_size * 1e3,
+        },
+        "batch": {
+            "analyzer_calls": stats["sampled"],
+            "wall_s_total": t_batch,
+            "wall_ms_per_query": t_batch / batch_size * 1e3,
+            "model": decision.model,
+        },
+        "derived": {
+            "analyzer_amortization": batch_size / stats["sampled"],
+            "speedup": t_inter / t_batch,
+            "routing_agreement": agreement,
+            "quality_parity": parity,
+        },
+    }
+    if verbose:
+        print(f"  interactive: {batch_size} analyzer calls, "
+              f"{out['interactive']['wall_ms_per_query']:.2f} ms/q")
+        print(f"  batch:       {stats['sampled']} analyzer calls, "
+              f"{out['batch']['wall_ms_per_query']:.3f} ms/q "
+              f"-> {decision.model}")
+        print(f"  agreement:   {agreement:.1%} identity, "
+              f"{parity:.1%} quality-parity, "
+              f"speedup {out['derived']['speedup']:.1f}x")
+    save_result("batch_mode", out)
+    assert out["derived"]["speedup"] > 5, "batch mode must amortize"
+    assert parity > 0.7, "batch model must hold quality for the batch"
+    return ("batch_mode", out["batch"]["wall_ms_per_query"] * 1e3,
+            f"{out['derived']['speedup']:.0f}x speedup, "
+            f"{agreement:.0%} identity / {parity:.0%} quality-parity")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Shared benchmark utilities: cached trained analyzer, result I/O."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+RESULTS = REPO / "results" / "bench"
+ANALYZER_CKPT = REPO / "results" / "analyzer.npz"
+
+
+def save_result(name: str, payload: Dict) -> None:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=2,
+                                                     default=str))
+
+
+def cached_analyzer(steps: int = 250, force: bool = False):
+    """Train the Task Analyzer once; reuse the checkpoint afterwards."""
+    from repro.checkpoint import load, save
+    from repro.core.analyzer import AnalyzerConfig, TaskAnalyzer
+    cfg = AnalyzerConfig()
+    an = TaskAnalyzer(cfg)
+    if ANALYZER_CKPT.exists() and not force:
+        params, meta = load(str(ANALYZER_CKPT))
+        an.params = params
+        return an, meta.get("metrics", {})
+    metrics = an.train(n_samples=4096, steps=steps)
+    save(str(ANALYZER_CKPT), an.params, {"metrics": metrics})
+    return an, metrics
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.perf_counter()
+
+    def __call__(self) -> float:
+        return time.perf_counter() - self.t0
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"
+
+
+def synthetic_entry(name, *, accuracy=0.5, latency_ms=100.0, cost=1.0,
+                    task_types=("chat",), domains=("general",),
+                    generalist=False, family="dense", n_params=0, **ethics):
+    """A fully-populated MRES entry for synthetic catalogs."""
+    from repro.core.mres import ModelEntry
+    raw = {
+        "accuracy": accuracy, "latency_ms": latency_ms,
+        "cost_per_mtok": cost,
+        "helpfulness": ethics.get("helpfulness", 0.5),
+        "harmlessness": ethics.get("harmlessness", 0.5),
+        "honesty": ethics.get("honesty", 0.5),
+        "steerability": ethics.get("steerability", 0.5),
+        "creativity": ethics.get("creativity", 0.5),
+    }
+    return ModelEntry(name=name, raw_metrics=raw, task_types=task_types,
+                      domains=domains, generalist=generalist,
+                      family=family, n_params=n_params)

@@ -1,0 +1,90 @@
+"""Benchmark 1 (paper §1/§3.4 claim): preference-aware routing reduces
+cost and latency versus always-using-the-largest-model at matched (or
+better) quality, and versus naive baselines.
+
+Policies compared over the same synthetic workload:
+  * always-biggest   — the one-size-fits-all upper baseline
+  * always-cheapest  — the cost floor (quality collapses)
+  * random           — uniform over the catalog
+  * optiroute        — full route(): analyzer sig + kNN + filter + score
+
+Quality is the deterministic synthetic ground truth from
+``repro.data.workload.quality_of`` (catalog accuracy vs task complexity
+and domain/task-tag match) — the paper's MRES evaluation numbers.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_result
+from repro.core.orchestrator import OptiRoute
+from repro.core.preferences import UserPreferences
+from repro.core.routing import RoutingEngine
+from repro.data.workload import make_workload, quality_of
+from repro.serving.catalog import build_catalog
+
+
+def entry_meta(e):
+    return {"accuracy": e.raw_metrics["accuracy"],
+            "task_types": e.task_types, "domains": e.domains}
+
+
+def run(n_queries: int = 400, seed: int = 0, verbose: bool = True):
+    mres = build_catalog(smoke_runners=False)
+    entries = {e.name: e for e in mres.entries}
+    biggest = max(entries.values(), key=lambda e: e.meta["active_params"])
+    cheapest = min(entries.values(),
+                   key=lambda e: e.raw_metrics["cost_per_mtok"])
+    wl = make_workload(n_queries, seed=seed)
+    rng = np.random.default_rng(seed)
+
+    # oracle analyzer isolates routing quality from analyzer error
+    class _Oracle:
+        def analyze(self, text):
+            return next(r.sig for r in wl if r.text == text)
+
+    router = OptiRoute(mres, _Oracle())
+    prefs = UserPreferences(weights=dict(
+        accuracy=0.8, cheapness=0.7, speed=0.5, helpfulness=0.4,
+        harmlessness=0.4, honesty=0.4, steerability=0.2, creativity=0.2))
+
+    policies = {
+        "always-biggest": lambda r: biggest.name,
+        "always-cheapest": lambda r: cheapest.name,
+        "random": lambda r: str(rng.choice(list(entries))),
+        "optiroute": lambda r: router.route(r.text, prefs).decision.model,
+    }
+    out = {}
+    for pol, pick in policies.items():
+        qual, cost, lat = [], [], []
+        for r in wl:
+            e = entries[pick(r)]
+            qual.append(quality_of(entry_meta(e), r.sig))
+            cost.append(e.raw_metrics["cost_per_mtok"])
+            lat.append(e.raw_metrics["latency_ms"])
+        out[pol] = {"quality": float(np.mean(qual)),
+                    "cost_per_mtok": float(np.mean(cost)),
+                    "latency_ms": float(np.mean(lat))}
+
+    big, opt = out["always-biggest"], out["optiroute"]
+    out["derived"] = {
+        "cost_reduction_vs_biggest": 1.0 - opt["cost_per_mtok"] / big["cost_per_mtok"],
+        "latency_reduction_vs_biggest": 1.0 - opt["latency_ms"] / big["latency_ms"],
+        "quality_delta_vs_biggest": opt["quality"] - big["quality"],
+        "quality_delta_vs_cheapest": opt["quality"] - out["always-cheapest"]["quality"],
+    }
+    if verbose:
+        for k, v in out.items():
+            print(f"  {k}: {v}")
+    save_result("routing_win", out)
+    d = out["derived"]
+    assert d["cost_reduction_vs_biggest"] > 0, "routing must cut cost"
+    assert d["quality_delta_vs_biggest"] > -0.05, "quality must hold"
+    return ("routing_win", 0.0,
+            f"cost-{d['cost_reduction_vs_biggest']:.0%}/"
+            f"lat-{d['latency_reduction_vs_biggest']:.0%}/"
+            f"dq{d['quality_delta_vs_biggest']:+.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Benchmark harness: one experiment per paper claim (DESIGN.md §6).
+
+  PYTHONPATH=src:. python -m benchmarks.run [--only name]
+
+Prints a ``name,us_per_call,derived`` CSV summary (plus per-benchmark
+detail above it) and writes JSON payloads to results/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (ablations, analyzer_pruning, batch_mode, feedback,
+                        merging, roofline, router_scale, routing_win)
+
+ALL = {
+    "routing_win": routing_win.run,
+    "batch_mode": batch_mode.run,
+    "feedback": feedback.run,
+    "router_scale": router_scale.run,
+    "analyzer_pruning": analyzer_pruning.run,
+    "merging": merging.run,
+    "ablations": ablations.run,
+    "roofline": roofline.run,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", action="append", default=None,
+                    choices=list(ALL))
+    args = ap.parse_args(argv)
+    names = args.only or list(ALL)
+
+    rows = []
+    failed = []
+    for name in names:
+        print(f"[bench] {name} ...", flush=True)
+        t0 = time.time()
+        try:
+            rows.append(ALL[name]())
+        except Exception:                      # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+            rows.append((name, 0.0, "FAILED"))
+        print(f"[bench] {name} done in {time.time() - t0:.1f}s\n",
+              flush=True)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+    if failed:
+        print(f"\nFAILED: {failed}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

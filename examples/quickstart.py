@@ -1,0 +1,68 @@
+"""Quickstart: route three queries with different preference profiles.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Shows the full paper pipeline on the 10-architecture catalog (no model
+execution — see serve_routed.py for that): user preferences -> Task
+Analyzer json -> kNN + hierarchical filter + weighted scoring ->
+RoutingDecision, then a thumbs-down feedback update.
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.analyzer import AnalyzerConfig, TaskAnalyzer
+from repro.core.orchestrator import OptiRoute
+from repro.serving.catalog import build_catalog
+
+QUERIES = [
+    ("cost-effective",
+     "find the sentiment of the passage the quarterly portfolio report "
+     "shows hedging gains during review"),
+    ("accuracy-first",
+     "solve this step by step however the paradox in the nested clause "
+     "is subtle prove that the liability statute holds for all cases"),
+    ("latency-first",
+     "hello can you help me with travel cooking ideas"),
+]
+
+
+def main():
+    print("== building the 10-architecture MRES catalog ==")
+    mres = build_catalog()          # metrics derived from dry-run rooflines
+    for e in mres.entries:
+        m = e.raw_metrics
+        print(f"  {e.name:<28} acc={m['accuracy']:.2f} "
+              f"lat={m['latency_ms']:.4f}ms cost=${m['cost_per_mtok']:.4f}/Mtok")
+
+    print("\n== training the task analyzer (miniature; one-off) ==")
+    analyzer = TaskAnalyzer(AnalyzerConfig(d_model=64, n_layers=1, d_ff=128))
+    metrics = analyzer.train(n_samples=1024, steps=120)
+    print(f"  {metrics}")
+
+    router = OptiRoute(mres, analyzer)
+    print("\n== routing ==")
+    last = None
+    for profile, text in QUERIES:
+        rq = router.route(text, profile)
+        print(f"\n  profile={profile}")
+        print(f"  query:    {text[:64]}...")
+        print(f"  analyzer: {analyzer.to_json(rq.sig)}")
+        d = rq.decision
+        print(f"  decision: {d.model} (score {d.score:.3f}, "
+              f"similarity {d.similarity:.3f}"
+              f"{', fallback ' + d.fallback_kind if d.used_fallback else ''})")
+        print(f"  stages:   {d.stage_sizes}")
+        print(f"  runner-up: {d.candidates[1] if len(d.candidates) > 1 else '—'}")
+        last = rq
+
+    print("\n== feedback ==")
+    bias = router.give_feedback(last, thumbs_up=False)
+    print(f"  thumbs-down on {last.decision.model}: cluster bias -> {bias}")
+    rq2 = router.route(QUERIES[-1][1], QUERIES[-1][0])
+    print(f"  re-route after feedback: {rq2.decision.model}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Pytree checkpointing (npz)."""
+from repro.checkpoint.store import CheckpointManager, load, save  # noqa: F401

@@ -1,0 +1,2 @@
+"""OptiRoute core: the paper's contribution (preferences, analyzer,
+MRES, routing engine, feedback, merging, orchestrator)."""

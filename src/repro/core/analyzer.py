@@ -1,0 +1,298 @@
+"""Task Analyzer (paper §3.2).
+
+A low-footprint instruction-tuned LM that predicts the implicit user
+preferences — ``{task_type, domain, complexity}`` — from the raw query
+at run time.  The paper uses a ~400M FLAN-T5; here it is a miniature
+pure-JAX transformer encoder (the substrate scales to the paper's size
+by config) trained on the synthetic query logs in ``repro.data``.
+
+Also implements the paper's two analyzer-latency optimizations:
+  * long-query pruning: first-n + last-n words + a random sample of the
+    middle (task descriptions live at the edges);
+  * int8 weight quantization (symmetric per-channel) as a config flag.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.preferences import DOMAINS, TASK_TYPES, TaskSignature
+from repro.data.tokenizer import PAD_ID, HashTokenizer
+from repro.data.workload import QueryRecord, make_workload
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+N_TT = len(TASK_TYPES)
+N_DM = len(DOMAINS)
+
+
+@dataclass(frozen=True)
+class AnalyzerConfig:
+    vocab_size: int = 4096
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 256
+    max_len: int = 96
+    # pruning (paper: "first n and last n words ... random sample of middle")
+    prune_head: int = 40
+    prune_tail: int = 24
+    prune_mid: int = 16
+    quantize_int8: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# ----------------------------------------------------------------------
+# query pruning
+# ----------------------------------------------------------------------
+
+def prune_text(cfg: AnalyzerConfig, text: str, seed: int = 0) -> str:
+    """Edge-preserving pruning of long queries (deterministic)."""
+    words = text.split()
+    budget = cfg.prune_head + cfg.prune_tail + cfg.prune_mid
+    if len(words) <= budget:
+        return text
+    head = words[: cfg.prune_head]
+    tail = words[-cfg.prune_tail:]
+    middle = words[cfg.prune_head: -cfg.prune_tail]
+    rng = np.random.default_rng(seed + len(words))
+    pick = sorted(rng.choice(len(middle), size=cfg.prune_mid, replace=False))
+    mid = [middle[i] for i in pick]
+    return " ".join(head + mid + tail)
+
+
+# ----------------------------------------------------------------------
+# model
+# ----------------------------------------------------------------------
+
+def init_analyzer(key, cfg: AnalyzerConfig) -> Dict:
+    d, f, V = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    ks = jax.random.split(key, 6 + cfg.n_layers)
+
+    def mat(k, shape, scale=None):
+        std = scale if scale else 1.0 / math.sqrt(shape[0])
+        return jax.random.normal(k, shape, jnp.float32) * std
+
+    def layer(k):
+        kk = jax.random.split(k, 7)
+        return {
+            "wq": mat(kk[0], (d, d)), "wk": mat(kk[1], (d, d)),
+            "wv": mat(kk[2], (d, d)), "wo": mat(kk[3], (d, d)),
+            "wi": mat(kk[4], (d, f)), "wp": mat(kk[5], (f, d)),
+            "ln1": jnp.ones((d,)), "ln2": jnp.ones((d,)),
+        }
+
+    return {
+        "embed": mat(ks[0], (V, d), scale=0.05),
+        "pos": mat(ks[1], (cfg.max_len, d), scale=0.02),
+        "layers": [layer(ks[2 + i]) for i in range(cfg.n_layers)],
+        "ln_f": jnp.ones((cfg.d_model,)),
+        "head_tt": mat(ks[-3], (d, N_TT), scale=0.02),
+        "head_dm": mat(ks[-2], (d, N_DM), scale=0.02),
+        "head_cx": mat(ks[-1], (d, 1), scale=0.02),
+    }
+
+
+def _ln(x, g, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g
+
+
+def _maybe_deq(w):
+    """Transparent int8 dequant: w is either f32 or (int8, scale)."""
+    if isinstance(w, tuple):
+        q, s = w
+        return q.astype(jnp.float32) * s
+    return w
+
+
+def analyzer_forward(params: Dict, cfg: AnalyzerConfig, tokens: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """tokens (B, L) int32 -> (tt_logits, dm_logits, complexity (B,))."""
+    B, L = tokens.shape
+    mask = tokens != PAD_ID                                 # (B, L)
+    emb = _maybe_deq(params["embed"])
+    x = emb[tokens] + _maybe_deq(params["pos"])[None, :L]
+    H, hd = cfg.n_heads, cfg.head_dim
+    neg = jnp.where(mask, 0.0, -1e30)[:, None, None, :]     # key mask
+
+    for p in params["layers"]:
+        h = _ln(x, p["ln1"])
+        q = (h @ _maybe_deq(p["wq"])).reshape(B, L, H, hd)
+        k = (h @ _maybe_deq(p["wk"])).reshape(B, L, H, hd)
+        v = (h @ _maybe_deq(p["wv"])).reshape(B, L, H, hd)
+        s = jnp.einsum("blhd,bmhd->bhlm", q, k) / math.sqrt(hd) + neg
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhlm,bmhd->blhd", a, v).reshape(B, L, -1)
+        x = x + o @ _maybe_deq(p["wo"])
+        h = _ln(x, p["ln2"])
+        x = x + jax.nn.gelu(h @ _maybe_deq(p["wi"])) @ _maybe_deq(p["wp"])
+
+    x = _ln(x, params["ln_f"])
+    denom = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1)
+    pooled = jnp.sum(x * mask[..., None], axis=1) / denom   # (B, d)
+    tt = pooled @ _maybe_deq(params["head_tt"])
+    dm = pooled @ _maybe_deq(params["head_dm"])
+    cx = jax.nn.sigmoid(pooled @ _maybe_deq(params["head_cx"]))[:, 0]
+    return tt, dm, cx
+
+
+# ----------------------------------------------------------------------
+# int8 quantization (paper §3.2 latency optimization)
+# ----------------------------------------------------------------------
+
+def quantize_int8(params: Dict) -> Dict:
+    """Symmetric per-output-channel int8 for every 2-D matrix."""
+    def q(w):
+        if isinstance(w, jnp.ndarray) and w.ndim == 2:
+            s = jnp.max(jnp.abs(w), axis=0, keepdims=True) / 127.0 + 1e-12
+            return (jnp.round(w / s).astype(jnp.int8), s.astype(jnp.float32))
+        return w
+
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return q(node)
+
+    return walk(params)
+
+
+# ----------------------------------------------------------------------
+# training (instruction-tuning stand-in) & inference
+# ----------------------------------------------------------------------
+
+def _labels(records: Sequence[QueryRecord]) -> Dict[str, np.ndarray]:
+    return {
+        "tt": np.array([TASK_TYPES.index(r.sig.task_type) for r in records]),
+        "dm": np.array([DOMAINS.index(r.sig.domain) for r in records]),
+        "cx": np.array([r.sig.complexity for r in records], np.float32),
+    }
+
+
+def analyzer_loss(params, cfg, tokens, labels):
+    tt, dm, cx = analyzer_forward(params, cfg, tokens)
+    ce = lambda lg, y: -jnp.mean(jax.nn.log_softmax(lg)[jnp.arange(lg.shape[0]), y])
+    l_tt = ce(tt, labels["tt"])
+    l_dm = ce(dm, labels["dm"])
+    l_cx = jnp.mean((cx - labels["cx"]) ** 2)
+    return l_tt + l_dm + 4.0 * l_cx, (l_tt, l_dm, l_cx)
+
+
+class TaskAnalyzer:
+    """Trainable analyzer with the paper's predict-json contract."""
+
+    def __init__(self, cfg: AnalyzerConfig = AnalyzerConfig(), seed: int = 0):
+        self.cfg = cfg
+        self.tok = HashTokenizer(cfg.vocab_size)
+        self.params = init_analyzer(jax.random.PRNGKey(seed), cfg)
+        self._fwd = jax.jit(
+            lambda p, t: analyzer_forward(p, self.cfg, t))
+
+    # -------------------------- training --------------------------
+    def train(self, n_samples: int = 4096, steps: int = 300,
+              batch_size: int = 128, seed: int = 0, lr: float = 3e-3,
+              log_every: int = 0, long_frac: float = 0.3
+              ) -> Dict[str, float]:
+        # long_frac of training queries are inflated to long-context
+        # shape so the prune-path (first-n/last-n/sampled-middle) is
+        # in-distribution (paper: queries range 50 .. 10k+ words)
+        records = make_workload(n_samples, seed=seed, long_frac=long_frac)
+        toks = self._encode([r.text for r in records])
+        labels = _labels(records)
+        opt_cfg = AdamWConfig(lr=lr, warmup_steps=20, weight_decay=0.01)
+        opt = init_opt_state(self.params)
+        rng = np.random.default_rng(seed)
+
+        @jax.jit
+        def step(params, opt, tokens, tt, dm, cx):
+            (tot, parts), grads = jax.value_and_grad(
+                analyzer_loss, has_aux=True)(
+                    params, self.cfg, tokens, {"tt": tt, "dm": dm, "cx": cx})
+            params, opt, _ = adamw_update(grads, opt, params, opt_cfg)
+            return params, opt, tot
+
+        params = self.params
+        last = 0.0
+        for i in range(steps):
+            sel = rng.integers(0, n_samples, batch_size)
+            params, opt, tot = step(params, opt, jnp.asarray(toks[sel]),
+                                    jnp.asarray(labels["tt"][sel]),
+                                    jnp.asarray(labels["dm"][sel]),
+                                    jnp.asarray(labels["cx"][sel]))
+            last = float(tot)
+            if log_every and i % log_every == 0:
+                print(f"[analyzer] step {i} loss {last:.4f}")
+        self.params = params
+        return self.evaluate(seed=seed + 1)
+
+    def evaluate(self, n: int = 512, seed: int = 1) -> Dict[str, float]:
+        records = make_workload(n, seed=seed)
+        toks = jnp.asarray(self._encode([r.text for r in records]))
+        labels = _labels(records)
+        tt, dm, cx = self._fwd(self.params, toks)
+        return {
+            "task_type_acc": float(np.mean(np.argmax(tt, 1) == labels["tt"])),
+            "domain_acc": float(np.mean(np.argmax(dm, 1) == labels["dm"])),
+            "complexity_mae": float(np.mean(np.abs(np.asarray(cx) - labels["cx"]))),
+        }
+
+    # -------------------------- inference --------------------------
+    def _encode(self, texts: Sequence[str]) -> np.ndarray:
+        pruned = [prune_text(self.cfg, t) for t in texts]
+        return self.tok.encode_batch(pruned, self.cfg.max_len)
+
+    def quantize(self) -> None:
+        self.params = quantize_int8(self.params)
+
+    def analyze_batch(self, texts: Sequence[str]) -> List[TaskSignature]:
+        toks = self._encode(texts)
+        # bucket the batch dim to powers of two so the jitted forward
+        # compiles once per bucket, not once per request-batch size
+        n = toks.shape[0]
+        bucket = 1 << max(n - 1, 0).bit_length()
+        if bucket != n:
+            toks = np.concatenate(
+                [toks, np.zeros((bucket - n, toks.shape[1]), toks.dtype)])
+        tt, dm, cx = self._fwd(self.params, jnp.asarray(toks))
+        tt_p = np.asarray(jax.nn.softmax(tt, axis=-1))
+        dm_p = np.asarray(jax.nn.softmax(dm, axis=-1))
+        cx = np.asarray(cx)
+        out = []
+        for i in range(len(texts)):
+            conf = float(min(tt_p[i].max(), dm_p[i].max()))
+            out.append(TaskSignature(
+                task_type=TASK_TYPES[int(tt_p[i].argmax())],
+                domain=DOMAINS[int(dm_p[i].argmax())],
+                complexity=float(np.clip(cx[i], 0.0, 1.0)),
+                confidence=conf))
+        return out
+
+    def analyze(self, text: str) -> TaskSignature:
+        return self.analyze_batch([text])[0]
+
+    def to_json(self, sig: TaskSignature) -> Dict:
+        """The paper's structured-json analyzer contract (Fig 3)."""
+        return {"task_type": sig.task_type, "domain": sig.domain,
+                "complexity": round(sig.complexity, 3),
+                "confidence": round(sig.confidence, 3)}
+
+
+class OracleAnalyzer:
+    """Ground-truth analyzer (reads the workload's true signature).
+
+    Used by benchmarks to isolate routing quality from analyzer error.
+    """
+
+    def analyze_record(self, rec: QueryRecord) -> TaskSignature:
+        return rec.sig

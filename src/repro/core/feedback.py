@@ -1,0 +1,84 @@
+"""User feedback loop (paper §3.5).
+
+Thumbs-up/down per (task cluster, model) maintained as a bounded
+exponential moving average in [-1, 1].  The Routing Engine adds
+``feedback_weight * bias`` at scoring time, so positive feedback
+reinforces a routing path and negative feedback depresses it.
+
+A task cluster is (task_type, domain, complexity bucket) — the
+granularity at which the paper's policy review operates.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.preferences import TaskSignature
+
+Cluster = Tuple[str, str, int]
+
+
+def cluster_of(sig: TaskSignature, buckets: int = 4) -> Cluster:
+    b = min(int(sig.complexity * buckets), buckets - 1)
+    return (sig.task_type, sig.domain, b)
+
+
+@dataclass
+class FeedbackEvent:
+    cluster: Cluster
+    model: str
+    thumbs_up: bool
+
+
+class FeedbackStore:
+    def __init__(self, alpha: float = 0.3):
+        self.alpha = float(alpha)
+        self._bias: Dict[Tuple[Cluster, str], float] = {}
+        self._count: Dict[Tuple[Cluster, str], int] = {}
+        self._log: List[FeedbackEvent] = []
+        self._lock = threading.Lock()
+
+    def record(self, sig: TaskSignature, model: str, thumbs_up: bool) -> float:
+        """EMA update; returns the new bias (always within [-1, 1])."""
+        c = cluster_of(sig)
+        key = (c, model)
+        target = 1.0 if thumbs_up else -1.0
+        with self._lock:
+            old = self._bias.get(key, 0.0)
+            new = (1 - self.alpha) * old + self.alpha * target
+            self._bias[key] = float(np.clip(new, -1.0, 1.0))
+            self._count[key] = self._count.get(key, 0) + 1
+            self._log.append(FeedbackEvent(c, model, thumbs_up))
+            return self._bias[key]
+
+    def bias(self, sig: TaskSignature, models: Sequence[str]) -> np.ndarray:
+        c = cluster_of(sig)
+        with self._lock:
+            return np.array([self._bias.get((c, m), 0.0) for m in models],
+                            np.float32)
+
+    def events(self) -> List[FeedbackEvent]:
+        with self._lock:
+            return list(self._log)
+
+    # ---- persistence (part of the production story) ----
+    def save(self, path: str) -> None:
+        with self._lock:
+            data = [{"cluster": list(k[0]), "model": k[1], "bias": v,
+                     "count": self._count.get(k, 0)}
+                    for k, v in self._bias.items()]
+        with open(path, "w") as f:
+            json.dump(data, f)
+
+    def load(self, path: str) -> None:
+        with open(path) as f:
+            data = json.load(f)
+        with self._lock:
+            for row in data:
+                key = (tuple(row["cluster"]), row["model"])
+                self._bias[key] = float(row["bias"])
+                self._count[key] = int(row["count"])

@@ -1,0 +1,142 @@
+"""Model Registry and Evaluation Store (paper §3.3).
+
+An in-memory vector store of model entries.  Each entry carries raw
+evaluation metrics (accuracy %, latency ms, cost $ / 1M tok, ethics
+scores, ...), task-type/domain tags and a handle to the runnable model.
+Raw metrics are min-max normalized across the catalog into [0, 1]
+(1 = better; latency and cost are inverted) — the normalized vectors are
+the embeddings the Routing Engine searches.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.preferences import DOMAINS, METRICS, N_METRICS, TASK_TYPES
+
+# raw metric names -> (embedding axis, higher_is_better)
+RAW_TO_AXIS = {
+    "accuracy": ("accuracy", True),
+    "latency_ms": ("speed", False),
+    "cost_per_mtok": ("cheapness", False),
+    "helpfulness": ("helpfulness", True),
+    "harmlessness": ("harmlessness", True),
+    "honesty": ("honesty", True),
+    "steerability": ("steerability", True),
+    "creativity": ("creativity", True),
+}
+
+
+@dataclass
+class ModelEntry:
+    name: str
+    raw_metrics: Dict[str, float]
+    task_types: Tuple[str, ...] = ("chat",)
+    domains: Tuple[str, ...] = ("general",)
+    family: str = "dense"
+    n_params: int = 0
+    generalist: bool = False          # fallback-eligible (paper §3.4)
+    runner: Any = None                # handle to the servable model
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def validate(self) -> "ModelEntry":
+        for t in self.task_types:
+            assert t in TASK_TYPES, (self.name, t)
+        for d in self.domains:
+            assert d in DOMAINS, (self.name, d)
+        for k in RAW_TO_AXIS:
+            assert k in self.raw_metrics, (self.name, f"missing metric {k}")
+        return self
+
+
+def normalize_catalog(entries: Sequence[ModelEntry]) -> np.ndarray:
+    """Min-max normalize raw metrics into the (n_models, N_METRICS)
+    embedding matrix. 1 = better on every axis (inversions applied).
+
+    Scale-invariant: multiplying any raw metric column by c > 0 leaves
+    the result unchanged. Single-model catalogs normalize to 1.0.
+    """
+    n = len(entries)
+    emb = np.zeros((n, N_METRICS), np.float32)
+    for j, raw_name in enumerate(RAW_TO_AXIS):
+        axis_name, hib = RAW_TO_AXIS[raw_name]
+        ax = METRICS.index(axis_name)
+        col = np.array([float(e.raw_metrics[raw_name]) for e in entries],
+                       np.float64)
+        lo, hi = col.min(), col.max()
+        if hi - lo < 1e-12:
+            norm = np.ones_like(col)
+        else:
+            norm = (col - lo) / (hi - lo)
+        if not hib:
+            norm = 1.0 - norm
+        emb[:, ax] = norm.astype(np.float32)
+    return emb
+
+
+class MRES:
+    """In-memory vector store over the model catalog. Thread-safe for the
+    serving engine's concurrent route/feedback calls."""
+
+    def __init__(self):
+        self._entries: List[ModelEntry] = []
+        self._emb: Optional[np.ndarray] = None
+        self._dirty = True
+        self._lock = threading.Lock()
+
+    # ---------------- registry ----------------
+    def register(self, entry: ModelEntry) -> None:
+        with self._lock:
+            entry.validate()
+            existing = {e.name for e in self._entries}
+            if entry.name in existing:
+                raise ValueError(f"duplicate model {entry.name!r}")
+            self._entries.append(entry)
+            self._dirty = True
+
+    def update_metrics(self, name: str, **raw_metrics: float) -> None:
+        with self._lock:
+            e = self._by_name(name)
+            e.raw_metrics.update(raw_metrics)
+            self._dirty = True
+
+    def _by_name(self, name: str) -> ModelEntry:
+        for e in self._entries:
+            if e.name == name:
+                return e
+        raise KeyError(name)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def entries(self) -> List[ModelEntry]:
+        return list(self._entries)
+
+    def entry(self, name: str) -> ModelEntry:
+        with self._lock:
+            return self._by_name(name)
+
+    # ---------------- embeddings ----------------
+    def embeddings(self) -> np.ndarray:
+        """(n_models, N_METRICS) normalized metric matrix."""
+        with self._lock:
+            if self._dirty or self._emb is None:
+                self._emb = normalize_catalog(self._entries)
+                self._dirty = False
+            return self._emb
+
+    def masks(self, task_type: Optional[str], domain: Optional[str]
+              ) -> Tuple[np.ndarray, np.ndarray]:
+        """Hierarchical filter masks (task-type mask, domain mask)."""
+        tt = np.array([task_type in e.task_types if task_type else True
+                       for e in self._entries], bool)
+        dm = np.array([domain in e.domains if domain else True
+                       for e in self._entries], bool)
+        return tt, dm
+
+    def generalist_mask(self) -> np.ndarray:
+        return np.array([e.generalist for e in self._entries], bool)

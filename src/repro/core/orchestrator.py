@@ -1,0 +1,123 @@
+"""OptiRoute end-to-end orchestrator (paper Fig 1, §3).
+
+Ties together: user preferences -> Task Analyzer -> Routing Engine over
+the MRES -> (optional) model-merging fallback -> inference execution ->
+feedback loop.  Two operating modes:
+
+  * interactive — every query is analyzed and routed individually;
+  * batch       — a ~2% sample of the batch is analyzed, the aggregate
+                  signature routes the WHOLE batch to one model
+                  (amortizes the analyzer; paper §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.analyzer import TaskAnalyzer
+from repro.core.feedback import FeedbackStore
+from repro.core.merging import ModelMerger
+from repro.core.mres import MRES, ModelEntry
+from repro.core.preferences import TaskSignature, UserPreferences, resolve
+from repro.core.routing import RoutingDecision, RoutingEngine
+
+
+@dataclass
+class RoutedQuery:
+    text: str
+    sig: TaskSignature
+    decision: RoutingDecision
+    analyzer_s: float
+    route_s: float
+    response: Any = None
+
+
+class OptiRoute:
+    """The deployable facade: ``route`` / ``route_batch`` / ``serve``."""
+
+    def __init__(self, mres: MRES, analyzer: TaskAnalyzer, *,
+                 feedback: Optional[FeedbackStore] = None,
+                 knn_k: int = 8, merge_threshold: Optional[float] = None,
+                 batch_sample_frac: float = 0.02,
+                 use_kernel: bool = False, feedback_weight: float = 0.5,
+                 telemetry=None):
+        self.mres = mres
+        self.analyzer = analyzer
+        self.feedback = feedback if feedback is not None else FeedbackStore()
+        self.engine = RoutingEngine(mres, self.feedback, knn_k=knn_k,
+                                    use_kernel=use_kernel,
+                                    feedback_weight=feedback_weight)
+        self.merger = (ModelMerger(mres, merge_threshold)
+                       if merge_threshold is not None else None)
+        self.batch_sample_frac = batch_sample_frac
+        self.telemetry = telemetry
+
+    # ------------------------- interactive -------------------------
+    def route(self, text: str, prefs) -> RoutedQuery:
+        t0 = time.time()
+        sig = self.analyzer.analyze(text)
+        t1 = time.time()
+        decision = self.engine.route(prefs, sig)
+        t2 = time.time()
+        if (self.merger is not None
+                and decision.score < self.merger.score_threshold):
+            merged = self.merger.maybe_merge(resolve(prefs), sig,
+                                             decision.score)
+            if merged is not None:     # re-route against the grown catalog
+                decision = self.engine.route(prefs, sig)
+        rq = RoutedQuery(text=text, sig=sig, decision=decision,
+                         analyzer_s=t1 - t0, route_s=t2 - t1)
+        if self.telemetry is not None:
+            entry = self.mres.entry(decision.model)
+            self.telemetry.record_decision(
+                rq, sim_cost=entry.raw_metrics.get("cost_per_mtok", 0.0))
+        return rq
+
+    # --------------------------- batch ---------------------------
+    def route_batch(self, texts: Sequence[str], prefs, *,
+                    seed: int = 0) -> Tuple[RoutingDecision, List[TaskSignature], Dict]:
+        """Sample-analyze-aggregate-route (paper batch mode).
+
+        Returns (one decision for the whole batch, sampled signatures,
+        stats).  The aggregate signature takes the majority task type /
+        domain and the MAX complexity of the sample (the chosen model
+        must handle the hardest sampled query).
+        """
+        n = len(texts)
+        k = max(1, int(round(n * self.batch_sample_frac)))
+        rng = np.random.default_rng(seed)
+        pick = rng.choice(n, size=min(k, n), replace=False)
+        t0 = time.time()
+        sigs = self.analyzer.analyze_batch([texts[i] for i in pick])
+        t1 = time.time()
+        tt = Counter(s.task_type for s in sigs).most_common(1)[0][0]
+        dm = Counter(s.domain for s in sigs).most_common(1)[0][0]
+        agg = TaskSignature(
+            task_type=tt, domain=dm,
+            complexity=max(s.complexity for s in sigs),
+            confidence=float(np.mean([s.confidence for s in sigs])))
+        decision = self.engine.route(prefs, agg)
+        stats = {"batch": n, "sampled": len(pick),
+                 "analyzer_s": t1 - t0, "route_s": time.time() - t1,
+                 "aggregate_sig": agg}
+        return decision, sigs, stats
+
+    # -------------------------- serving --------------------------
+    def serve(self, text: str, prefs, tokens: np.ndarray,
+              max_new: int = 8) -> RoutedQuery:
+        """Route + execute on the selected entry's runner."""
+        rq = self.route(text, prefs)
+        entry = self.mres.entry(rq.decision.model)
+        if entry.runner is not None:
+            rq.response = entry.runner.generate(tokens, max_new=max_new)
+        return rq
+
+    def give_feedback(self, rq: RoutedQuery, thumbs_up: bool) -> float:
+        if self.telemetry is not None:
+            self.telemetry.attach_thumbs(rq.decision.model, thumbs_up)
+        return self.feedback.record(rq.sig, rq.decision.model, thumbs_up)

@@ -1,0 +1,146 @@
+"""Routing Engine (paper §3.4).
+
+Pipeline per query:
+  1. task vector  = user preference weights, with the accuracy axis
+     raised to the analyzer's complexity estimate (harder task => demand
+     more capable models);
+  2. kNN stage    = cosine-similarity top-k against the MRES embedding
+     matrix (Pallas ``router_topk`` kernel for large catalogs, numpy for
+     small ones);
+  3. hierarchical filtering = task-type mask, then domain mask (only
+     applied when the analyzer is confident);
+  4. scoring      = user-weighted sum of normalized metrics + feedback
+     bias; argmax wins;
+  5. fallback     = if filters empty the candidate set: widen kNN to the
+     whole catalog -> drop the domain filter -> generalist models.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.mres import MRES
+from repro.core.preferences import (METRICS, TaskSignature, UserPreferences,
+                                    resolve)
+
+_ACC = METRICS.index("accuracy")
+
+
+def cosine_sim(emb: np.ndarray, t: np.ndarray) -> np.ndarray:
+    """Cosine similarity of each row of emb against task vector t."""
+    en = np.linalg.norm(emb, axis=1) + 1e-9
+    tn = np.linalg.norm(t) + 1e-9
+    return (emb @ t) / (en * tn)
+
+
+@dataclass
+class RoutingDecision:
+    model: str
+    score: float
+    task_vector: np.ndarray
+    similarity: float
+    candidates: List[Tuple[str, float]]
+    used_fallback: bool = False
+    fallback_kind: str = ""
+    stage_sizes: Dict[str, int] = field(default_factory=dict)
+
+
+class RoutingEngine:
+    def __init__(self, mres: MRES, feedback=None, *, knn_k: int = 8,
+                 confidence_threshold: float = 0.3,
+                 feedback_weight: float = 0.5,
+                 use_kernel: bool = False, kernel_min_n: int = 1024,
+                 use_complexity: bool = True):
+        self.mres = mres
+        self.feedback = feedback
+        self.knn_k = knn_k
+        self.confidence_threshold = confidence_threshold
+        self.feedback_weight = feedback_weight
+        self.use_kernel = use_kernel
+        self._kernel_min_n = kernel_min_n
+        self._kernel_fn = None
+        self.use_complexity = use_complexity   # ablation knob
+
+    # ------------------------------------------------------------------
+    def task_vector(self, prefs: UserPreferences, sig: TaskSignature
+                    ) -> np.ndarray:
+        v = prefs.vector().copy()
+        if getattr(self, "use_complexity", True):
+            v[_ACC] = max(v[_ACC], float(sig.complexity))
+        return v
+
+    # ------------------------------------------------------------------
+    def _knn(self, emb: np.ndarray, t: np.ndarray, k: int) -> np.ndarray:
+        """Indices of the k most cosine-similar catalog rows."""
+        if self.use_kernel and emb.shape[0] >= self._kernel_min_n:
+            from repro.kernels import ops as K
+            if self._kernel_fn is None:
+                self._kernel_fn = K.router_topk
+            _, idx = self._kernel_fn(emb, t[None], k)
+            return np.asarray(idx[0])
+        sims = cosine_sim(emb, t)
+        return np.argsort(-sims)[:k]
+
+    # ------------------------------------------------------------------
+    def route(self, prefs_or_profile, sig: TaskSignature) -> RoutingDecision:
+        prefs = resolve(prefs_or_profile)
+        sig = sig.validate()
+        emb = self.mres.embeddings()
+        n = emb.shape[0]
+        if n == 0:
+            raise RuntimeError("empty MRES catalog")
+        t = self.task_vector(prefs, sig)
+        sims = cosine_sim(emb, t)
+        stage: Dict[str, int] = {"catalog": n}
+
+        k = min(self.knn_k, n)
+        knn_idx = self._knn(emb, t, k)
+        stage["knn"] = len(knn_idx)
+
+        confident = sig.confidence >= self.confidence_threshold
+        tt_mask, dm_mask = self.mres.masks(
+            sig.task_type if confident else None,
+            sig.domain if confident else None)
+
+        kind = ""
+        cand = [i for i in knn_idx if tt_mask[i] and dm_mask[i]]
+        stage["filtered"] = len(cand)
+        if not cand:
+            # fallback 1: widen the kNN to the whole catalog
+            kind = "widened-knn"
+            cand = [i for i in range(n) if tt_mask[i] and dm_mask[i]]
+        if not cand:
+            # fallback 2: drop the domain filter
+            kind = "task-type-only"
+            cand = [i for i in range(n) if tt_mask[i]]
+        if not cand:
+            # fallback 3: generalist models (paper §3.4)
+            kind = "generalist"
+            gmask = self.mres.generalist_mask()
+            cand = [i for i in range(n) if gmask[i]]
+        if not cand:
+            kind = "any"
+            cand = list(range(n))
+        stage["candidates"] = len(cand)
+
+        names = [self.mres.entries[i].name for i in cand]
+        w = prefs.vector()
+        scores = emb[cand] @ w
+        if self.feedback is not None:
+            bias = self.feedback.bias(sig, names)
+            scores = scores + self.feedback_weight * bias
+        order = np.argsort(-scores)
+        best = int(order[0])
+        ranked = [(names[i], float(scores[i])) for i in order[: max(5, k)]]
+        return RoutingDecision(
+            model=names[best],
+            score=float(scores[best]),
+            task_vector=t,
+            similarity=float(sims[cand[best]]),
+            candidates=ranked,
+            used_fallback=bool(kind),
+            fallback_kind=kind,
+            stage_sizes=stage,
+        )

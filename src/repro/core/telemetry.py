@@ -1,0 +1,110 @@
+"""Routing telemetry (production observability for the MLaaS use-case).
+
+A thread-safe ledger the orchestrator/engine writes one event per
+routed request into: model chosen, fallback kind, analyzer/route
+latencies, simulated serving cost.  Exposes per-model aggregates,
+fallback rates, stage-funnel statistics and a rolling-window QPS view —
+what an operator needs to see that the router behaves in production.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional
+
+
+@dataclass
+class RouteEvent:
+    ts: float
+    model: str
+    task_type: str
+    domain: str
+    complexity: float
+    fallback: str = ""
+    analyzer_s: float = 0.0
+    route_s: float = 0.0
+    sim_cost: float = 0.0
+    thumbs: Optional[bool] = None
+
+
+class Telemetry:
+    def __init__(self, window_s: float = 60.0):
+        self.window_s = window_s
+        self._events: List[RouteEvent] = []
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def record(self, event: RouteEvent) -> None:
+        with self._lock:
+            self._events.append(event)
+
+    def record_decision(self, rq, *, sim_cost: float = 0.0) -> None:
+        """Convenience: log an orchestrator RoutedQuery."""
+        self.record(RouteEvent(
+            ts=time.time(), model=rq.decision.model,
+            task_type=rq.sig.task_type, domain=rq.sig.domain,
+            complexity=rq.sig.complexity,
+            fallback=rq.decision.fallback_kind,
+            analyzer_s=rq.analyzer_s, route_s=rq.route_s,
+            sim_cost=sim_cost))
+
+    def attach_thumbs(self, model: str, thumbs_up: bool) -> None:
+        with self._lock:
+            for e in reversed(self._events):
+                if e.model == model and e.thumbs is None:
+                    e.thumbs = thumbs_up
+                    return
+
+    # ------------------------------------------------------------------
+    def per_model(self) -> Dict[str, Dict[str, float]]:
+        with self._lock:
+            agg: Dict[str, Dict[str, float]] = {}
+            for e in self._events:
+                a = agg.setdefault(e.model, dict(
+                    requests=0, fallbacks=0, cost=0.0, route_s=0.0,
+                    thumbs_up=0, thumbs_down=0))
+                a["requests"] += 1
+                a["fallbacks"] += bool(e.fallback)
+                a["cost"] += e.sim_cost
+                a["route_s"] += e.route_s
+                if e.thumbs is True:
+                    a["thumbs_up"] += 1
+                elif e.thumbs is False:
+                    a["thumbs_down"] += 1
+        for a in agg.values():
+            a["fallback_rate"] = a["fallbacks"] / max(a["requests"], 1)
+            n_fb = a["thumbs_up"] + a["thumbs_down"]
+            a["satisfaction"] = (a["thumbs_up"] / n_fb) if n_fb else None
+        return agg
+
+    def fallback_rate(self) -> float:
+        with self._lock:
+            if not self._events:
+                return 0.0
+            return sum(bool(e.fallback) for e in self._events) \
+                / len(self._events)
+
+    def qps(self, now: Optional[float] = None) -> float:
+        now = now if now is not None else time.time()
+        with self._lock:
+            recent = [e for e in self._events
+                      if e.ts > now - self.window_s]
+        return len(recent) / self.window_s
+
+    def latency_percentiles(self, q=(0.5, 0.9, 0.99)) -> Dict[str, float]:
+        import numpy as np
+        with self._lock:
+            lat = [e.analyzer_s + e.route_s for e in self._events]
+        if not lat:
+            return {f"p{int(x*100)}": 0.0 for x in q}
+        return {f"p{int(x*100)}": float(np.quantile(lat, x)) for x in q}
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "events": len(self._events),
+            "fallback_rate": self.fallback_rate(),
+            "latency": self.latency_percentiles(),
+            "per_model": self.per_model(),
+        }

@@ -1,0 +1,1 @@
+"""Data substrate: hash tokenizer + synthetic query workloads."""

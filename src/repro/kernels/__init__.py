@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots (DESIGN.md §3).
+
+  router_topk     — fused weighted-cosine scoring + filter mask + top-k
+                    over the MRES catalog (the paper's routing hot loop)
+  flash_attention — blocked causal/SWA/softcap GQA attention
+  ssd_scan        — Mamba2 chunked state-space-duality scan
+  moe_gating      — fused softmax top-k gate + load-balance partials
+
+Each kernel lives in <name>.py (pl.pallas_call + BlockSpec), with
+``ops.py`` as the jit'd public wrapper and ``ref.py`` as the pure-jnp
+oracle.  On CPU the kernels run under interpret=True; on TPU compiled.
+"""

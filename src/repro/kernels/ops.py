@@ -1,0 +1,149 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each op pads/normalizes inputs to kernel-friendly (128-aligned) shapes,
+invokes the kernel, and slices back.  ``interpret`` defaults to True off
+TPU (the kernels execute under the Pallas interpreter on CPU — that is
+how this repo validates them); on a real TPU backend it defaults to
+compiled mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.moe_gating import moe_gating_pallas
+from repro.kernels.router_topk import router_topk_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+LANE = 128
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult: int, axis: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ----------------------------------------------------------------------
+# router_topk
+# ----------------------------------------------------------------------
+
+def router_topk(emb, queries, k: int,
+                mask: Optional[jnp.ndarray] = None,
+                weights: Optional[jnp.ndarray] = None, *,
+                blk_q: int = 8, blk_n: int = 512,
+                interpret: Optional[bool] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Weighted-cosine top-k over the catalog (see kernels/ref.py).
+
+    emb (N, D); queries (Q, D); mask (N,) bool; weights (D,).
+    Returns (vals (Q, k) f32, idx (Q, k) i32).  Masked / padded rows
+    surface as vals == -inf.
+    """
+    emb = jnp.asarray(emb, jnp.float32)
+    queries = jnp.asarray(queries, jnp.float32)
+    N, D = emb.shape
+    Q = queries.shape[0]
+    interp = default_interpret() if interpret is None else interpret
+    blk_n = min(blk_n, max(1 << max(N - 1, 1).bit_length(), 128))
+
+    # fold weights + row norms into the catalog; unit-normalize queries
+    en = jnp.linalg.norm(emb, axis=1, keepdims=True) + 1e-9
+    ew = emb * (jnp.asarray(weights, jnp.float32)[None, :]
+                if weights is not None else 1.0) / en
+    qn = queries / (jnp.linalg.norm(queries, axis=1, keepdims=True) + 1e-9)
+
+    maskf = (jnp.asarray(mask, jnp.float32) if mask is not None
+             else jnp.ones((N,), jnp.float32))
+    ewp = _pad_to(_pad_to(ew, LANE, 1), blk_n, 0)
+    qnp = _pad_to(_pad_to(qn, LANE, 1), blk_q, 0)
+    maskp = _pad_to(maskf, blk_n, 0)                         # pad rows -> 0 -> -inf
+
+    vals, idx = router_topk_pallas(qnp, ewp, maskp, k, blk_q=blk_q,
+                                   blk_n=blk_n, interpret=interp)
+    return vals[:Q], idx[:Q]
+
+
+# ----------------------------------------------------------------------
+# flash attention
+# ----------------------------------------------------------------------
+
+def flash_attention(q, k, v, kv_valid=None, *, causal: bool = True,
+                    window: int = 0,
+                    softcap: float = 0.0, blk_q: int = 128,
+                    blk_k: int = 128, interpret: Optional[bool] = None):
+    """q (B, Lq, Hq, hd); k, v (B, Lk, Hkv, hd) — layer layout (L, H, hd).
+
+    kv_valid (B,) int32: per-sequence live key count (decode mode).
+    Pads hd to a 128 lane multiple (zero columns are exact for q.k^T and
+    are sliced off the value output), transposes to kernel layout, runs
+    the blocked flash kernel.  Returns (B, Lq, Hq, hd) in q.dtype.
+    """
+    interp = default_interpret() if interpret is None else interpret
+    hd = q.shape[-1]
+    qt = _pad_to(jnp.swapaxes(q, 1, 2), LANE, 3)
+    kt = _pad_to(jnp.swapaxes(k, 1, 2), LANE, 3)
+    vt = _pad_to(jnp.swapaxes(v, 1, 2), LANE, 3)
+    # scale must use the true head_dim, not the padded one
+    import math as _m
+    scale_fix = _m.sqrt(qt.shape[-1] / hd)
+    qt = qt * scale_fix  # kernel divides by sqrt(hd_padded); re-scale
+    out = flash_attention_pallas(qt, kt, vt, kv_valid, causal=causal,
+                                 window=window,
+                                 softcap=softcap, blk_q=blk_q, blk_k=blk_k,
+                                 interpret=interp)
+    return jnp.swapaxes(out[..., :hd], 1, 2)
+
+
+def flash_decode(q, k_cache, v_cache, pos, *, softcap: float = 0.0,
+                 blk_k: int = 128, interpret: Optional[bool] = None):
+    """Flash-decode: one query token against a partially-filled cache.
+
+    q (B, 1, Hq, hd); k_cache/v_cache (B, C, Hkv, hd); pos (B,) int32 —
+    the current token index (keys at slots <= pos are live, matching
+    models/layers.attention_decode).  Returns (B, 1, Hq, hd).
+    """
+    return flash_attention(q, k_cache, v_cache, pos + 1, causal=False,
+                           softcap=softcap, blk_k=blk_k,
+                           interpret=interpret)
+
+
+# ----------------------------------------------------------------------
+# SSD scan
+# ----------------------------------------------------------------------
+
+def ssd_scan(x, dt, A, B, C, h0=None, *, chunk: int = 128,
+             interpret: Optional[bool] = None):
+    """Chunked SSD scan (see kernels/ref.py::ssd_scan for semantics)."""
+    interp = default_interpret() if interpret is None else interpret
+    return ssd_scan_pallas(x, dt, A, B, C, h0, chunk=chunk,
+                           interpret=interp)
+
+
+# ----------------------------------------------------------------------
+# MoE gating
+# ----------------------------------------------------------------------
+
+def moe_gating(logits, k: int, *, blk_t: int = 256,
+               interpret: Optional[bool] = None):
+    """Fused softmax top-k gate. logits (T, E) or (..., E) (flattened)."""
+    interp = default_interpret() if interpret is None else interpret
+    shape = logits.shape
+    flat = logits.reshape(-1, shape[-1])
+    vals, idx, aux = moe_gating_pallas(flat, k, blk_t=blk_t,
+                                       interpret=interp)
+    return (vals.reshape(shape[:-1] + (k,)),
+            idx.reshape(shape[:-1] + (k,)), aux)

@@ -1,0 +1,145 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are validated
+against (tests sweep shapes/dtypes and assert_allclose kernel vs ref).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------
+# router_topk: fused weighted-cosine scoring + filter mask + top-k
+# ----------------------------------------------------------------------
+
+def router_topk(emb: jnp.ndarray, queries: jnp.ndarray, k: int,
+                mask: Optional[jnp.ndarray] = None,
+                weights: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k catalog rows by (optionally weighted) cosine similarity.
+
+    emb:     (N, D) catalog metric embeddings.
+    queries: (Q, D) task vectors.
+    mask:    (N,) bool — rows excluded by the hierarchical filter get
+             score -inf (they can still appear in the idx tail when
+             fewer than k rows survive; callers check vals > -inf).
+    weights: (D,) per-axis importance applied INSIDE the dot product
+             (weighted cosine: sim = sum_d w_d e_d q_d / (|e||q|)).
+    Returns (vals (Q, k) f32 descending, idx (Q, k) int32).
+    """
+    emb = emb.astype(jnp.float32)
+    q = queries.astype(jnp.float32)
+    en = jnp.linalg.norm(emb, axis=1, keepdims=True) + 1e-9
+    qn = jnp.linalg.norm(q, axis=1, keepdims=True) + 1e-9
+    ew = emb * (weights.astype(jnp.float32)[None, :] if weights is not None else 1.0)
+    scores = (q / qn) @ (ew / en).T                      # (Q, N)
+    if mask is not None:
+        scores = jnp.where(mask[None, :], scores, -jnp.inf)
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx.astype(jnp.int32)
+
+
+# ----------------------------------------------------------------------
+# flash_attention: blocked causal/SWA/softcap GQA attention
+# ----------------------------------------------------------------------
+
+def mha_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0,
+                  softcap: float = 0.0) -> jnp.ndarray:
+    """Reference attention.
+
+    q: (B, Lq, Hq, hd); k, v: (B, Lk, Hkv, hd) with Hq % Hkv == 0.
+    window: sliding-window size (0 = unlimited); only with causal=True.
+    softcap: attention-logit soft cap (gemma2), 0 = off.
+    Returns (B, Lq, Hq, hd) in q.dtype.
+    """
+    B, Lq, Hq, hd = q.shape
+    Lk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Lq, Hkv, G, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("blkgd,bmkd->bkglm", qf, kf) / math.sqrt(hd)
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    if causal:
+        iq = jnp.arange(Lq)[:, None] + (Lk - Lq)   # align ends (prefill=square)
+        ik = jnp.arange(Lk)[None, :]
+        mask = ik <= iq
+        if window:
+            mask &= ik > iq - window
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkglm,bmkd->blkgd", probs, vf)
+    return out.reshape(B, Lq, Hq, hd).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# ssd_scan: Mamba2 chunked state-space-duality scan
+# ----------------------------------------------------------------------
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             B: jnp.ndarray, C: jnp.ndarray,
+             h0: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential-scan reference of the SSD recurrence.
+
+      h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t^T
+      y_t = C_t . h_t
+
+    x:  (Bb, L, H, P)   per-head inputs
+    dt: (Bb, L, H)      positive step sizes (already softplus'd)
+    A:  (H,)            negative per-head decay rates
+    B:  (Bb, L, N)      input projections  (groups=1, shared over heads)
+    C:  (Bb, L, N)      output projections
+    h0: (Bb, H, P, N)   initial state (zeros if None)
+    Returns (y (Bb, L, H, P) f32, h_final (Bb, H, P, N) f32).
+    """
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    B_ = B.astype(jnp.float32)
+    C_ = C.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    Bb, L, H, P = x.shape
+    N = B_.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        xt, bt, ct, dtt = inp                 # (Bb,H,P) (Bb,N) (Bb,N) (Bb,H)
+        decay = jnp.exp(dtt * A[None, :])     # (Bb, H)
+        h = h * decay[:, :, None, None] + jnp.einsum(
+            "bn,bhp,bh->bhpn", bt, xt, dtt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(B_, 1, 0),
+          jnp.moveaxis(C_, 1, 0), jnp.moveaxis(dt, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_final
+
+
+# ----------------------------------------------------------------------
+# moe_gating: softmax + top-k gate (renormalized) + load-balance aux
+# ----------------------------------------------------------------------
+
+def moe_gating(logits: jnp.ndarray, k: int
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Top-k softmax gating.
+
+    logits: (T, E). Returns (gate_vals (T, k) f32 renormalized to sum 1,
+    gate_idx (T, k) int32, aux_loss scalar f32).
+    """
+    E = logits.shape[-1]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    vals, idx = jax.lax.top_k(probs, k)
+    vals = vals / (jnp.sum(vals, axis=-1, keepdims=True) + 1e-9)
+    me = jnp.mean(probs, axis=0)
+    assign = jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=1)
+    ce = jnp.mean(assign, axis=0)
+    aux = jnp.sum(me * ce) * E
+    return vals, idx.astype(jnp.int32), aux

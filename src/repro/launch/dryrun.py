@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) pair.
+
+For each pair this proves the sharding config is coherent on the
+production mesh (256-chip single pod and 512-chip 2-pod) and extracts
+``memory_analysis()`` / ``cost_analysis()`` plus the collective-bytes
+scan of the HLO that feeds EXPERIMENTS.md §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                   # all pairs
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod ...
+Results are cached as JSON under results/dryrun/ (skip with --force).
+"""
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch import shapes as S
+from repro.models import model as M
+from repro.sharding import rules as R
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.steps import make_train_step, make_prefill_step, make_decode_step
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# ----------------------------------------------------------------------
+# collective-bytes extraction from HLO text
+# ----------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"(\S+)\s*=\s*((?:bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64|c64)"
+    r"\[[0-9,]*\][^ ]*|\([^)]*\))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64|c64)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "c64": 8}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Sum output bytes of collective ops in (compiled) HLO, by kind."""
+    by_kind = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        kind = m.group(3)
+        nbytes = _shape_bytes(m.group(2))
+        by_kind[kind] = by_kind.get(kind, 0) + nbytes
+    return by_kind
+
+
+# ----------------------------------------------------------------------
+# lowering one pair
+# ----------------------------------------------------------------------
+
+def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+               overrides: dict | None = None):
+    """Lower + compile one (arch, shape) on the production mesh.
+
+    overrides: ModelConfig field overrides (perf iterations compare
+    e.g. attn_impl="naive" vs "blocked" — EXPERIMENTS.md §Perf).
+    Returns a result dict (also JSON-serializable).
+    """
+    import dataclasses
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides).validate()
+    ok, why = S.applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "n/a", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = S.input_specs(cfg, shape_name)
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        params_shape = jax.eval_shape(
+            lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+        pspecs = R.param_specs(cfg, mesh, params_shape)
+
+        if spec["kind"] == "train":
+            opt_shape = jax.eval_shape(lambda: init_opt_state(params_shape))
+            ospecs = {"mu": pspecs, "nu": pspecs,
+                      "step": jax.sharding.PartitionSpec()}
+            bspecs = R.batch_spec(cfg, mesh, spec["batch"])
+            step = make_train_step(cfg)
+            jitted = jax.jit(step, in_shardings=(pspecs, ospecs, bspecs))
+            lowered = jitted.lower(params_shape, opt_shape, spec["batch"])
+        elif spec["kind"] == "prefill":
+            bspecs = R.batch_spec(cfg, mesh, spec["batch"])
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(pspecs, bspecs))
+            lowered = jitted.lower(params_shape, spec["batch"])
+        else:
+            cfg_eff = spec.get("cfg", cfg)   # long_500k SWA degradation
+            cspecs = R.cache_specs(cfg_eff, mesh, spec["cache"])
+            bspecs = R.decode_batch_spec(cfg_eff, mesh, spec["batch"])
+            step = make_decode_step(cfg_eff, long_mode=spec["long_mode"])
+            jitted = jax.jit(step, in_shardings=(pspecs, cspecs, bspecs))
+            lowered = jitted.lower(params_shape, spec["cache"], spec["batch"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+
+    def _get(d, k):
+        try:
+            return float(d[k])
+        except Exception:
+            return 0.0
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "status": "ok",
+        "devices": int(mesh.devices.size),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": _get(cost, "flops"),
+        "bytes_accessed": _get(cost, "bytes accessed"),
+        "collective_bytes": coll,
+        "memory": {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_size_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out-dir", default=None,
+                    help="write results here instead of results/dryrun")
+    ap.add_argument("--override", action="append", default=[],
+                    help="ModelConfig field override, key=value")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        overrides[k] = v
+
+    archs = args.arch or ARCH_NAMES
+    shape_names = args.shape or list(S.SHAPES)
+    global RESULTS
+    if args.out_dir:
+        RESULTS = pathlib.Path(args.out_dir)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    failures = []
+
+    for arch in archs:
+        for shape_name in shape_names:
+            tag = f"{arch}__{shape_name}__{'pod2' if args.multi_pod else 'pod1'}"
+            out = RESULTS / f"{tag}.json"
+            if out.exists() and not args.force:
+                prev = json.loads(out.read_text())
+                print(f"[skip] {tag}: cached ({prev['status']})")
+                if prev["status"] == "error":
+                    failures.append(tag)
+                continue
+            print(f"[run ] {tag} ...", flush=True)
+            try:
+                res = lower_pair(arch, shape_name, multi_pod=args.multi_pod,
+                                 overrides=overrides or None)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                res = {"arch": arch, "shape": shape_name, "status": "error",
+                       "multi_pod": args.multi_pod,
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+                failures.append(tag)
+            out.write_text(json.dumps(res, indent=2))
+            status = res["status"]
+            extra = ""
+            if status == "ok":
+                extra = (f" flops={res['flops']:.3e}"
+                         f" coll={sum(res['collective_bytes'].values()):.3e}B"
+                         f" compile={res['compile_s']}s")
+            elif status == "error":
+                extra = " " + res["error"][:200]
+            print(f"[done] {tag}: {status}{extra}", flush=True)
+
+    if failures:
+        print(f"\nFAILED pairs: {failures}")
+        sys.exit(1)
+    print("\nAll dry-run pairs OK.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Production mesh factory.
+
+Defined as FUNCTIONS (not module constants) so importing this module
+never touches jax device state.  TPU v5e target:
+  single pod:  (16, 16)    axes ("data", "model")   = 256 chips
+  multi-pod:   (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke/serving runs."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,82 @@
+"""Serving launcher: the deployable OptiRoute service loop.
+
+Builds the 10-architecture MRES catalog (reduced runners on CPU), loads
+or trains the Task Analyzer, then serves a synthetic request stream
+through the batched ServingEngine, printing per-request routing
+decisions and the final accounting summary.
+
+  PYTHONPATH=src python -m repro.launch.serve --requests 24 --mode interactive
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core.analyzer import AnalyzerConfig, TaskAnalyzer
+from repro.core.orchestrator import OptiRoute
+from repro.core.preferences import PROFILES
+from repro.data.workload import make_workload
+from repro.serving.catalog import build_catalog
+from repro.serving.engine import Request, ServingEngine
+
+ANALYZER_CKPT = pathlib.Path(__file__).resolve().parents[3] / "results" / "analyzer.npz"
+
+
+def load_analyzer(train_steps: int = 250) -> TaskAnalyzer:
+    an = TaskAnalyzer(AnalyzerConfig())
+    if ANALYZER_CKPT.exists():
+        from repro.checkpoint import load
+        an.params, _ = load(str(ANALYZER_CKPT))
+        return an
+    print("[serve] training task analyzer (first run only) ...")
+    metrics = an.train(steps=train_steps)
+    from repro.checkpoint import save
+    save(str(ANALYZER_CKPT), an.params, {"metrics": metrics})
+    return an
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--mode", choices=("interactive", "batch"),
+                    default="interactive")
+    ap.add_argument("--profile", default=None,
+                    help="force one preference profile; default cycles")
+    ap.add_argument("--max-new", type=int, default=4)
+    ap.add_argument("--archs", nargs="*", default=None,
+                    help="subset of catalog archs to load runners for")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--merge-threshold", type=float, default=None)
+    args = ap.parse_args(argv)
+
+    print("[serve] building catalog (reduced runners) ...")
+    mres = build_catalog(smoke_runners=True, archs=args.archs)
+    analyzer = load_analyzer()
+    router = OptiRoute(mres, analyzer, merge_threshold=args.merge_threshold)
+    engine = ServingEngine(router)
+
+    profiles = ([args.profile] if args.profile
+                else list(PROFILES))
+    wl = make_workload(args.requests, seed=args.seed)
+    reqs = [Request(text=r.text, prefs=profiles[i % len(profiles)],
+                    id=r.id, max_new=args.max_new)
+            for i, r in enumerate(wl)]
+    print(f"[serve] submitting {len(reqs)} requests ({args.mode}) ...")
+    resps = engine.submit(reqs, mode=args.mode)
+    for r in resps:
+        print(f"  #{r.request.id:>3} prefs={r.request.prefs:<18} "
+              f"sig=({r.sig.task_type}/{r.sig.domain}"
+              f"/{r.sig.complexity:.2f}) -> {r.model}"
+              f"{'  [' + r.fallback + ']' if r.fallback else ''}")
+        # thumbs: synthetic user approves iff the routed model is tagged
+        # for the task type
+        entry = mres.entry(r.model)
+        engine.feedback(r, thumbs_up=r.sig.task_type in entry.task_types)
+    print("[serve] summary:", json.dumps(engine.summary(), indent=2))
+
+
+if __name__ == "__main__":
+    main()

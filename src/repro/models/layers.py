@@ -1,0 +1,543 @@
+"""Pure-JAX building blocks shared by every architecture family.
+
+Everything here is functional: params are plain dicts of jnp arrays,
+layers are functions ``f(params, x, ...) -> y``.  Layer stacks are
+``lax.scan`` over stacked parameters (MaxText-style) so 48-layer models
+lower to a compact HLO.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ----------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# norms / activations
+# ----------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, L, H, hd); positions: (B, L) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, L, hd/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# attention (GQA, optional bias / sliding window / softcap)
+# ----------------------------------------------------------------------
+
+def init_attention(key, cfg, cross: bool = False):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, qd), dt),
+        "wk": dense_init(ks[1], (d, kvd), dt),
+        "wv": dense_init(ks[2], (d, kvd), dt),
+        "wo": dense_init(ks[3], (qd, d), dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((qd,), dt)
+        p["bk"] = jnp.zeros((kvd,), dt)
+        p["bv"] = jnp.zeros((kvd,), dt)
+    return p
+
+
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(x.shape[:-1] + (n_heads, head_dim))
+
+
+def gqa_scores(q, k):
+    """q: (B, Lq, Hq, hd), k: (B, Lk, Hkv, hd) -> (B, Hkv, G, Lq, Lk)."""
+    B, Lq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Lq, Hkv, G, hd)
+    return jnp.einsum("blkgd,bmkd->bkglm", qg, k) / math.sqrt(hd)
+
+
+def gqa_values(probs, v):
+    """probs: (B, Hkv, G, Lq, Lk), v: (B, Lk, Hkv, hd) -> (B, Lq, Hq, hd)."""
+    B, Hkv, G, Lq, Lk = probs.shape
+    out = jnp.einsum("bkglm,bmkd->blkgd", probs, v)
+    return out.reshape(B, Lq, Hkv * G, v.shape[-1])
+
+
+def attention_full(p, cfg, x, positions, *, window: int = 0, causal: bool = True,
+                   kv_x=None, rope: bool = True, attn_softcap: float = 0.0):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    kv_x: source sequence for cross-attention (keys/values from there).
+    window: sliding-window size (0 = unlimited).
+    Returns (out, (k, v)) so prefill can keep the cache.
+    """
+    src = x if kv_x is None else kv_x
+    q = _split_heads(x @ p["wq"] + p.get("bq", 0), cfg.n_heads, cfg.head_dim)
+    k = _split_heads(src @ p["wk"] + p.get("bk", 0), cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(src @ p["wv"] + p.get("bv", 0), cfg.n_kv_heads, cfg.head_dim)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        kpos = positions if kv_x is None else jnp.broadcast_to(
+            jnp.arange(src.shape[1], dtype=jnp.int32)[None], src.shape[:2])
+        k = apply_rope(k, kpos, cfg.rope_theta)
+
+    scores = gqa_scores(q, k).astype(jnp.float32)  # (B, Hkv, G, Lq, Lk)
+    scores = softcap(scores, attn_softcap)
+    Lq, Lk = scores.shape[-2], scores.shape[-1]
+    if causal and kv_x is None:
+        iq = jnp.arange(Lq)[:, None]
+        ik = jnp.arange(Lk)[None, :]
+        mask = ik <= iq
+        if window:
+            mask &= ik > iq - window
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = gqa_values(probs, v)
+    out = out.reshape(out.shape[:2] + (cfg.q_dim,)) @ p["wo"]
+    return out, (k, v)
+
+
+def quantize_kv(x, axis: int = -1):
+    """Symmetric int8 per-(token, head) quantization of K/V rows.
+    Returns (q int8, scale f32 with a size-1 axis in place of ``axis``)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis,
+                    keepdims=True) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def attention_decode(p, cfg, x, k_cache, v_cache, positions, *,
+                     window: int = 0, rope: bool = True,
+                     attn_softcap: float = 0.0, update_cache: bool = True,
+                     local_window: int = 0, full_valid: bool = False,
+                     k_scale=None, v_scale=None):
+    """Single-token decode against a KV cache.
+
+    x: (B, 1, d); k_cache/v_cache: (B, C, Hkv, hd); positions: (B,) int32 —
+    the index of the *current* token.  For sliding-window layers the
+    cache is a ring buffer of size C == window and slots are written at
+    ``position % window``; otherwise slots are written at ``position``.
+    Keys are stored post-RoPE so decode never re-rotates the cache.
+
+    int8 cache (EXPERIMENTS §Perf): if k_scale/v_scale are given the
+    cache is int8 with per-(slot, head) scales; new entries are
+    quantized on write and the scores/values dequantize on read (fused
+    into the attention einsums on TPU).
+    Returns (out, new_k_cache, new_v_cache, new_k_scale, new_v_scale).
+    """
+    B, _, _ = x.shape
+    C = k_cache.shape[1]
+    int8_cache = k_scale is not None
+    q = _split_heads(x @ p["wq"] + p.get("bq", 0), cfg.n_heads, cfg.head_dim)
+    k = _split_heads(x @ p["wk"] + p.get("bk", 0), cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(x @ p["wv"] + p.get("bv", 0), cfg.n_kv_heads, cfg.head_dim)
+    if rope:
+        pos2 = positions[:, None]
+        q = apply_rope(q, pos2, cfg.rope_theta)
+        k = apply_rope(k, pos2, cfg.rope_theta)
+
+    slot = positions % C if window else positions
+    if update_cache:
+        # scatter ONE slot per sequence (in-place with donated buffers)
+        # instead of a one-hot read-modify-write of the whole cache
+        rows = jnp.arange(B)
+        if int8_cache:
+            kq, ks = quantize_kv(k[:, 0])
+            vq, vs = quantize_kv(v[:, 0])
+            k_cache = k_cache.at[rows, slot].set(kq)
+            v_cache = v_cache.at[rows, slot].set(vq)
+            k_scale = k_scale.at[rows, slot].set(ks)
+            v_scale = v_scale.at[rows, slot].set(vs)
+        else:
+            k_cache = k_cache.at[rows, slot].set(k[:, 0].astype(k_cache.dtype))
+            v_cache = v_cache.at[rows, slot].set(v[:, 0].astype(v_cache.dtype))
+
+    if int8_cache:
+        kf = k_cache.astype(jnp.bfloat16) * k_scale.astype(jnp.bfloat16)
+        vf = v_cache.astype(jnp.bfloat16) * v_scale.astype(jnp.bfloat16)
+    else:
+        kf, vf = k_cache, v_cache
+    scores = gqa_scores(q, kf).astype(jnp.float32)  # (B, Hkv, G, 1, C)
+    scores = softcap(scores, attn_softcap)
+    idx = jnp.arange(C)[None, :]
+    pos = positions[:, None]
+    if full_valid:
+        valid = jnp.ones((B, C), bool)
+    elif window:  # ring buffer: every slot valid once position >= C
+        valid = (idx <= pos) | (pos >= C)
+    else:
+        valid = idx <= pos
+        if local_window:  # windowed view inside a full cache (gemma2 local)
+            valid &= idx > pos - local_window
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = gqa_values(probs, vf.astype(x.dtype) if int8_cache else vf)
+    out = out.reshape(B, 1, cfg.q_dim) @ p["wo"]
+    if int8_cache:
+        return out, k_cache, v_cache, k_scale, v_scale
+    return out, k_cache, v_cache
+
+
+def attention_blocked(p, cfg, x, positions, *, kind=None,
+                      long_mode: bool = False, causal: bool = True):
+    """Blocked full-sequence attention (flash-style; EXPERIMENTS §Perf).
+
+    Scans over query blocks so the live score tensor is
+    O(blk_q * Lk) — or O(blk_q * (W + blk_q)) on uniform-SWA archs,
+    where the key BAND for each query block is sliced out — instead of
+    the naive O(Lq * Lk) materialization.  Row softmax is exact (the
+    full valid key range of every query row is present in its block).
+
+    kind: per-layer 0/1 (local/global) for gemma2-style alternation —
+    the mask switches, the (full-range) block shape stays static.
+    Returns (out, (k, v)) like attention_full.
+    """
+    B, L, d = x.shape
+    W = cfg.sliding_window
+    banded = causal and bool(W) and (not cfg.local_global_pattern
+                                     or long_mode)
+    blk = min(cfg.attn_block_q, L)
+    nq = -(-L // blk)
+    Lp = nq * blk
+
+    q = _split_heads(x @ p["wq"] + p.get("bq", 0), cfg.n_heads, cfg.head_dim)
+    k = _split_heads(x @ p["wk"] + p.get("bk", 0), cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(x @ p["wv"] + p.get("bv", 0), cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    kv = (k, v)                                  # prefill cache (pre-pad)
+
+    qp = jnp.pad(q, ((0, 0), (0, Lp - L), (0, 0), (0, 0)))
+    if banded:       # prepend a W-sized zero margin; slice [start, start+W+blk)
+        kp = jnp.pad(k, ((0, 0), (W, Lp - L), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (W, Lp - L), (0, 0), (0, 0)))
+        band = W + blk
+    else:
+        kp = jnp.pad(k, ((0, 0), (0, Lp - L), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, Lp - L), (0, 0), (0, 0)))
+        band = Lp
+
+    def block(ib):
+        q0 = ib * blk
+        qb = jax.lax.dynamic_slice_in_dim(qp, q0, blk, axis=1)
+        if banded:
+            kb = jax.lax.dynamic_slice_in_dim(kp, q0, band, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(vp, q0, band, axis=1)
+            k0 = q0 - W                          # global index of band col 0
+        else:
+            kb, vb, k0 = kp, vp, 0
+        s = gqa_scores(qb, kb)                   # already 1/sqrt(hd)-scaled
+        s = softcap(s.astype(jnp.float32), cfg.attn_softcap)
+        iq = q0 + jnp.arange(blk)[:, None]
+        ik = k0 + jnp.arange(band)[None, :]
+        valid = (ik >= 0) & (ik < L) & (iq < L)
+        if causal:
+            valid &= ik <= iq
+            if banded:
+                valid &= ik > iq - W
+            elif W and cfg.local_global_pattern:
+                local = valid & (ik > iq - W)
+                valid = jnp.where(kind == 0, local, valid)
+        s = jnp.where(valid[None, None, None], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        return gqa_values(pr, vb)                # (B, blk, Hq, hd)
+
+    outs = jax.lax.map(block, jnp.arange(nq))    # (nq, B, blk, Hq, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Lp, cfg.n_heads, cfg.head_dim)
+    out = out[:, :L].reshape(B, L, cfg.q_dim) @ p["wo"]
+    return out, kv
+
+
+# ----------------------------------------------------------------------
+# MLP / MoE
+# ----------------------------------------------------------------------
+
+def init_mlp(key, cfg, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(ks[0], (d, f), dt),
+        "wg": dense_init(ks[1], (d, f), dt),
+        "wo": dense_init(ks[2], (f, d), dt),
+    }
+
+
+def mlp(p, x):
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+
+
+def init_moe(key, cfg):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), dt, scale=0.02),
+        "wi": dense_init(ks[1], (E, d, f), dt),
+        "wg": dense_init(ks[2], (E, d, f), dt),
+        "wo": dense_init(ks[3], (E, f, d), dt),
+    }
+    if cfg.shared_expert:
+        p["shared"] = init_mlp(ks[4], cfg)
+    return p
+
+
+def moe_gate(logits, top_k: int):
+    """Top-k gating. logits: (..., E) -> (weights (..., E), aux_loss scalar).
+
+    Weights are zero outside the top-k and renormalized inside it.
+    aux_loss is the standard load-balance loss (mean_prob * mean_assignment * E).
+    """
+    E = logits.shape[-1]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_vals, _ = jax.lax.top_k(probs, top_k)
+    thresh = top_vals[..., -1:]
+    mask = probs >= thresh
+    gated = probs * mask
+    gated = gated / (jnp.sum(gated, axis=-1, keepdims=True) + 1e-9)
+    # load-balance auxiliary loss
+    me = jnp.mean(probs.reshape(-1, E), axis=0)
+    ce = jnp.mean(mask.reshape(-1, E).astype(jnp.float32), axis=0)
+    aux = jnp.sum(me * ce) * E
+    return gated.astype(logits.dtype), aux
+
+
+def moe_block(p, cfg, x):
+    """Capacity-based one-hot-dispatch MoE (T5X/Switch style einsums).
+
+    Tokens are grouped along the sequence (group size ``cfg.moe_group``);
+    each group dispatches its tokens to experts with per-group capacity
+    C = ceil(g * top_k / E * capacity_factor).  Overflowing tokens are
+    dropped (residual passes through).  All dataflow is einsum-based so
+    GSPMD shards it (experts over the 'model' axis → all-to-all).
+
+    x: (B, L, d) -> (y, aux_loss).
+    """
+    B, Lx, d = x.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+    g = min(cfg.moe_group, Lx)
+    ng = Lx // g
+    rem = Lx - ng * g
+    if rem:  # trailing partial group handled by a recursive tail call
+        y_head, aux_h = moe_block(p, cfg, x[:, :ng * g])
+        y_tail, aux_t = moe_block(p, cfg, x[:, ng * g:])
+        return jnp.concatenate([y_head, y_tail], axis=1), aux_h + aux_t
+    C = max(1, math.ceil(g * K / E * cfg.moe_capacity_factor))
+
+    xg = x.reshape(B * ng, g, d)
+    logits = xg @ p["router"]                                  # (G, g, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)              # (G, g, K)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+
+    # load-balance auxiliary loss over the full group
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    assign = jnp.sum(jax.nn.one_hot(gate_idx, E, dtype=jnp.float32), axis=2)
+    ce = jnp.mean(assign, axis=(0, 1))
+    aux = jnp.sum(me * ce) * E
+
+    dispatch = jnp.zeros((B * ng, g, E, C), x.dtype)
+    combine = jnp.zeros((B * ng, g, E, C), jnp.float32)
+    running = jnp.zeros((B * ng, E), jnp.float32)
+    for k in range(K):
+        eh = jax.nn.one_hot(gate_idx[:, :, k], E, dtype=jnp.float32)   # (G, g, E)
+        pos = jnp.cumsum(eh, axis=1) - eh + running[:, None, :]
+        keep = (pos < C) * eh                                   # (G, g, E)
+        poh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)
+        slot = poh * keep[..., None]                            # (G, g, E, C)
+        dispatch = dispatch + slot.astype(x.dtype)
+        combine = combine + slot * gate_vals[:, :, k, None, None]
+        running = running + jnp.sum(eh, axis=1)
+
+    xin = jnp.einsum("gtec,gtd->gecd", dispatch, xg)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xin, p["wg"])) * \
+        jnp.einsum("gecd,edf->gecf", xin, p["wi"])
+    out = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), out)
+    y = y.reshape(B, Lx, d)
+    if "shared" in p:
+        y = y + mlp(p["shared"], x)
+    return y, aux
+
+
+# ----------------------------------------------------------------------
+# Mamba2 / SSD
+# ----------------------------------------------------------------------
+
+def init_ssm(key, cfg):
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * N  # groups = 1
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * N + H), dt),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_width, conv_dim), dt, scale=0.5),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dt),
+        "D": jnp.ones((H,), dt),
+        "dt_bias": jnp.zeros((H,), dt),
+        "norm": jnp.zeros((di,), dt),
+        "out_proj": dense_init(ks[3], (di, d), dt),
+    }
+
+
+def _ssm_split(p, cfg, u):
+    """Project + split. u: (B, L, d) -> z, xBC, dt."""
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = u @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * N]
+    dt_raw = zxbcdt[..., di + di + 2 * N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, state=None):
+    """Depthwise causal conv. xBC: (B, L, C); w: (K, C).
+
+    state: (B, K-1, C) previous inputs (decode) or None (zero history).
+    Returns (y, new_state).
+    """
+    K = w.shape[0]
+    B, L, Cc = xBC.shape
+    if state is None:
+        state = jnp.zeros((B, K - 1, Cc), xBC.dtype)
+    xpad = jnp.concatenate([state, xBC], axis=1)           # (B, K-1+L, C)
+    y = sum(xpad[:, i:i + L, :] * w[i][None, None, :] for i in range(K))
+    new_state = xpad[:, -(K - 1):, :]
+    return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(p, cfg, u, h0=None, conv_state=None):
+    """SSD forward over a full sequence (train / prefill), chunked scan.
+
+    u: (B, L, d). L must be a multiple of cfg.ssm_chunk.
+    Returns (y (B, L, d), final_state (B, H, P, N), conv_state).
+    """
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    Bb, L, _ = u.shape
+    c = cfg.ssm_chunk
+    z, xBC, dt = _ssm_split(p, cfg, u)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], conv_state)
+    Lp = ((L + c - 1) // c) * c
+    if Lp != L:
+        # pad with dt=0 (decay 1, zero input) so the final state is exact
+        pad = [(0, 0), (0, Lp - L), (0, 0)]
+        xBC = jnp.pad(xBC, pad)
+        dt = jnp.pad(dt, pad[:2] + [(0, 0)] if dt.ndim == 3 else pad)
+    x = xBC[..., :di].reshape(Bb, Lp, H, P)
+    Bm = xBC[..., di:di + N]                                # (B, Lp, N) groups=1
+    Cm = xBC[..., di + N:]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (H,)
+    dA = dt * A[None, None, :]                              # (B, Lp, H) log-decay <= 0
+
+    nc = Lp // c
+    xs = (
+        x.reshape(Bb, nc, c, H, P),
+        Bm.reshape(Bb, nc, c, N),
+        Cm.reshape(Bb, nc, c, N),
+        dt.reshape(Bb, nc, c, H),
+        dA.reshape(Bb, nc, c, H),
+    )
+    xs = jax.tree_util.tree_map(lambda a: jnp.moveaxis(a, 1, 0), xs)  # (nc, B, c, ...)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    # mixed precision (EXPERIMENTS §Perf): the quadratic intra/inter-chunk
+    # einsums run in the compute dtype (bf16 on TPU) — they dominate the
+    # HLO byte traffic; the carried state and decay math stay f32.
+    cdt = u.dtype
+
+    def chunk_step(h, inp):
+        xc, bc, cc, dtc, dac = inp
+        la = jnp.cumsum(dac, axis=1)                        # (B, c, H)
+        # inter-chunk: y_i += C_i . (h * exp(la_i))
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", cc.astype(cdt),
+                             h.astype(cdt),
+                             jnp.exp(la).astype(cdt)).astype(jnp.float32)
+        # intra-chunk
+        cb = jnp.einsum("bin,bjn->bij", cc.astype(cdt), bc.astype(cdt))
+        iidx = jnp.arange(c)
+        causal = (iidx[:, None] >= iidx[None, :])[None, :, :, None]
+        # mask the exponent BEFORE exp: non-causal (i<j) args are positive
+        # and overflow in the backward pass if only the output is masked
+        arg = jnp.where(causal, la[:, :, None, :] - la[:, None, :, :], 0.0)
+        w = jnp.where(causal, jnp.exp(arg), 0.0) * dtc[:, None, :, :]
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", cb.astype(cdt),
+                             w.astype(cdt),
+                             xc.astype(cdt)).astype(jnp.float32)
+        # state update (f32)
+        xc = xc.astype(jnp.float32)
+        bc = bc.astype(jnp.float32)
+        last = la[:, -1:, :]                                # (B, 1, H)
+        contrib = jnp.exp(last - la) * dtc                  # (B, c, H)
+        h_new = h * jnp.exp(last)[:, 0, :, None, None] + jnp.einsum(
+            "bjn,bjhp,bjh->bhpn", bc, xc, contrib)
+        return h_new, (y_inter + y_intra)
+
+    h_final, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, Lp, H, P)
+    y = y + x.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bb, Lp, di)[:, :L].astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"], h_final, conv_state
+
+
+def ssd_step(p, cfg, u, h, conv_state):
+    """Single-token SSD decode. u: (B, 1, d); h: (B, H, P, N)."""
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    Bb = u.shape[0]
+    z, xBC, dt = _ssm_split(p, cfg, u)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], conv_state)
+    x = xBC[:, 0, :di].reshape(Bb, H, P).astype(jnp.float32)
+    Bm = xBC[:, 0, di:di + N].astype(jnp.float32)
+    Cm = xBC[:, 0, di + N:].astype(jnp.float32)
+    dt1 = dt[:, 0, :]                                       # (B, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt1 * A[None, :])                           # (B, H)
+    h = h * a[:, :, None, None] + jnp.einsum(
+        "bn,bhp,bh->bhpn", Bm, x, dt1)
+    y = jnp.einsum("bn,bhpn->bhp", Cm, h)
+    y = y + x * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bb, 1, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"], h, conv_state

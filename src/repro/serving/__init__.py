@@ -1,0 +1,1 @@
+"""Serving substrate: runners, catalog builder, batched engine."""

@@ -1,0 +1,115 @@
+"""Continuous-batching scheduler (vLLM-style, simplified to fixed slots).
+
+One scheduler per routed model: a fixed number of decode SLOTS share a
+persistent KV/SSD cache.  Arriving requests are prefilled one at a time
+into a free slot (their prefix cache is written into the slot), and all
+active slots decode together on every tick — so short requests retire
+and hand their slot to queued work without ever stalling long ones.
+This is the serving substrate underneath the OptiRoute engine when
+request rates exceed what one-shot batching handles.
+
+The decode executable is compiled ONCE for the (slots, cache) shape;
+admission and retirement are pure cache-slot updates.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.training.steps import make_decode_step
+
+
+@dataclass
+class SlotRequest:
+    id: int
+    tokens: np.ndarray               # (L,) prompt
+    max_new: int
+    out: List[int] = field(default_factory=list)
+    slot: int = -1
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_new
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 ctx_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.ctx_len = ctx_len
+        self.cache = M.init_cache(cfg, slots, ctx_len)
+        self.pos = np.zeros(slots, np.int32)
+        self.active: List[Optional[SlotRequest]] = [None] * slots
+        self.queue: Deque[SlotRequest] = collections.deque()
+        self.finished: List[SlotRequest] = []
+        self._decode = jax.jit(make_decode_step(cfg))
+        self._next_tok = np.zeros(slots, np.int32)
+        self.ticks = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: SlotRequest) -> None:
+        self.queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    def _admit(self) -> None:
+        """Prefill queued requests into free slots (slot-cache insert)."""
+        for i in self._free_slots():
+            if not self.queue:
+                return
+            req = self.queue.popleft()
+            toks = jnp.asarray(req.tokens[None], jnp.int32)
+            last, cache1, pos1 = M.prefill(self.params, self.cfg,
+                                           {"tokens": toks},
+                                           max_len=self.ctx_len)
+            # write the single-sequence cache into slot i
+            def insert(slot_cache, one):
+                return slot_cache.at[:, i].set(one[:, 0])
+            self.cache = jax.tree_util.tree_map(insert, self.cache, cache1)
+            self.pos[i] = int(pos1[0])
+            self._next_tok[i] = int(jnp.argmax(last[0]))
+            req.slot = i
+            self.active[i] = req
+
+    def _retire(self) -> None:
+        for i, req in enumerate(self.active):
+            if req is not None and req.done:
+                self.finished.append(req)
+                self.active[i] = None
+
+    # ------------------------------------------------------------------
+    def tick(self) -> int:
+        """One scheduler step: admit -> joint decode -> collect -> retire.
+        Returns the number of active slots that decoded."""
+        self._admit()
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        batch = {"token": jnp.asarray(self._next_tok[:, None], jnp.int32),
+                 "pos": jnp.asarray(self.pos, jnp.int32)}
+        logits, nxt, self.cache = self._decode(self.params, self.cache,
+                                               batch)
+        nxt = np.asarray(nxt)[:, 0]
+        for i in live:
+            self.active[i].out.append(int(self._next_tok[i]))
+            self._next_tok[i] = nxt[i]
+            self.pos[i] += 1
+        self._retire()
+        self.ticks += 1
+        return len(live)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[SlotRequest]:
+        while (self.queue or any(r is not None for r in self.active)) \
+                and self.ticks < max_ticks:
+            self.tick()
+        return self.finished

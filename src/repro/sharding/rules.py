@@ -1,0 +1,162 @@
+"""Sharding rules: param/activation/cache PartitionSpecs per architecture.
+
+Baseline layout ("2D"):
+  * weight matrices shard their input-feature (d_model) dim over 'data'
+    (FSDP-style) and their output-feature dim over 'model' (tensor
+    parallel); out-projections are the transpose.
+  * MoE expert stacks shard experts over 'model' and d_model over 'data'.
+  * a dim is only sharded if its size is divisible by the mesh axis —
+    otherwise it silently stays replicated (``maybe``).
+  * batch shards over ('pod','data'); for batch=1 long-context decode the
+    cache length axis shards over ('pod','data') and heads stay local —
+    attention becomes a GSPMD partial-softmax (flash-decode style).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return int(mesh.shape[axis])
+
+
+def data_axes(mesh: Mesh):
+    """The (possibly compound) batch-parallel axis."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def maybe(mesh: Mesh, dim: int, axis):
+    """axis if dim divides evenly over it, else None (replicate)."""
+    return axis if dim % axis_size(mesh, axis) == 0 else None
+
+
+# ----------------------------------------------------------------------
+# parameter specs
+# ----------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape) -> Dict[str, Any]:
+    """PartitionSpec tree matching the params pytree.
+
+    params_shape: pytree of ShapeDtypeStruct (or arrays) used for shapes.
+    Stacked layer params have a leading n_layers dim (never sharded).
+    """
+    da = data_axes(mesh)
+
+    def spec_for(path, leaf) -> P:
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        shape = leaf.shape
+        stacked = "layers" in names[:1] or names[0] in ("layers", "enc_layers")
+        dims = list(shape[1:]) if stacked else list(shape)
+        lead = [None] if stacked else []
+
+        def two_d(rows_axis, cols_axis):
+            return P(*lead, maybe(mesh, dims[0], rows_axis),
+                     maybe(mesh, dims[1], cols_axis))
+
+        leafname = names[-1]
+        if leafname == "embed":
+            # vocab over 'model' ONLY: with d replicated, the tied LM
+            # head (x @ embed.T) has no sharded contraction, so logits
+            # are born vocab-sharded instead of all-reduced — for 256k
+            # vocabs that all-reduce is ~67 GB/device/step (EXPERIMENTS
+            # §Perf, gemma2 hillclimb)
+            if cfg.embed_shard_d:                # naive FSDP baseline
+                return P(maybe(mesh, shape[0], "model"),
+                         maybe(mesh, shape[1], da))
+            return P(maybe(mesh, shape[0], "model"), None)
+        if len(dims) == 3 and leafname in ("wi", "wg", "wo") and "moe" in names:
+            # Expert-parallel over 'model'; the second shard axis is f
+            # (not d): with d replicated, the in-projection einsums have
+            # NO sharded contraction, and the only partial-sum reduction
+            # is the final f-contraction -> one all-reduce of the
+            # (tokens, d) layer output instead of all-reducing the much
+            # larger (g, E, C, f) intermediates (EXPERIMENTS §Perf,
+            # llama4 hillclimb: collective bytes -6.4x).
+            e_ax = maybe(mesh, dims[0], "model")
+            if cfg.moe_shard_axis == "d":        # naive FSDP baseline
+                return P(*lead, e_ax, maybe(mesh, dims[1], da), None)
+            if leafname == "wo":                 # (E, f, d): f is dims[1]
+                return P(*lead, e_ax, maybe(mesh, dims[1], da), None)
+            return P(*lead, e_ax, None, maybe(mesh, dims[2], da))
+        if len(dims) == 2:
+            if leafname in ("wo", "out_proj"):      # (f|qd|di, d): row-parallel
+                return two_d("model", da)
+            if leafname in ("wq", "wk", "wv", "wi", "wg", "router",
+                            "in_proj", "w"):
+                return two_d(da, "model")
+            if leafname == "conv_w":
+                return P(*lead, None, maybe(mesh, dims[1], "model"))
+            return P(*lead, *([None] * len(dims)))
+        # 1-D (norms, biases, A_log, ...) and scalars: replicate
+        return P(*lead, *([None] * len(dims)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+# ----------------------------------------------------------------------
+# activation / cache specs
+# ----------------------------------------------------------------------
+
+def batch_spec(cfg: ModelConfig, mesh: Mesh, batch_shape) -> Dict[str, Any]:
+    """Specs for a train/prefill input batch dict."""
+    da = data_axes(mesh)
+
+    def spec_for(path, leaf):
+        b = leaf.shape[0]
+        ax = maybe(mesh, b, da)
+        return P(ax, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_shape)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shape) -> Dict[str, Any]:
+    """Specs for the decode cache pytree (leading n_layers dim).
+
+    If batch divides the data axes, shard batch; otherwise (batch=1
+    long-context) shard the length/state axes instead.
+    """
+    da = data_axes(mesh)
+
+    def spec_for(path, leaf):
+        name = getattr(path[-1], "key", "")
+        shape = leaf.shape          # (nL, B, ...)
+        B = shape[1]
+        b_ax = maybe(mesh, B, da)
+        if name in ("k", "v", "cross_k", "cross_v", "k_scale", "v_scale"):
+            C, H, hd = shape[2], shape[3], shape[4]
+            if b_ax is not None:
+                return P(None, b_ax, maybe(mesh, C, "model"), None, None)
+            # batch=1: context-shard the cache over data axes, heads over model
+            return P(None, None, maybe(mesh, C, da), maybe(mesh, H, "model"), None)
+        if name == "ssd":           # (nL, B, H, P, N)
+            H = shape[2]
+            if b_ax is not None:
+                return P(None, b_ax, maybe(mesh, H, "model"), None, None)
+            return P(None, None, maybe(mesh, H, "model"), None, None)
+        if name == "conv":          # (nL, B, K-1, conv_dim)
+            cd = shape[3]
+            return P(None, b_ax, None, maybe(mesh, cd, "model"))
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def decode_batch_spec(cfg: ModelConfig, mesh: Mesh, batch_shape) -> Dict[str, Any]:
+    da = data_axes(mesh)
+
+    def spec_for(path, leaf):
+        b = leaf.shape[0]
+        ax = maybe(mesh, b, da)
+        return P(ax, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_shape)

@@ -1,0 +1,56 @@
+"""Minimal pure-JAX AdamW (no optax dependency)."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = lambda p: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return {"mu": zeros(params), "nu": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig):
+    """One AdamW step with linear warmup + gradient clipping."""
+    step = opt_state["step"] + 1
+    warm = jnp.minimum(1.0, step.astype(jnp.float32) / max(cfg.warmup_steps, 1))
+    lr = cfg.lr * warm
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    mu = jax.tree_util.tree_map(
+        lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, opt_state["mu"], grads)
+    nu = jax.tree_util.tree_map(
+        lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, opt_state["nu"], grads)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "step": step}, gnorm

@@ -1,0 +1,49 @@
+import numpy as np
+import pytest
+
+from repro.core.mres import MRES, ModelEntry
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_entry(name, *, accuracy=0.5, latency_ms=100.0, cost=1.0,
+               task_types=("chat",), domains=("general",),
+               generalist=False, family="dense", n_params=0, **ethics):
+    raw = {
+        "accuracy": accuracy, "latency_ms": latency_ms,
+        "cost_per_mtok": cost,
+        "helpfulness": ethics.get("helpfulness", 0.5),
+        "harmlessness": ethics.get("harmlessness", 0.5),
+        "honesty": ethics.get("honesty", 0.5),
+        "steerability": ethics.get("steerability", 0.5),
+        "creativity": ethics.get("creativity", 0.5),
+    }
+    return ModelEntry(name=name, raw_metrics=raw, task_types=task_types,
+                      domains=domains, generalist=generalist,
+                      family=family, n_params=n_params)
+
+
+@pytest.fixture
+def small_mres():
+    """4-model catalog spanning the cost/accuracy trade-off."""
+    m = MRES()
+    m.register(make_entry("tiny-fast", accuracy=0.4, latency_ms=5, cost=0.1,
+                          task_types=("chat", "classification"),
+                          domains=("general",), generalist=True))
+    m.register(make_entry("mid", accuracy=0.7, latency_ms=40, cost=1.0,
+                          task_types=("chat", "code", "summarization"),
+                          domains=("general", "software")))
+    m.register(make_entry("big-accurate", accuracy=0.95, latency_ms=400,
+                          cost=10.0, helpfulness=0.9, honesty=0.9,
+                          task_types=("chat", "code", "reasoning",
+                                      "summarization"),
+                          domains=("general", "software", "finance",
+                                   "legal"), generalist=True))
+    m.register(make_entry("legal-specialist", accuracy=0.85, latency_ms=120,
+                          cost=3.0, harmlessness=0.95,
+                          task_types=("summarization", "classification"),
+                          domains=("legal",)))
+    return m

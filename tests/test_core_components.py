@@ -1,0 +1,195 @@
+"""Unit tests: feedback store, merging, checkpointing, tokenizer,
+analyzer pruning/quantization."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager, load, save
+from repro.core.analyzer import (AnalyzerConfig, TaskAnalyzer, init_analyzer,
+                                 analyzer_forward, prune_text, quantize_int8)
+from repro.core.feedback import FeedbackStore, cluster_of
+from repro.core.merging import ModelMerger, merged_metrics, soup
+from repro.core.mres import MRES
+from repro.core.preferences import TaskSignature, UserPreferences
+from repro.data.tokenizer import BOS_ID, PAD_ID, HashTokenizer
+from repro.data.workload import make_workload
+from tests.conftest import make_entry
+
+
+# ----------------------------------------------------------------------
+# feedback
+# ----------------------------------------------------------------------
+
+def test_feedback_ema_direction():
+    fs = FeedbackStore(alpha=0.5)
+    sig = TaskSignature(task_type="code", domain="software", complexity=0.7)
+    assert fs.record(sig, "m", True) > 0
+    after_ups = fs.record(sig, "m", True)
+    assert after_ups > 0.5
+    after_down = fs.record(sig, "m", False)
+    assert after_down < after_ups             # thumbs-down lowers the bias
+    np.testing.assert_allclose(fs.bias(sig, ["m"])[0], after_down)
+
+
+def test_feedback_cluster_granularity():
+    a = TaskSignature(task_type="code", domain="software", complexity=0.1)
+    b = TaskSignature(task_type="code", domain="software", complexity=0.9)
+    fs = FeedbackStore()
+    fs.record(a, "m", False)
+    assert cluster_of(a) != cluster_of(b)
+    assert fs.bias(b, ["m"])[0] == 0.0        # different bucket untouched
+
+
+def test_feedback_persistence(tmp_path):
+    fs = FeedbackStore()
+    sig = TaskSignature()
+    fs.record(sig, "m", True)
+    p = str(tmp_path / "fb.json")
+    fs.save(p)
+    fs2 = FeedbackStore()
+    fs2.load(p)
+    np.testing.assert_allclose(fs2.bias(sig, ["m"]), fs.bias(sig, ["m"]))
+
+
+# ----------------------------------------------------------------------
+# merging
+# ----------------------------------------------------------------------
+
+def test_soup_is_weighted_average():
+    t1 = {"a": jnp.ones((2, 2)), "b": [jnp.zeros(3)]}
+    t2 = {"a": jnp.zeros((2, 2)), "b": [jnp.ones(3)]}
+    s = soup([t1, t2], [0.25, 0.75])
+    np.testing.assert_allclose(np.asarray(s["a"]), 0.25)
+    np.testing.assert_allclose(np.asarray(s["b"][0]), 0.75)
+
+
+def test_merger_creates_entry_when_profitable():
+    m = MRES()
+    # two same-family models: one accurate+slow, one fast+weak
+    m.register(make_entry("acc", accuracy=0.9, latency_ms=500, cost=10,
+                          family="dense", n_params=100))
+    m.register(make_entry("fast", accuracy=0.3, latency_ms=5, cost=0.1,
+                          family="dense", n_params=100))
+    merger = ModelMerger(m)
+    prefs = UserPreferences(weights={"accuracy": 1.0, "speed": 1.0,
+                                     "cheapness": 1.0})
+    sig = TaskSignature()
+    e = merger.maybe_merge(prefs, sig, incumbent_score=0.0)
+    assert e is not None and e.name.startswith("soup:")
+    assert len(m) == 3
+    # merged metrics interpolate the parents
+    mm = merged_metrics([m.entry("acc"), m.entry("fast")], [0.5, 0.5])
+    assert mm["accuracy"] == pytest.approx(0.6)
+    assert mm["latency_ms"] == pytest.approx(252.5)
+
+
+def test_merger_respects_family_boundary():
+    m = MRES()
+    m.register(make_entry("a", family="dense", n_params=10))
+    m.register(make_entry("b", family="moe", n_params=10))
+    assert ModelMerger(m).candidate_pairs() == []
+
+
+def test_runner_soup_changes_output():
+    from repro.configs import get_smoke
+    from repro.serving.runner import ModelRunner
+    cfg = get_smoke("llama3.2-1b")
+    r1 = ModelRunner(cfg, seed=0)
+    r2 = ModelRunner(cfg, seed=1)
+    merged = r1.merged_with(r2, 0.5)
+    toks = np.arange(8, dtype=np.int32)[None] + 2
+    g1 = r1.generate(toks, max_new=2)
+    gm = merged.generate(toks, max_new=2)
+    assert g1.logits_last.shape == gm.logits_last.shape
+    assert not np.allclose(g1.logits_last, gm.logits_last)
+
+
+# ----------------------------------------------------------------------
+# checkpoint
+# ----------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"w": np.arange(6, np.float32()).reshape(2, 3)
+            if False else np.arange(6, dtype=np.float32).reshape(2, 3),
+            "nested": {"b": np.ones(4, np.int32)},
+            "stack": [np.zeros(2), np.full(2, 7.0)]}
+    p = str(tmp_path / "x.npz")
+    save(p, tree, {"note": "hi"})
+    got, meta = load(p)
+    assert meta["note"] == "hi"
+    np.testing.assert_array_equal(got["w"], tree["w"])
+    np.testing.assert_array_equal(got["nested"]["b"], tree["nested"]["b"])
+    np.testing.assert_array_equal(got["stack"][1], tree["stack"][1])
+    assert isinstance(got["stack"], list)
+
+
+def test_checkpoint_manager_retention(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        cm.save(s, {"x": np.full(1, s)})
+    assert cm.steps() == [3, 4]
+    step, tree, meta = cm.restore_latest()
+    assert step == 4 and float(tree["x"][0]) == 4.0
+
+
+# ----------------------------------------------------------------------
+# tokenizer
+# ----------------------------------------------------------------------
+
+def test_tokenizer_deterministic_and_padded():
+    tok = HashTokenizer(512)
+    a = tok.encode("Hello World hello")
+    b = tok.encode("hello world HELLO")
+    assert a == b and a[0] == BOS_ID
+    assert a[1] == a[3]                       # same word -> same id
+    batch = tok.encode_batch(["one two", "three"], max_len=6)
+    assert batch.shape == (2, 6)
+    assert (batch[0, 3:] == PAD_ID).all()
+    assert (batch >= 0).all() and (batch < 512).all()
+
+
+# ----------------------------------------------------------------------
+# analyzer (pruning + quantization; training covered by integration)
+# ----------------------------------------------------------------------
+
+def test_prune_preserves_edges_and_budget():
+    cfg = AnalyzerConfig(prune_head=10, prune_tail=5, prune_mid=3)
+    words = [f"w{i}" for i in range(200)]
+    out = prune_text(cfg, " ".join(words)).split()
+    assert len(out) == 18
+    assert out[:10] == words[:10]
+    assert out[-5:] == words[-5:]
+    short = "just a short query"
+    assert prune_text(cfg, short) == short
+
+
+def test_prune_deterministic():
+    cfg = AnalyzerConfig()
+    text = " ".join(f"w{i}" for i in range(500))
+    assert prune_text(cfg, text, seed=3) == prune_text(cfg, text, seed=3)
+
+
+def test_int8_quantization_close_logits():
+    cfg = AnalyzerConfig(d_model=32, n_layers=1, d_ff=64, max_len=16)
+    params = init_analyzer(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        2, cfg.vocab_size, (3, 16)), jnp.int32)
+    tt1, dm1, cx1 = analyzer_forward(params, cfg, toks)
+    qp = quantize_int8(params)
+    # every 2-D matrix became (int8, scale)
+    assert isinstance(qp["head_tt"], tuple)
+    assert qp["head_tt"][0].dtype == jnp.int8
+    tt2, dm2, cx2 = analyzer_forward(qp, cfg, toks)
+    assert np.argmax(np.asarray(tt1), 1).tolist() == \
+        np.argmax(np.asarray(tt2), 1).tolist() or \
+        np.max(np.abs(np.asarray(tt1) - np.asarray(tt2))) < 0.5
+
+
+def test_workload_ground_truth_consistent():
+    recs = make_workload(50, seed=0)
+    assert len({r.text for r in recs}) > 40      # diverse
+    for r in recs:
+        r.sig.validate()
+    again = make_workload(50, seed=0)
+    assert [r.text for r in again] == [r.text for r in recs]

@@ -1,0 +1,155 @@
+"""Unit tests: model building blocks vs hand-computed / jnp oracles."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.configs.base import ModelConfig
+from repro.kernels import ref as R
+from repro.models import layers as L
+
+RNG = np.random.default_rng(7)
+
+
+def test_rms_norm_matches_manual():
+    x = jnp.asarray(RNG.standard_normal((2, 5, 8)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal(8), jnp.float32)
+    got = L.rms_norm(x, w)
+    want = x / np.sqrt(np.mean(np.square(np.asarray(x)), -1, keepdims=True)
+                       + 1e-6) * (1 + np.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+def test_softcap_limits_and_identity():
+    x = jnp.asarray([-1e4, -1.0, 0.0, 1.0, 1e4])
+    y = np.asarray(L.softcap(x, 30.0))
+    assert (np.abs(y) <= 30.0 + 1e-6).all()
+    np.testing.assert_allclose(y[2], 0.0)
+    assert np.asarray(L.softcap(x, 0.0) is x or
+                      np.allclose(np.asarray(L.softcap(x, 0.0)), np.asarray(x)))
+
+
+def test_rope_preserves_norm_and_relative_angle():
+    B, Lq, H, hd = 1, 6, 2, 8
+    x = jnp.asarray(RNG.standard_normal((B, Lq, H, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(Lq, dtype=jnp.int32)[None], (B, Lq))
+    y = L.apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # dot(q_i, k_j) depends only on i-j: rotate both by a shift
+    q = jnp.asarray(RNG.standard_normal((B, Lq, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, Lq, H, hd)), jnp.float32)
+    d1 = np.einsum("blhd,bmhd->bhlm",
+                   np.asarray(L.apply_rope(q, pos, 1e4)),
+                   np.asarray(L.apply_rope(k, pos, 1e4)))
+    d2 = np.einsum("blhd,bmhd->bhlm",
+                   np.asarray(L.apply_rope(q, pos + 13, 1e4)),
+                   np.asarray(L.apply_rope(k, pos + 13, 1e4)))
+    np.testing.assert_allclose(d1, d2, rtol=1e-3, atol=1e-3)
+
+
+def _tiny_cfg(**kw):
+    base = dict(name="t", arch_type="dense", n_layers=1, d_model=32,
+                n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=256,
+                param_dtype="float32", compute_dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base).validate()
+
+
+def test_attention_full_matches_ref_kernel_oracle():
+    cfg = _tiny_cfg()
+    p = L.init_attention(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.standard_normal((2, 10, 32)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(10, dtype=jnp.int32)[None], (2, 10))
+    out, (k, v) = L.attention_full(p, cfg, x, pos)
+    q = L._split_heads(x @ p["wq"], cfg.n_heads, cfg.head_dim)
+    q = L.apply_rope(q, pos, cfg.rope_theta)
+    want = R.mha_attention(q, k, v, causal=True)
+    want = want.reshape(2, 10, cfg.q_dim) @ p["wo"]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_block_no_drop_equals_dense_mixture():
+    """With capacity >= group size, MoE output == explicit per-token sum."""
+    cfg = _tiny_cfg(arch_type="moe", n_experts=4, moe_top_k=2,
+                    moe_capacity_factor=4.0, moe_group=8)
+    p = L.init_moe(jax.random.PRNGKey(1), cfg)
+    x = jnp.asarray(RNG.standard_normal((2, 8, 32)), jnp.float32)
+    y, aux = L.moe_block(p, cfg, x)
+    # oracle: route each token to its top-k experts with renorm weights
+    logits = x @ p["router"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    vals, idx = jax.lax.top_k(probs, 2)
+    vals = vals / vals.sum(-1, keepdims=True)
+    want = np.zeros_like(np.asarray(x))
+    for b in range(2):
+        for t in range(8):
+            for j in range(2):
+                e = int(idx[b, t, j])
+                xe = np.asarray(x[b, t])
+                h = (jax.nn.silu(xe @ p["wg"][e]) * (xe @ p["wi"][e]))
+                want[b, t] += float(vals[b, t, j]) * np.asarray(h @ p["wo"][e])
+    np.testing.assert_allclose(np.asarray(y), want, rtol=2e-4, atol=2e-4)
+    assert float(aux) >= 1.0 - 1e-3   # load-balance loss lower bound is 1
+
+
+def test_moe_capacity_drops_tokens():
+    """With tiny capacity, overflow tokens contribute zero (residual)."""
+    cfg = _tiny_cfg(arch_type="moe", n_experts=2, moe_top_k=1,
+                    moe_capacity_factor=0.25, moe_group=8)
+    p = L.init_moe(jax.random.PRNGKey(2), cfg)
+    x = jnp.asarray(RNG.standard_normal((1, 8, 32)), jnp.float32)
+    y, _ = L.moe_block(p, cfg, x)
+    # capacity C = ceil(8 * 1 / 2 * 0.25) = 1 per expert => <= 2 tokens kept
+    nonzero = np.abs(np.asarray(y)).sum(-1) > 1e-6
+    assert nonzero.sum() <= 2
+
+
+def test_causal_conv_matches_numpy():
+    w = jnp.asarray(RNG.standard_normal((4, 6)), jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((2, 10, 6)), jnp.float32)
+    y, state = L._causal_conv(x, w)
+    xp = np.concatenate([np.zeros((2, 3, 6), np.float32), np.asarray(x)], 1)
+    want = sum(xp[:, i:i + 10] * np.asarray(w)[i] for i in range(4))
+    want = np.asarray(jax.nn.silu(jnp.asarray(want)))
+    np.testing.assert_allclose(np.asarray(y), want, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state), xp[:, -3:], rtol=1e-6)
+
+
+def test_ssd_chunked_matches_sequential_ref():
+    cfg = get_smoke("mamba2-1.3b")
+    p = L.init_ssm(jax.random.PRNGKey(3), cfg)
+    u = jnp.asarray(RNG.standard_normal((2, 32, cfg.d_model)) * 0.1,
+                    jnp.float32)
+    y, hf, conv = L.ssd_chunked(p, cfg, u)
+    # oracle path: same splits, sequential scan via kernels/ref.py
+    z, xBC, dt = L._ssm_split(p, cfg, u)
+    xBC, _ = L._causal_conv(xBC, p["conv_w"])
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    x = xBC[..., :di].reshape(2, 32, H, P)
+    Bm = xBC[..., di:di + N]
+    Cm = xBC[..., di + N:]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y_ref, h_ref = R.ssd_scan(x, dt, A, Bm, Cm)
+    y_ref = y_ref + np.asarray(x) * np.asarray(p["D"])[None, None, :, None]
+    y_ref = jnp.asarray(y_ref.reshape(2, 32, di), jnp.float32)
+    y_ref = L.rms_norm(y_ref * jax.nn.silu(z), p["norm"]) @ p["out_proj"]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(h_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_gqa_scores_and_values_shapes():
+    q = jnp.asarray(RNG.standard_normal((2, 5, 8, 16)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, 7, 2, 16)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, 7, 2, 16)), jnp.float32)
+    s = L.gqa_scores(q, k)
+    assert s.shape == (2, 2, 4, 5, 7)
+    out = L.gqa_values(jax.nn.softmax(s, -1), v)
+    assert out.shape == (2, 5, 8, 16)

@@ -1,0 +1,130 @@
+"""Correctness of the §Perf variants (EXPERIMENTS.md):
+
+  * blocked attention == naive attention (all families, banded + full,
+    local/global alternation, long mode),
+  * int8 KV-cache decode stays close to the fp decode,
+  * moe_shard_axis variants produce identical math (specs only differ).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import model as M
+
+RNG = np.random.default_rng(3)
+
+ATTN_ARCHS = ["llama3.2-1b", "hymba-1.5b", "gemma2-2b", "h2o-danube-3-4b",
+              "qwen2-1.5b", "qwen3-moe-30b-a3b"]
+
+
+@pytest.mark.parametrize("arch", ATTN_ARCHS)
+@pytest.mark.parametrize("blk", [32, 64])
+def test_blocked_equals_naive(arch, blk):
+    smoke = get_smoke(arch)
+    cfg_b = dataclasses.replace(smoke, attn_impl="blocked", attn_block_q=blk)
+    cfg_n = dataclasses.replace(smoke, attn_impl="naive")
+    params = M.init_params(jax.random.PRNGKey(0), cfg_b)
+    L = 150          # non multiple of blk; > smoke window (64)
+    b = {"tokens": jnp.asarray(RNG.integers(0, smoke.vocab_size, (2, L)),
+                               jnp.int32)}
+    lb, _, _ = M.forward_full(params, cfg_b, b)
+    ln, _, _ = M.forward_full(params, cfg_n, b)
+    err = float(jnp.max(jnp.abs(lb - ln)))
+    assert err < 2e-3, (arch, blk, err)
+
+
+def test_blocked_equals_naive_long_mode():
+    smoke = get_smoke("gemma2-2b")
+    kw = dict(long_mode_local_only=True)
+    cfg_b = dataclasses.replace(smoke, attn_impl="blocked",
+                                attn_block_q=32, **kw)
+    cfg_n = dataclasses.replace(smoke, attn_impl="naive", **kw)
+    params = M.init_params(jax.random.PRNGKey(0), cfg_b)
+    b = {"tokens": jnp.asarray(RNG.integers(0, smoke.vocab_size, (1, 100)),
+                               jnp.int32)}
+    lb, _, _ = M.forward_full(params, cfg_b, b, long_mode=True)
+    ln, _, _ = M.forward_full(params, cfg_n, b, long_mode=True)
+    assert float(jnp.max(jnp.abs(lb - ln))) < 2e-3
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "gemma2-2b",
+                                  "h2o-danube-3-4b", "qwen3-moe-30b-a3b"])
+def test_int8_kv_cache_decode_close(arch):
+    smoke = get_smoke(arch)
+    params = M.init_params(jax.random.PRNGKey(1), smoke)
+    b = {"tokens": jnp.asarray(RNG.integers(0, smoke.vocab_size, (2, 24)),
+                               jnp.int32)}
+    logits, _, _ = M.forward_full(params, smoke, b)
+    cfg8 = dataclasses.replace(smoke, kv_cache_dtype="int8")
+    _, cache, pos = M.prefill(params, cfg8, {"tokens": b["tokens"][:, :-1]})
+    assert cache["k"].dtype == jnp.int8
+    assert "k_scale" in cache
+    dl, new_cache = M.decode_step(params, cfg8, cache,
+                                  {"token": b["tokens"][:, -1:], "pos": pos})
+    err = float(jnp.max(jnp.abs(dl - logits[:, -1])))
+    assert err < 0.5, (arch, err)
+    assert new_cache["k"].dtype == jnp.int8
+
+
+def test_int8_ring_buffer_prefill():
+    """SWA ring-buffer cache also supports int8 (roll path)."""
+    smoke = get_smoke("h2o-danube-3-4b")
+    cfg8 = dataclasses.replace(smoke, kv_cache_dtype="int8")
+    params = M.init_params(jax.random.PRNGKey(2), cfg8)
+    L = 100                                  # > smoke window 64 -> ring
+    toks = jnp.asarray(RNG.integers(0, cfg8.vocab_size, (1, L)), jnp.int32)
+    last, cache, pos = M.prefill(params, cfg8, {"tokens": toks})
+    assert cache["k"].shape[2] == smoke.sliding_window
+    dl, _ = M.decode_step(params, cfg8, cache,
+                          {"token": toks[:, -1:], "pos": pos})
+    assert not bool(jnp.isnan(dl).any())
+
+
+def test_long_serving_window_ring_decode():
+    """Beyond-paper long-serving mode (DESIGN §4): a full-attention
+    arch degrades to an SWA ring cache at long contexts; decode against
+    the ring cache matches the full forward under the effective SWA
+    config exactly."""
+    smoke = get_smoke("llama3.2-1b")
+    plain = dataclasses.replace(smoke, long_serving_window=0)
+    assert not plain.subquadratic          # full attention refuses 500k
+    cfg = dataclasses.replace(smoke, long_serving_window=32)
+    assert cfg.subquadratic
+    eff = cfg.long_serving_config()
+    assert eff.sliding_window == 32
+    assert eff.n_params() == cfg.n_params()      # params unchanged
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    L = 80                                        # > window -> ring wraps
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (1, L)), jnp.int32)
+    logits_ref, _, _ = M.forward_full(params, eff, {"tokens": toks})
+    _, cache, pos = M.prefill(params, eff, {"tokens": toks[:, :-1]})
+    assert cache["k"].shape[2] == 32
+    dl, _ = M.decode_step(params, eff, cache,
+                          {"token": toks[:, -1:], "pos": pos})
+    assert float(jnp.max(jnp.abs(dl - logits_ref[:, -1]))) < 5e-2
+    # archs that are already sub-quadratic are untouched
+    mamba = get_smoke("mamba2-1.3b")
+    assert mamba.long_serving_config() is mamba
+
+
+def test_moe_shard_axis_is_spec_only():
+    """'f' vs 'd' expert sharding changes PartitionSpecs, not math."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding import rules as R
+    cfg_f = get_smoke("qwen3-moe-30b-a3b")
+    cfg_d = dataclasses.replace(cfg_f, moe_shard_axis="d")
+    params = M.init_params(jax.random.PRNGKey(0), cfg_f)
+    b = {"tokens": jnp.asarray(RNG.integers(0, cfg_f.vocab_size, (2, 16)),
+                               jnp.int32)}
+    lf, _, _ = M.forward_full(params, cfg_f, b)
+    ld, _, _ = M.forward_full(params, cfg_d, b)
+    np.testing.assert_array_equal(np.asarray(lf), np.asarray(ld))
+    mesh = make_host_mesh()
+    sf = R.param_specs(cfg_f, mesh, params)
+    sd = R.param_specs(cfg_d, mesh, params)
+    assert jax.tree_util.tree_structure(sf) == \
+        jax.tree_util.tree_structure(sd)

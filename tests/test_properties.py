@@ -1,0 +1,138 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.feedback import FeedbackStore
+from repro.core.mres import MRES, normalize_catalog
+from repro.core.preferences import (DOMAINS, METRICS, TASK_TYPES,
+                                    TaskSignature, UserPreferences)
+from repro.core.routing import RoutingEngine
+from tests.conftest import make_entry
+
+FAST = settings(max_examples=40, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+# ----------------------------------------------------------------------
+# strategies
+# ----------------------------------------------------------------------
+
+@st.composite
+def catalogs(draw, min_n=2, max_n=10):
+    n = draw(st.integers(min_n, max_n))
+    m = MRES()
+    for i in range(n):
+        tts = draw(st.sets(st.sampled_from(TASK_TYPES), min_size=1,
+                           max_size=4))
+        dms = draw(st.sets(st.sampled_from(DOMAINS), min_size=1, max_size=3))
+        m.register(make_entry(
+            f"m{i}",
+            accuracy=draw(st.floats(0, 1)),
+            latency_ms=draw(st.floats(1, 1000)),
+            cost=draw(st.floats(0.01, 100)),
+            helpfulness=draw(st.floats(0, 1)),
+            harmlessness=draw(st.floats(0, 1)),
+            honesty=draw(st.floats(0, 1)),
+            task_types=tuple(tts), domains=tuple(dms),
+            generalist=draw(st.booleans())))
+    return m
+
+
+@st.composite
+def signatures(draw):
+    return TaskSignature(
+        task_type=draw(st.sampled_from(TASK_TYPES)),
+        domain=draw(st.sampled_from(DOMAINS)),
+        complexity=draw(st.floats(0, 1)),
+        confidence=draw(st.floats(0, 1)))
+
+
+@st.composite
+def preferences(draw):
+    w = {m: draw(st.floats(0, 1)) for m in METRICS}
+    return UserPreferences(weights=w)
+
+
+# ----------------------------------------------------------------------
+# invariants
+# ----------------------------------------------------------------------
+
+@FAST
+@given(catalogs(), signatures(), preferences())
+def test_route_always_returns_a_model(mres, sig, prefs):
+    """(iv) fallback totality: routing never fails on a non-empty catalog."""
+    d = RoutingEngine(mres).route(prefs, sig)
+    assert d.model in {e.name for e in mres.entries}
+    assert np.isfinite(d.score)
+
+
+@FAST
+@given(catalogs(), signatures(), preferences())
+def test_chosen_model_passes_hard_filters_when_any_does(mres, sig, prefs):
+    """(i) if any model passes both filters, the chosen one does too."""
+    eng = RoutingEngine(mres, confidence_threshold=0.0)
+    d = eng.route(prefs, sig)
+    entry = mres.entry(d.model)
+    any_pass = any(sig.task_type in e.task_types and sig.domain in e.domains
+                   for e in mres.entries)
+    if any_pass:
+        assert sig.task_type in entry.task_types
+        assert sig.domain in entry.domains
+
+
+@FAST
+@given(catalogs(), signatures(), preferences(),
+       st.sampled_from(METRICS), st.floats(0.1, 1.0))
+def test_weight_monotonicity(mres, sig, prefs, metric, bump):
+    """(ii) raising the weight of a metric never worsens the chosen
+    model's normalized value on that metric."""
+    eng = RoutingEngine(mres, confidence_threshold=0.0)
+    emb = mres.embeddings()
+    names = [e.name for e in mres.entries]
+    ax = METRICS.index(metric)
+    d1 = eng.route(prefs, sig)
+    hi = prefs.with_weight(metric, min(1.0, prefs.weights.get(metric, 0.25)
+                                       + bump))
+    d2 = eng.route(hi, sig)
+    v1 = emb[names.index(d1.model), ax]
+    v2 = emb[names.index(d2.model), ax]
+    assert v2 >= v1 - 1e-6
+
+
+@FAST
+@given(st.lists(st.tuples(st.floats(0.001, 1e6), st.floats(0.001, 1e6)),
+                min_size=1, max_size=12),
+       st.floats(0.01, 1000))
+def test_normalization_bounds_and_scale_invariance(rows, scale):
+    """(iii) normalization maps into [0,1] and is scale-invariant."""
+    entries = [make_entry(f"m{i}", accuracy=a, latency_ms=l)
+               for i, (a, l) in enumerate(rows)]
+    e1 = normalize_catalog(entries)
+    assert (e1 >= 0).all() and (e1 <= 1).all()
+    scaled = [make_entry(f"m{i}", accuracy=a * scale, latency_ms=l * scale)
+              for i, (a, l) in enumerate(rows)]
+    e2 = normalize_catalog(scaled)
+    np.testing.assert_allclose(e1, e2, rtol=1e-5, atol=1e-7)
+
+
+@FAST
+@given(st.lists(st.booleans(), min_size=1, max_size=200),
+       st.floats(0.05, 0.95))
+def test_feedback_bias_bounded(thumbs, alpha):
+    """(v) feedback EMA stays in [-1, 1] under any thumb sequence."""
+    fs = FeedbackStore(alpha=alpha)
+    sig = TaskSignature()
+    for t in thumbs:
+        b = fs.record(sig, "m", t)
+        assert -1.0 <= b <= 1.0
+    assert abs(fs.bias(sig, ["m"])[0]) <= 1.0
+
+
+@FAST
+@given(signatures())
+def test_task_vector_in_unit_box(sig):
+    eng = RoutingEngine.__new__(RoutingEngine)
+    prefs = UserPreferences(weights={m: 1.0 for m in METRICS})
+    v = eng.task_vector(prefs, sig)
+    assert (v >= 0).all() and (v <= 1).all()

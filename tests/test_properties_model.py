@@ -1,0 +1,96 @@
+"""Hypothesis property tests at the model/kernel layer."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+SLOW = settings(max_examples=12, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow,
+                                       HealthCheck.data_too_large])
+
+
+def _cfg(window, blk):
+    return ModelConfig(
+        name="prop", arch_type="dense", n_layers=1, d_model=32, n_heads=4,
+        n_kv_heads=2, d_ff=32, vocab_size=128, sliding_window=window,
+        attn_impl="blocked", attn_block_q=blk,
+        param_dtype="float32", compute_dtype="float32").validate()
+
+
+@SLOW
+@given(L_=st.integers(3, 80), window=st.sampled_from([0, 5, 16, 64]),
+       blk=st.sampled_from([4, 16, 32]), seed=st.integers(0, 4),
+       causal=st.booleans())
+def test_blocked_attention_equals_naive_mask(L_, window, blk, seed, causal):
+    """blocked(q,k,v) == masked-softmax reference for any (L, W, blk)."""
+    if not causal:
+        window = 0
+    cfg = _cfg(window, blk)
+    rng = np.random.default_rng(seed)
+    p = L.init_attention(jax.random.PRNGKey(seed), cfg)
+    x = jnp.asarray(rng.standard_normal((2, L_, 32)) * 0.3, jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(L_, dtype=jnp.int32)[None], (2, L_))
+    out_b, (k, v) = L.attention_blocked(p, cfg, x, pos, causal=causal)
+    # reference: explicit masked softmax
+    q = L._split_heads(x @ p["wq"], cfg.n_heads, cfg.head_dim)
+    q = L.apply_rope(q, pos, cfg.rope_theta)
+    s = L.gqa_scores(q, k).astype(jnp.float32)
+    iq = jnp.arange(L_)[:, None]
+    ik = jnp.arange(L_)[None, :]
+    mask = jnp.ones((L_, L_), bool)
+    if causal:
+        mask &= ik <= iq
+        if window:
+            mask &= ik > iq - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    want = L.gqa_values(pr, v).reshape(2, L_, cfg.q_dim) @ p["wo"]
+    np.testing.assert_allclose(np.asarray(out_b), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@SLOW
+@given(st.integers(0, 6), st.integers(1, 6), st.integers(4, 64))
+def test_kv_quantization_roundtrip_bounded(seed, heads, hd):
+    """int8 KV quantize/dequant relative error bounded by 1/127 per row."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((3, heads, hd)) *
+                    rng.uniform(0.01, 50), jnp.float32)
+    q, s = L.quantize_kv(x)
+    back = q.astype(jnp.float32) * s
+    rowmax = np.max(np.abs(np.asarray(x)), axis=-1, keepdims=True)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    assert (err <= rowmax / 127.0 + 1e-6).all()
+    assert q.dtype == jnp.int8
+
+
+@SLOW
+@given(st.integers(2, 40), st.integers(0, 5))
+def test_moe_gate_weights_normalized_and_sparse(T, seed):
+    """moe_gate output: top-k rows sum to 1, exactly k nonzero."""
+    rng = np.random.default_rng(seed)
+    E, k = 8, 3
+    logits = jnp.asarray(rng.standard_normal((T, E)), jnp.float32)
+    gates, aux = L.moe_gate(logits, k)
+    g = np.asarray(gates)
+    np.testing.assert_allclose(g.sum(-1), 1.0, rtol=1e-4)
+    assert ((g > 0).sum(-1) == k).all()
+    assert float(aux) >= 1.0 - 1e-3   # load-balance lower bound
+
+
+@SLOW
+@given(st.integers(1, 200), st.integers(0, 3))
+def test_prune_never_longer_and_idempotent(n_words, seed):
+    from repro.core.analyzer import AnalyzerConfig, prune_text
+    cfg = AnalyzerConfig(prune_head=10, prune_tail=5, prune_mid=3)
+    text = " ".join(f"w{i}" for i in range(n_words))
+    once = prune_text(cfg, text, seed)
+    assert len(once.split()) <= max(n_words, 18)
+    assert len(once.split()) <= 18 or n_words <= 18
+    assert prune_text(cfg, once, seed) == once     # idempotent

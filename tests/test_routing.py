@@ -1,0 +1,123 @@
+"""Routing Engine + MRES behaviour tests (paper §3.3/§3.4)."""
+import numpy as np
+import pytest
+
+from repro.core.mres import MRES, normalize_catalog
+from repro.core.preferences import (METRICS, PROFILES, TaskSignature,
+                                    UserPreferences, resolve)
+from repro.core.routing import RoutingEngine
+from tests.conftest import make_entry
+
+
+def test_normalization_range_and_inversion(small_mres):
+    emb = small_mres.embeddings()
+    assert emb.shape == (4, len(METRICS))
+    assert (emb >= 0).all() and (emb <= 1).all()
+    # latency is inverted into speed: fastest model gets 1
+    names = [e.name for e in small_mres.entries]
+    speed = emb[:, METRICS.index("speed")]
+    assert names[int(np.argmax(speed))] == "tiny-fast"
+    cheap = emb[:, METRICS.index("cheapness")]
+    assert names[int(np.argmax(cheap))] == "tiny-fast"
+    acc = emb[:, METRICS.index("accuracy")]
+    assert names[int(np.argmax(acc))] == "big-accurate"
+
+
+def test_normalization_scale_invariance(small_mres):
+    emb1 = small_mres.embeddings()
+    # multiply a raw metric column by a constant
+    for e in small_mres.entries:
+        small_mres.update_metrics(e.name,
+                                  latency_ms=e.raw_metrics["latency_ms"] * 37.0)
+    emb2 = small_mres.embeddings()
+    np.testing.assert_allclose(emb1, emb2, rtol=1e-6, atol=1e-6)
+
+
+def test_duplicate_registration_rejected(small_mres):
+    with pytest.raises(ValueError):
+        small_mres.register(make_entry("mid"))
+
+
+def test_route_prefers_cheap_for_cost_profile(small_mres):
+    eng = RoutingEngine(small_mres)
+    sig = TaskSignature(task_type="chat", domain="general", complexity=0.1)
+    d = eng.route("cost-effective", sig)
+    assert d.model in ("tiny-fast", "mid")    # never the expensive one
+    # with cheapness as the only priority the cheapest model must win
+    d2 = eng.route({"cheapness": 1.0, "speed": 0.0, "accuracy": 0.0,
+                    "helpfulness": 0.0, "harmlessness": 0.0, "honesty": 0.0,
+                    "steerability": 0.0, "creativity": 0.0}, sig)
+    assert d2.model == "tiny-fast"
+
+
+def test_route_prefers_accurate_for_hard_tasks(small_mres):
+    eng = RoutingEngine(small_mres)
+    sig = TaskSignature(task_type="reasoning", domain="general",
+                        complexity=0.95)
+    d = eng.route("accuracy-first", sig)
+    assert d.model == "big-accurate"
+
+
+def test_hierarchical_filter_domain(small_mres):
+    eng = RoutingEngine(small_mres)
+    sig = TaskSignature(task_type="summarization", domain="legal",
+                        complexity=0.5)
+    d = eng.route("balanced", sig)
+    entry = small_mres.entry(d.model)
+    assert "legal" in entry.domains
+
+
+def test_fallback_to_generalist(small_mres):
+    """A task type no model supports must fall back, never crash."""
+    eng = RoutingEngine(small_mres)
+    sig = TaskSignature(task_type="vqa", domain="healthcare", complexity=0.5)
+    d = eng.route("balanced", sig)
+    assert d.used_fallback and d.model
+    assert small_mres.entry(d.model).generalist
+
+
+def test_low_confidence_skips_filters(small_mres):
+    eng = RoutingEngine(small_mres, confidence_threshold=0.5)
+    sig = TaskSignature(task_type="vqa", domain="healthcare",
+                        complexity=0.5, confidence=0.1)
+    d = eng.route("balanced", sig)
+    assert not d.used_fallback   # filters were skipped, kNN set survives
+
+
+def test_complexity_raises_accuracy_demand(small_mres):
+    eng = RoutingEngine(small_mres)
+    prefs = UserPreferences(weights={m: 0.3 for m in METRICS})
+    easy = eng.task_vector(prefs, TaskSignature(complexity=0.1))
+    hard = eng.task_vector(prefs, TaskSignature(complexity=0.9))
+    iacc = METRICS.index("accuracy")
+    assert hard[iacc] > easy[iacc]
+    assert hard[iacc] == pytest.approx(0.9)
+
+
+def test_kernel_and_numpy_knn_agree(small_mres):
+    """use_kernel=True must route identically to the numpy path."""
+    rng = np.random.default_rng(0)
+    m = MRES()
+    for i in range(64):
+        m.register(make_entry(
+            f"m{i}", accuracy=float(rng.random()),
+            latency_ms=float(rng.random() * 100 + 1),
+            cost=float(rng.random() * 10 + 0.1),
+            helpfulness=float(rng.random()),
+            task_types=("chat",), generalist=True))
+    sig = TaskSignature(task_type="chat", complexity=0.4)
+    d_np = RoutingEngine(m, knn_k=8, use_kernel=False).route("balanced", sig)
+    eng_k = RoutingEngine(m, knn_k=8, use_kernel=True)
+    eng_k._kernel_min_n = 0
+    d_k = eng_k.route("balanced", sig)
+    assert d_np.model == d_k.model
+
+
+def test_profiles_resolve():
+    for name in PROFILES:
+        p = resolve(name)
+        assert p.validate() is p
+    with pytest.raises(KeyError):
+        resolve("no-such-profile")
+    p = resolve({"accuracy": 0.9})
+    assert p.vector()[METRICS.index("accuracy")] == pytest.approx(0.9)

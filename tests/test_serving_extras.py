@@ -1,0 +1,116 @@
+"""Tests: flash-decode kernel mode, telemetry ledger, checkpoint-backed
+runners."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.preferences import TaskSignature
+from repro.core.telemetry import RouteEvent, Telemetry
+from repro.kernels import ops as K
+from repro.serving.runner import ModelRunner
+
+RNG = np.random.default_rng(1)
+
+
+# ----------------------------------------------------------------------
+# flash-decode (per-sequence valid lengths)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("C,blk", [(64, 32), (100, 32), (33, 16)])
+def test_flash_decode_matches_masked_reference(C, blk):
+    B, Hq, Hkv, hd = 3, 4, 2, 64
+    q = jnp.asarray(RNG.standard_normal((B, 1, Hq, hd)), jnp.float32)
+    kc = jnp.asarray(RNG.standard_normal((B, C, Hkv, hd)), jnp.float32)
+    vc = jnp.asarray(RNG.standard_normal((B, C, Hkv, hd)), jnp.float32)
+    pos = jnp.asarray([0, C // 2, C - 1], jnp.int32)
+    out = K.flash_decode(q, kc, vc, pos, blk_k=blk)
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, 1, Hkv, G, hd)
+    s = jnp.einsum("blkgd,bmkd->bkglm", qf, kc) / math.sqrt(hd)
+    valid = jnp.arange(C)[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, None, None, :], s, -jnp.inf)
+    want = jnp.einsum("bkglm,bmkd->blkgd", jax.nn.softmax(s, -1),
+                      vc).reshape(B, 1, Hq, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_default_valid_unchanged():
+    """Without kv_valid the kernel behaves exactly as before."""
+    from repro.kernels import ref as R
+    B, L, H, hd = 2, 70, 2, 32
+    q = jnp.asarray(RNG.standard_normal((B, L, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, L, H, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, L, H, hd)), jnp.float32)
+    o1 = K.flash_attention(q, k, v, blk_q=32, blk_k=32)
+    o2 = R.mha_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------------------------
+# telemetry
+# ----------------------------------------------------------------------
+
+def _event(model, fallback="", cost=1.0, ts=0.0):
+    return RouteEvent(ts=ts, model=model, task_type="chat",
+                      domain="general", complexity=0.5, fallback=fallback,
+                      analyzer_s=0.001, route_s=0.0002, sim_cost=cost)
+
+
+def test_telemetry_aggregates():
+    t = Telemetry(window_s=10)
+    t.record(_event("a", ts=100.0))
+    t.record(_event("a", fallback="generalist", ts=101.0))
+    t.record(_event("b", cost=5.0, ts=102.0))
+    t.attach_thumbs("a", True)
+    t.attach_thumbs("b", False)
+    agg = t.per_model()
+    assert agg["a"]["requests"] == 2
+    assert agg["a"]["fallback_rate"] == pytest.approx(0.5)
+    assert agg["a"]["satisfaction"] == 1.0
+    assert agg["b"]["satisfaction"] == 0.0
+    assert t.fallback_rate() == pytest.approx(1 / 3)
+    assert t.qps(now=105.0) == pytest.approx(3 / 10)
+    assert t.qps(now=200.0) == 0.0
+    p = t.latency_percentiles()
+    assert p["p50"] == pytest.approx(0.0012, rel=1e-3)
+
+
+def test_telemetry_wired_into_orchestrator():
+    from repro.core.analyzer import AnalyzerConfig, TaskAnalyzer
+    from repro.core.orchestrator import OptiRoute
+    from repro.serving.catalog import build_catalog
+    mres = build_catalog(archs=["llama3.2-1b", "mamba2-1.3b"])
+    an = TaskAnalyzer(AnalyzerConfig(d_model=32, n_layers=1, d_ff=64,
+                                     max_len=32))
+    tel = Telemetry()
+    router = OptiRoute(mres, an, telemetry=tel)
+    rq = router.route("hello can you help me with travel", "balanced")
+    router.give_feedback(rq, thumbs_up=True)
+    s = tel.summary()
+    assert s["events"] == 1
+    assert rq.decision.model in s["per_model"]
+
+
+# ----------------------------------------------------------------------
+# checkpoint-backed runners
+# ----------------------------------------------------------------------
+
+def test_runner_checkpoint_roundtrip(tmp_path):
+    cfg = get_smoke("llama3.2-1b")
+    r1 = ModelRunner(cfg, seed=3)
+    p = str(tmp_path / "m.npz")
+    r1.save_checkpoint(p, {"note": "test"})
+    r2 = ModelRunner.from_checkpoint(cfg, p)
+    assert r2.meta["config"] == cfg.name
+    toks = (np.arange(8, dtype=np.int32) + 2)[None]
+    g1 = r1.generate(toks, max_new=2)
+    g2 = r2.generate(toks, max_new=2)
+    np.testing.assert_array_equal(g1.tokens, g2.tokens)
+    np.testing.assert_allclose(g1.logits_last, g2.logits_last,
+                               rtol=1e-5, atol=1e-5)
