@@ -61,6 +61,55 @@ class FeedbackStore:
             return np.array([self._bias.get((c, m), 0.0) for m in models],
                             np.float32)
 
+    def bias_batch(self, sigs: Sequence[TaskSignature],
+                   models: Sequence[str]) -> np.ndarray:
+        """(B, N) bias matrix for the batched routing path.
+
+        Cost is O(B + |store| + unique_clusters * hits) — rows sharing a
+        task cluster are filled once and broadcast, and clusters with no
+        recorded feedback stay at the zero default.
+        """
+        out = np.zeros((len(sigs), len(models)), np.float32)
+        clusters: Dict[Cluster, List[int]] = {}
+        for i, s in enumerate(sigs):
+            clusters.setdefault(cluster_of(s), []).append(i)
+        with self._lock:
+            if not self._bias:
+                return out
+            name_col = {m: j for j, m in enumerate(models)}
+            hits: Dict[Cluster, List[Tuple[int, float]]] = {}
+            for (c, m), v in self._bias.items():
+                j = name_col.get(m)
+                if j is not None and c in clusters:
+                    hits.setdefault(c, []).append((j, v))
+        for c, rows in clusters.items():
+            pairs = hits.get(c)
+            if not pairs:
+                continue
+            row = np.zeros(len(models), np.float32)
+            for j, v in pairs:
+                row[j] = v
+            out[rows] = row
+        return out
+
+    def bias_for(self, sigs: Sequence[TaskSignature],
+                 models: Sequence[str], idx: np.ndarray) -> np.ndarray:
+        """(B, k) bias at the candidate columns ``idx`` (B, k).
+
+        The routing hot path only scores <= k candidates per query, so
+        this gathers B * k dict entries instead of materializing the
+        full (B, N) matrix ``bias_batch`` builds.
+        """
+        out = np.zeros(idx.shape, np.float32)
+        with self._lock:
+            if not self._bias:
+                return out
+            get = self._bias.get
+            for b, (sig, row) in enumerate(zip(sigs, idx.tolist())):
+                c = cluster_of(sig)
+                out[b] = [get((c, models[j]), 0.0) for j in row]
+        return out
+
     def events(self) -> List[FeedbackEvent]:
         with self._lock:
             return list(self._log)

@@ -2,9 +2,13 @@
 
 Ties together: user preferences -> Task Analyzer -> Routing Engine over
 the MRES -> (optional) model-merging fallback -> inference execution ->
-feedback loop.  Two operating modes:
+feedback loop.  Three operating modes:
 
   * interactive — every query is analyzed and routed individually;
+  * batched per-query (``route_all``) — the whole request batch is
+    analyzed in one analyzer forward and routed in one vectorized
+    ``route_many`` pass, each query still getting its own decision
+    (the serving engine's default path);
   * batch       — a ~2% sample of the batch is analyzed, the aggregate
                   signature routes the WHOLE batch to one model
                   (amortizes the analyzer; paper §3).
@@ -23,7 +27,8 @@ from repro.core.analyzer import TaskAnalyzer
 from repro.core.feedback import FeedbackStore
 from repro.core.merging import ModelMerger
 from repro.core.mres import MRES, ModelEntry
-from repro.core.preferences import TaskSignature, UserPreferences, resolve
+from repro.core.preferences import (TaskSignature, UserPreferences, resolve,
+                                    resolve_batch)
 from repro.core.routing import RoutingDecision, RoutingEngine
 
 
@@ -38,7 +43,8 @@ class RoutedQuery:
 
 
 class OptiRoute:
-    """The deployable facade: ``route`` / ``route_batch`` / ``serve``."""
+    """The deployable facade:
+    ``route`` / ``route_all`` / ``route_batch`` / ``serve``."""
 
     def __init__(self, mres: MRES, analyzer: TaskAnalyzer, *,
                  feedback: Optional[FeedbackStore] = None,
@@ -63,20 +69,66 @@ class OptiRoute:
         sig = self.analyzer.analyze(text)
         t1 = time.time()
         decision = self.engine.route(prefs, sig)
-        t2 = time.time()
         if (self.merger is not None
                 and decision.score < self.merger.score_threshold):
             merged = self.merger.maybe_merge(resolve(prefs), sig,
                                              decision.score)
             if merged is not None:     # re-route against the grown catalog
                 decision = self.engine.route(prefs, sig)
+        t2 = time.time()               # close AFTER the merge + re-route
         rq = RoutedQuery(text=text, sig=sig, decision=decision,
                          analyzer_s=t1 - t0, route_s=t2 - t1)
+        self._record(rq)
+        return rq
+
+    def _record(self, rq: RoutedQuery) -> None:
         if self.telemetry is not None:
-            entry = self.mres.entry(decision.model)
+            entry = self.mres.entry(rq.decision.model)
             self.telemetry.record_decision(
                 rq, sim_cost=entry.raw_metrics.get("cost_per_mtok", 0.0))
-        return rq
+
+    # --------------------- batched per-query ---------------------
+    def route_all(self, texts: Sequence[str], prefs) -> List[RoutedQuery]:
+        """Analyze and route every query in one vectorized pass.
+
+        Unlike ``route_batch`` (sample-and-aggregate, one decision for
+        the whole batch), every query gets its own signature and
+        decision; the analyzer runs as one batched forward and the
+        Routing Engine as one ``route_many`` call.  ``prefs`` is a
+        single prefs/profile (broadcast) or one per query.  Reported
+        per-query timings are the batch cost amortized over B.
+        """
+        if len(texts) == 0:
+            return []
+        B = len(texts)
+        prefs_list = resolve_batch(prefs, B)
+        if len(prefs_list) != B:
+            raise ValueError(f"prefs batch size {len(prefs_list)} != "
+                             f"text batch size {B}")
+        t0 = time.time()
+        sigs = self.analyzer.analyze_batch(list(texts))
+        t1 = time.time()
+        decisions = self.engine.route_many(prefs_list, sigs)
+        if self.merger is not None:
+            low = [i for i, d in enumerate(decisions)
+                   if d.score < self.merger.score_threshold]
+            grew = False
+            for i in low:
+                if self.merger.maybe_merge(prefs_list[i], sigs[i],
+                                           decisions[i].score) is not None:
+                    grew = True
+            if grew:                   # re-route low scorers in one pass
+                redo = self.engine.route_many(
+                    [prefs_list[i] for i in low], [sigs[i] for i in low])
+                for j, i in enumerate(low):
+                    decisions[i] = redo[j]
+        t2 = time.time()
+        out = [RoutedQuery(text=t, sig=s, decision=d,
+                           analyzer_s=(t1 - t0) / B, route_s=(t2 - t1) / B)
+               for t, s, d in zip(texts, sigs, decisions)]
+        for rq in out:
+            self._record(rq)
+        return out
 
     # --------------------------- batch ---------------------------
     def route_batch(self, texts: Sequence[str], prefs, *,
@@ -89,6 +141,9 @@ class OptiRoute:
         must handle the hardest sampled query).
         """
         n = len(texts)
+        if n == 0:
+            raise ValueError("route_batch requires at least one text; "
+                             "got an empty batch")
         k = max(1, int(round(n * self.batch_sample_frac)))
         rng = np.random.default_rng(seed)
         pick = rng.choice(n, size=min(k, n), replace=False)

@@ -11,6 +11,7 @@ Profiles encapsulate weight presets for non-expert users
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
+from types import MappingProxyType
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -37,14 +38,29 @@ DOMAINS: Tuple[str, ...] = (
 
 @dataclass(frozen=True)
 class UserPreferences:
-    """Explicit 0-1 weights per metric. Missing metrics default to 0.25."""
+    """Explicit 0-1 weights per metric. Missing metrics default to 0.25.
+
+    Immutable: ``weights`` is frozen into a read-only mapping at
+    construction (use ``with_weight`` to derive variants), which makes
+    the memoized ``vector()`` sound."""
     weights: Dict[str, float] = field(default_factory=dict)
     profile: Optional[str] = None
 
+    def __post_init__(self):
+        object.__setattr__(self, "weights",
+                           MappingProxyType(dict(self.weights)))
+
     def vector(self) -> np.ndarray:
-        w = np.array([float(self.weights.get(m, 0.25)) for m in METRICS],
-                     dtype=np.float32)
-        return np.clip(w, 0.0, 1.0)
+        """Weight vector over METRICS, memoized (the routing hot path
+        re-reads it constantly).  Treat the returned array as frozen —
+        copy before mutating."""
+        v = self.__dict__.get("_vec")
+        if v is None:
+            w = np.array([float(self.weights.get(m, 0.25)) for m in METRICS],
+                         dtype=np.float32)
+            v = np.clip(w, 0.0, 1.0)
+            object.__setattr__(self, "_vec", v)
+        return v
 
     def with_weight(self, metric: str, value: float) -> "UserPreferences":
         assert metric in METRICS, metric
@@ -99,6 +115,17 @@ def resolve(prefs_or_profile) -> UserPreferences:
     if isinstance(prefs_or_profile, dict):
         return UserPreferences(weights=prefs_or_profile).validate()
     raise TypeError(type(prefs_or_profile))
+
+
+def resolve_batch(prefs_batch, batch_size: int) -> "list[UserPreferences]":
+    """Resolve a batch of preferences for the array-first routing path.
+
+    Accepts a single prefs/profile-name/weights-dict (broadcast to the
+    whole batch) or a sequence with one element per query.
+    """
+    if isinstance(prefs_batch, (UserPreferences, str, dict)):
+        return [resolve(prefs_batch)] * batch_size
+    return [resolve(p) for p in prefs_batch]
 
 
 @dataclass(frozen=True)

@@ -1,18 +1,30 @@
-"""Routing Engine (paper §3.4).
+"""Routing Engine (paper §3.4) — batched, array-first.
 
-Pipeline per query:
-  1. task vector  = user preference weights, with the accuracy axis
-     raised to the analyzer's complexity estimate (harder task => demand
-     more capable models);
-  2. kNN stage    = cosine-similarity top-k against the MRES embedding
-     matrix (Pallas ``router_topk`` kernel for large catalogs, numpy for
-     small ones);
-  3. hierarchical filtering = task-type mask, then domain mask (only
-     applied when the analyzer is confident);
-  4. scoring      = user-weighted sum of normalized metrics + feedback
-     bias; argmax wins;
-  5. fallback     = if filters empty the candidate set: widen kNN to the
-     whole catalog -> drop the domain filter -> generalist models.
+The hot path is ``route_many``: every query in a batch flows through the
+same vectorized pipeline, and ``route`` is the B=1 wrapper around it.
+
+Batched pipeline (B queries, N catalog entries, M metric axes):
+  1. task vectors  = (B, M) array of user preference weights, with the
+     accuracy axis raised to the analyzer's complexity estimate (harder
+     task => demand more capable models);
+  2. kNN stage     = one batched cosine-similarity top-k against the
+     MRES embedding matrix with the hierarchical task-type/domain
+     filter masks fused into the search (a single Pallas ``router_topk``
+     kernel call with a per-query (B, N) mask for large catalogs, a
+     masked numpy top-k for small ones).  Per-query masks are row
+     lookups into the MRES's cached stacked mask matrices;
+  3. fallback      = staged boolean masks evaluated per row:
+     fused-kNN -> widened-kNN (all rows passing both filters) ->
+     task-type-only -> generalist (paper §3.4) -> any.  The first
+     non-empty stage becomes the candidate set;
+  4. scoring       = one (B, M) x (M, N) matmul of user weights against
+     the normalized metric embeddings plus a vectorized (B, N) feedback
+     bias; per-row argmax over the candidate mask wins.
+
+Filters only apply when the analyzer is confident (per query).  With the
+masks fused into the kNN, the candidate set is the k best models *among
+those passing the filters*, so the widened-kNN stage only fires as a
+safety net when the fused search returns nothing usable.
 """
 from __future__ import annotations
 
@@ -21,11 +33,20 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.mres import MRES
-from repro.core.preferences import (METRICS, TaskSignature, UserPreferences,
-                                    resolve)
+from repro.core.mres import (BIAS_COL, DM_COL, MASK_BONUS, MRES, ROUTE_COLS,
+                             TT_COL)
+from repro.core.preferences import (DOMAINS, METRICS, TASK_TYPES,
+                                    TaskSignature, UserPreferences, resolve,
+                                    resolve_batch)
 
 _ACC = METRICS.index("accuracy")
+_TT_IDX = {t: j for j, t in enumerate(TASK_TYPES)}
+_DM_IDX = {d: j for j, d in enumerate(DOMAINS)}
+_TT_ANY = len(TASK_TYPES)        # the matrices' all-True "no filter" row
+_DM_ANY = len(DOMAINS)
+
+# fallback ladder stage names, in the order the stages are tried
+FALLBACK_LADDER = ("", "widened-knn", "task-type-only", "generalist", "any")
 
 
 def cosine_sim(emb: np.ndarray, t: np.ndarray) -> np.ndarray:
@@ -33,6 +54,39 @@ def cosine_sim(emb: np.ndarray, t: np.ndarray) -> np.ndarray:
     en = np.linalg.norm(emb, axis=1) + 1e-9
     tn = np.linalg.norm(t) + 1e-9
     return (emb @ t) / (en * tn)
+
+
+def _topk_two_level(ms: np.ndarray, k: int, chunk: int = 128
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Row-wise top-k of a (B, N) score matrix by chunked argmax.
+
+    One full pass computes per-chunk maxima, then each of the k
+    extraction rounds only touches (B,) chunk maxima plus one (B, chunk)
+    gather — O(B (N + k * chunk)) instead of introselect's per-row
+    partition, and measurably faster for small k at serving batch
+    sizes.  MUTATES ``ms``.  Returns (vals, idx) with vals descending.
+    """
+    B, n = ms.shape
+    C = -(-n // chunk)
+    if C * chunk != n:                   # pad the tail chunk
+        padded = np.full((B, C * chunk), -np.inf, np.float32)
+        padded[:, :n] = ms
+        ms = padded
+    m3 = ms.reshape(B, C, chunk)
+    mx = m3.max(axis=2)                              # (B, C)
+    rows = np.arange(B)
+    vals = np.empty((B, k), np.float32)
+    idx = np.empty((B, k), np.int64)
+    for j in range(k):
+        cj = np.argmax(mx, axis=1)                   # (B,)
+        block = m3[rows, cj]                         # (B, chunk) copy
+        aj = block.argmax(axis=1)
+        vals[:, j] = block[rows, aj]
+        idx[:, j] = cj * chunk + aj
+        m3[rows, cj, aj] = -np.inf                   # pop the winner
+        block[rows, aj] = -np.inf
+        mx[rows, cj] = block.max(axis=1)
+    return vals, idx
 
 
 @dataclass
@@ -72,75 +126,176 @@ class RoutingEngine:
         return v
 
     # ------------------------------------------------------------------
-    def _knn(self, emb: np.ndarray, t: np.ndarray, k: int) -> np.ndarray:
-        """Indices of the k most cosine-similar catalog rows."""
+    def _knn_batch(self, T: np.ndarray, k: int, ti: np.ndarray,
+                   di: np.ndarray, snap) -> Tuple[np.ndarray, np.ndarray]:
+        """Mask-fused batched kNN: (vals (B, k), idx (B, k)).
+
+        Rows failing the hierarchical filters surface as vals == -inf.
+        Large catalogs go through one Pallas ``router_topk`` call with a
+        per-query (B, N) mask; the numpy path fuses the masks into a
+        single matmul against the MRES's augmented routing matrix (see
+        ``repro.core.mres``) — valid rows score their pure cosine,
+        filtered rows drop below -2 — then top-k selects per row.
+        """
+        emb, _, tt_matrix, dm_matrix, _, route_mat = snap
+        B = T.shape[0]
         if self.use_kernel and emb.shape[0] >= self._kernel_min_n:
             from repro.kernels import ops as K
             if self._kernel_fn is None:
                 self._kernel_fn = K.router_topk
-            _, idx = self._kernel_fn(emb, t[None], k)
-            return np.asarray(idx[0])
-        sims = cosine_sim(emb, t)
-        return np.argsort(-sims)[:k]
+            valid = tt_matrix[ti] & dm_matrix[di]             # (B, N)
+            vals, idx = self._kernel_fn(emb, T, k, mask=valid)
+            return np.asarray(vals), np.asarray(idx)
+        # fused matmul: [T/|T|, onehot(tt), onehot(dm), -2b] @ A^T
+        tn = np.sqrt(np.einsum("bm,bm->b", T, T)) + 1e-9
+        Q = np.zeros((B, ROUTE_COLS), np.float32)
+        Q[:, :T.shape[1]] = T / tn[:, None]
+        rows = np.arange(B)
+        Q[rows, TT_COL + ti] = 1.0
+        Q[rows, DM_COL + di] = 1.0
+        Q[:, BIAS_COL] = -2.0 * MASK_BONUS
+        ms = Q @ route_mat.T                                  # (B, N)
+        n = ms.shape[1]
+        if B >= 4 and k <= 16 and n >= 1024:
+            vals, idx = _topk_two_level(ms, k)
+        else:
+            # argpartition on the LAST k cols avoids negating the matrix
+            idx = (np.argpartition(ms, n - k, axis=1)[:, n - k:] if k < n
+                   else np.broadcast_to(np.arange(n), ms.shape))
+            vals = np.take_along_axis(ms, idx, axis=1)
+        return np.where(vals > -2.0, vals, -np.inf), idx
 
     # ------------------------------------------------------------------
     def route(self, prefs_or_profile, sig: TaskSignature) -> RoutingDecision:
-        prefs = resolve(prefs_or_profile)
-        sig = sig.validate()
-        emb = self.mres.embeddings()
+        """Single-query routing — thin B=1 wrapper over ``route_many``."""
+        return self.route_many([prefs_or_profile], [sig])[0]
+
+    # ------------------------------------------------------------------
+    def route_many(self, prefs_batch, sigs: Sequence[TaskSignature]
+                   ) -> List[RoutingDecision]:
+        """Route a batch of queries in one vectorized pass.
+
+        ``prefs_batch`` is either one prefs/profile/dict applied to every
+        query or a sequence of them (one per signature).  Returns one
+        ``RoutingDecision`` per signature, decision-identical to calling
+        ``route`` per query.
+        """
+        sigs = [s.validate() for s in sigs]
+        B = len(sigs)
+        prefs_list = resolve_batch(prefs_batch, B)
+        if len(prefs_list) != B:
+            raise ValueError(f"prefs batch size {len(prefs_list)} != "
+                             f"signature batch size {B}")
+        if B == 0:
+            return []
+        snap = self.mres.snapshot()
+        emb, names, tt_matrix, dm_matrix, gmask, _ = snap
         n = emb.shape[0]
         if n == 0:
             raise RuntimeError("empty MRES catalog")
-        t = self.task_vector(prefs, sig)
-        sims = cosine_sim(emb, t)
-        stage: Dict[str, int] = {"catalog": n}
 
+        # (B, M) scoring weights and task vectors (one vector() pass)
+        W = np.stack([p.vector() for p in prefs_list])
+        T = W.copy()
+        if getattr(self, "use_complexity", True):
+            cx = np.array([s.complexity for s in sigs], np.float32)
+            T[:, _ACC] = np.maximum(T[:, _ACC], cx)
+
+        # per-query hierarchical filter rows of the cached mask matrices
+        # (the all-True row when the analyzer is not confident)
+        thr = self.confidence_threshold
+        ti = np.array([_TT_IDX[s.task_type] if s.confidence >= thr
+                       else _TT_ANY for s in sigs])
+        di = np.array([_DM_IDX[s.domain] if s.confidence >= thr
+                       else _DM_ANY for s in sigs])
+
+        # stage 1: batched kNN with the filter masks fused in
         k = min(self.knn_k, n)
-        knn_idx = self._knn(emb, t, k)
-        stage["knn"] = len(knn_idx)
+        vals, idx = self._knn_batch(T, k, ti, di, snap)
+        finite = np.isfinite(vals) & (idx >= 0)
+        idx = np.where(finite, idx, 0)        # safe gather index
+        has_primary = finite.any(axis=1)                          # (B,)
 
-        confident = sig.confidence >= self.confidence_threshold
-        tt_mask, dm_mask = self.mres.masks(
-            sig.task_type if confident else None,
-            sig.domain if confident else None)
-
-        kind = ""
-        cand = [i for i in knn_idx if tt_mask[i] and dm_mask[i]]
-        stage["filtered"] = len(cand)
-        if not cand:
-            # fallback 1: widen the kNN to the whole catalog
-            kind = "widened-knn"
-            cand = [i for i in range(n) if tt_mask[i] and dm_mask[i]]
-        if not cand:
-            # fallback 2: drop the domain filter
-            kind = "task-type-only"
-            cand = [i for i in range(n) if tt_mask[i]]
-        if not cand:
-            # fallback 3: generalist models (paper §3.4)
-            kind = "generalist"
-            gmask = self.mres.generalist_mask()
-            cand = [i for i in range(n) if gmask[i]]
-        if not cand:
-            kind = "any"
-            cand = list(range(n))
-        stage["candidates"] = len(cand)
-
-        names = [self.mres.entries[i].name for i in cand]
-        w = prefs.vector()
-        scores = emb[cand] @ w
+        # score ONLY the <=k fused-kNN candidates: a (B, k, M) gather +
+        # einsum instead of a full (B, N) matmul, and a (B, k) feedback
+        # gather instead of the full (B, N) bias matrix — rows that
+        # fell off the ladder (no valid candidate at all) take the
+        # per-row slow path below, which is exercised a handful of
+        # times per batch at most.
+        cscores = np.einsum("bm,bkm->bk", W, emb[idx])            # (B, k)
         if self.feedback is not None:
-            bias = self.feedback.bias(sig, names)
-            scores = scores + self.feedback_weight * bias
-        order = np.argsort(-scores)
-        best = int(order[0])
-        ranked = [(names[i], float(scores[i])) for i in order[: max(5, k)]]
+            cscores = cscores + self.feedback_weight * \
+                self.feedback.bias_for(sigs, names, idx)
+        cscores = np.where(finite, cscores, -np.inf)
+        order = np.argsort(-cscores, axis=1, kind="stable")       # (B, k)
+        knn_found = finite.sum(axis=1).tolist()
+
+        # sort the per-row candidate arrays once, then build decisions
+        # from plain python lists (cheap scalar access)
+        idx_s = np.take_along_axis(idx, order, axis=1).tolist()
+        sc_s = np.take_along_axis(cscores, order, axis=1).tolist()
+        fin_s = np.take_along_axis(finite, order, axis=1).tolist()
+        sim_s = np.take_along_axis(vals, order, axis=1)[:, 0].tolist()
+
+        r = min(max(5, k), n)
+        out: List[Optional[RoutingDecision]] = [None] * B
+        for b in np.flatnonzero(has_primary):
+            ranked = [(names[j], s) for j, s, f in
+                      zip(idx_s[b], sc_s[b], fin_s[b]) if f]
+            out[b] = RoutingDecision(
+                model=names[idx_s[b][0]],
+                score=sc_s[b][0],
+                task_vector=T[b],
+                similarity=sim_s[b],
+                used_fallback=False, fallback_kind="",
+                candidates=ranked[:r],
+                stage_sizes={"catalog": n, "knn": k,
+                             "filtered": knn_found[b],
+                             "candidates": knn_found[b]})
+
+        # fallback ladder as staged boolean masks (per affected row):
+        # widened-kNN (all rows passing both filters) -> task-type-only
+        # -> generalist -> any.  Mask rows (and the full per-row
+        # feedback bias) are materialized lazily here because the fast
+        # path above never needs them.  With the filters fused into the
+        # kNN the widened-kNN rung is a pure safety net — any row
+        # passing both filters already surfaced in the top-k — but it
+        # stays in the ladder to keep fallback totality independent of
+        # the kNN backend's numerics.
+        for b in np.flatnonzero(~has_primary):
+            tt_b = tt_matrix[ti[b]]
+            bias_b = (self.feedback.bias(sigs[b], names)
+                      if self.feedback is not None else None)
+            out[b] = self._route_fallback(
+                b, emb, names, T, W,
+                (tt_b & dm_matrix[di[b]], tt_b, gmask), bias_b,
+                sigs[b], n, k, r)
+        return out                      # type: ignore[return-value]
+
+    # ------------------------------------------------------------------
+    def _route_fallback(self, b: int, emb, names, T, W, ladder, bias_row,
+                        sig: TaskSignature, n: int, k: int, r: int
+                        ) -> RoutingDecision:
+        """Fallback ladder for one row whose fused kNN came up empty."""
+        for kind, mask in zip(FALLBACK_LADDER[1:], ladder):
+            if mask.any():
+                break
+        else:
+            kind, mask = FALLBACK_LADDER[-1], np.ones(n, bool)
+        cidx = np.flatnonzero(mask)
+        scores = emb[cidx] @ W[b]
+        if bias_row is not None:
+            scores = scores + self.feedback_weight * bias_row[cidx]
+        order = np.argsort(-scores, kind="stable")
+        best = int(cidx[order[0]])
+        sim = float(cosine_sim(emb[best:best + 1], T[b])[0])
         return RoutingDecision(
             model=names[best],
-            score=float(scores[best]),
-            task_vector=t,
-            similarity=float(sims[cand[best]]),
-            candidates=ranked,
-            used_fallback=bool(kind),
-            fallback_kind=kind,
-            stage_sizes=stage,
-        )
+            score=float(scores[order[0]]),
+            task_vector=T[b],
+            similarity=sim,
+            candidates=[(names[int(cidx[j])], float(scores[j]))
+                        for j in order[:r]],
+            used_fallback=True, fallback_kind=kind,
+            stage_sizes={"catalog": n, "knn": k, "filtered": 0,
+                         "candidates": int(len(cidx))})

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG_INF = float("-inf")
 
 
@@ -78,7 +80,7 @@ def moe_gating_pallas(logits: jnp.ndarray, k: int, *, blk_t: int = 256,
             jax.ShapeDtypeStruct((nblk, E), jnp.float32),
             jax.ShapeDtypeStruct((nblk, E), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(lp)

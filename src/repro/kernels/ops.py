@@ -49,7 +49,9 @@ def router_topk(emb, queries, k: int,
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Weighted-cosine top-k over the catalog (see kernels/ref.py).
 
-    emb (N, D); queries (Q, D); mask (N,) bool; weights (D,).
+    emb (N, D); queries (Q, D); mask (N,) or (Q, N) bool — a 2-D mask
+    gives every query its own hierarchical-filter row (the batched
+    routing path fuses task-type & domain masks here); weights (D,).
     Returns (vals (Q, k) f32, idx (Q, k) i32).  Masked / padded rows
     surface as vals == -inf.
     """
@@ -68,9 +70,10 @@ def router_topk(emb, queries, k: int,
 
     maskf = (jnp.asarray(mask, jnp.float32) if mask is not None
              else jnp.ones((N,), jnp.float32))
+    maskf = jnp.broadcast_to(maskf, (Q, N)) if maskf.ndim == 1 else maskf
     ewp = _pad_to(_pad_to(ew, LANE, 1), blk_n, 0)
     qnp = _pad_to(_pad_to(qn, LANE, 1), blk_q, 0)
-    maskp = _pad_to(maskf, blk_n, 0)                         # pad rows -> 0 -> -inf
+    maskp = _pad_to(_pad_to(maskf, blk_n, 1), blk_q, 0)      # pad -> 0 -> -inf
 
     vals, idx = router_topk_pallas(qnp, ewp, maskp, k, blk_q=blk_q,
                                    blk_n=blk_n, interpret=interp)

@@ -24,9 +24,10 @@ def router_topk(emb: jnp.ndarray, queries: jnp.ndarray, k: int,
 
     emb:     (N, D) catalog metric embeddings.
     queries: (Q, D) task vectors.
-    mask:    (N,) bool — rows excluded by the hierarchical filter get
-             score -inf (they can still appear in the idx tail when
-             fewer than k rows survive; callers check vals > -inf).
+    mask:    (N,) or (Q, N) bool — rows excluded by the hierarchical
+             filter get score -inf (they can still appear in the idx
+             tail when fewer than k rows survive; callers check
+             vals > -inf).  A 2-D mask is per-query.
     weights: (D,) per-axis importance applied INSIDE the dot product
              (weighted cosine: sim = sum_d w_d e_d q_d / (|e||q|)).
     Returns (vals (Q, k) f32 descending, idx (Q, k) int32).
@@ -38,7 +39,8 @@ def router_topk(emb: jnp.ndarray, queries: jnp.ndarray, k: int,
     ew = emb * (weights.astype(jnp.float32)[None, :] if weights is not None else 1.0)
     scores = (q / qn) @ (ew / en).T                      # (Q, N)
     if mask is not None:
-        scores = jnp.where(mask[None, :], scores, -jnp.inf)
+        mask2 = mask if mask.ndim == 2 else mask[None, :]
+        scores = jnp.where(mask2, scores, -jnp.inf)
     vals, idx = jax.lax.top_k(scores, k)
     return vals, idx.astype(jnp.int32)
 

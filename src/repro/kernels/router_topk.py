@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG_INF = float("-inf")
 
 
@@ -56,11 +58,11 @@ def _router_topk_kernel(q_ref, emb_ref, mask_ref, vals_ref, idx_ref,
 
     q = q_ref[...].astype(jnp.float32)                      # (BLK_Q, D)
     emb = emb_ref[...].astype(jnp.float32)                  # (BLK_N, D)
-    mask = mask_ref[...]                                    # (BLK_N,)
+    mask = mask_ref[...]                                    # (BLK_Q, BLK_N)
     scores = jax.lax.dot_general(
         q, emb, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)                 # (BLK_Q, BLK_N)
-    scores = jnp.where(mask[None, :] > 0, scores, NEG_INF)
+    scores = jnp.where(mask > 0, scores, NEG_INF)
 
     col0 = jn * blk_n
     col_idx = col0 + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
@@ -81,7 +83,9 @@ def _router_topk_kernel(q_ref, emb_ref, mask_ref, vals_ref, idx_ref,
 def router_topk_pallas(qn: jnp.ndarray, embn: jnp.ndarray, mask: jnp.ndarray,
                        k: int, *, blk_q: int = 8, blk_n: int = 512,
                        interpret: bool = True):
-    """qn (Q, D) unit rows; embn (N, D) unit(+weighted) rows; mask (N,) f32.
+    """qn (Q, D) unit rows; embn (N, D) unit(+weighted) rows;
+    mask (Q, N) f32 — per-query hierarchical filter mask (ops.py
+    broadcasts a shared (N,) mask to all queries).
 
     Q % blk_q == 0, N % blk_n == 0, D padded to 128 (done by ops.py).
     Returns (vals (Q, k) f32, idx (Q, k) i32).
@@ -89,6 +93,7 @@ def router_topk_pallas(qn: jnp.ndarray, embn: jnp.ndarray, mask: jnp.ndarray,
     Q, D = qn.shape
     N = embn.shape[0]
     assert Q % blk_q == 0 and N % blk_n == 0, (Q, N, blk_q, blk_n)
+    assert mask.shape == (Q, N), (mask.shape, Q, N)
     grid = (Q // blk_q, N // blk_n)
 
     kernel = functools.partial(_router_topk_kernel, k=k, blk_n=blk_n)
@@ -98,7 +103,7 @@ def router_topk_pallas(qn: jnp.ndarray, embn: jnp.ndarray, mask: jnp.ndarray,
         in_specs=[
             pl.BlockSpec((blk_q, D), lambda i, j: (i, 0)),
             pl.BlockSpec((blk_n, D), lambda i, j: (j, 0)),
-            pl.BlockSpec((blk_n,), lambda i, j: (j,)),
+            pl.BlockSpec((blk_q, blk_n), lambda i, j: (i, j)),
         ],
         out_specs=[
             pl.BlockSpec((blk_q, k), lambda i, j: (i, 0)),
@@ -112,7 +117,7 @@ def router_topk_pallas(qn: jnp.ndarray, embn: jnp.ndarray, mask: jnp.ndarray,
             pltpu.VMEM((blk_q, k), jnp.float32),
             pltpu.VMEM((blk_q, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qn, embn, mask)

@@ -1,12 +1,12 @@
 """Batched serving engine wired to the router (paper §3.5 inference
 engine + the MLaaS use-case of §2).
 
-Requests arrive as (text, preferences); the engine routes each request
-(interactive mode) or each bucket (batch mode), groups accepted requests
-by their routed model, executes each group as ONE batched generate call
-on that model's runner, and returns per-request results with latency /
-cost accounting.  Thumbs feedback flows back into the router's
-FeedbackStore.
+Requests arrive as (text, preferences); the engine routes ALL requests
+in one vectorized ``route_all`` pass (interactive mode) or one
+sample-and-aggregate call (batch mode), groups requests by their routed
+model, executes each group as ONE batched generate call on that model's
+runner, and returns per-request results with latency / cost accounting.
+Thumbs feedback flows back into the router's FeedbackStore.
 """
 from __future__ import annotations
 
@@ -58,10 +58,15 @@ class ServingEngine:
     def submit(self, requests: Sequence[Request], *,
                mode: str = "interactive") -> List[Response]:
         assert mode in ("interactive", "batch")
+        if not requests:
+            return []
         if mode == "batch":
             return self._submit_batch(requests)
-        # interactive: route each, then group identical (model, max_new)
-        routed = [(r, self.router.route(r.text, r.prefs)) for r in requests]
+        # interactive: ONE vectorized routing pass over all requests,
+        # then group identical (model, max_new) for batched generation
+        routed_q = self.router.route_all([r.text for r in requests],
+                                         [r.prefs for r in requests])
+        routed = list(zip(requests, routed_q))
         groups: Dict[Tuple[str, int], List[int]] = defaultdict(list)
         for i, (r, rq) in enumerate(routed):
             groups[(rq.decision.model, r.max_new)].append(i)

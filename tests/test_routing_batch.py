@@ -1,0 +1,205 @@
+"""Batched routing path: batch/single parity, kernel/numpy parity,
+empty-input handling and telemetry timing (the route_many refactor)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.feedback import FeedbackStore
+from repro.core.mres import MRES
+from repro.core.orchestrator import OptiRoute
+from repro.core.preferences import (DOMAINS, METRICS, TASK_TYPES,
+                                    TaskSignature, UserPreferences)
+from repro.core.routing import RoutingEngine
+from tests.conftest import make_entry
+
+
+def random_catalog(n: int, seed: int = 0) -> MRES:
+    rng = np.random.default_rng(seed)
+    m = MRES()
+    m.register_many([
+        make_entry(
+            f"m{i}",
+            accuracy=float(rng.random()),
+            latency_ms=float(rng.random() * 500 + 1),
+            cost=float(rng.random() * 20 + 0.1),
+            helpfulness=float(rng.random()),
+            harmlessness=float(rng.random()),
+            honesty=float(rng.random()),
+            task_types=tuple(rng.choice(TASK_TYPES,
+                                        size=int(rng.integers(1, 4)),
+                                        replace=False)),
+            domains=tuple(rng.choice(DOMAINS, size=int(rng.integers(1, 3)),
+                                     replace=False)),
+            generalist=bool(rng.random() < 0.3))
+        for i in range(n)])
+    return m
+
+
+def random_queries(b: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    sigs = [TaskSignature(task_type=str(rng.choice(TASK_TYPES)),
+                          domain=str(rng.choice(DOMAINS)),
+                          complexity=float(rng.random()),
+                          confidence=float(rng.random())) for _ in range(b)]
+    prefs = [UserPreferences(weights={m: float(rng.random())
+                                      for m in METRICS}) for _ in range(b)]
+    return prefs, sigs
+
+
+class StubAnalyzer:
+    """Deterministic analyzer stand-in (orchestrator tests only)."""
+
+    def analyze_batch(self, texts):
+        return [TaskSignature(task_type="chat", domain="general",
+                              complexity=0.4) for _ in texts]
+
+    def analyze(self, text):
+        return self.analyze_batch([text])[0]
+
+
+# ----------------------------------------------------------------------
+# batch/single parity
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("b", [1, 7, 64])
+def test_route_many_matches_single_route(b):
+    m = random_catalog(48, seed=3)
+    fb = FeedbackStore()
+    rng = np.random.default_rng(9)
+    for _ in range(40):          # populate some feedback clusters
+        fb.record(TaskSignature(task_type=str(rng.choice(TASK_TYPES)),
+                                domain=str(rng.choice(DOMAINS)),
+                                complexity=float(rng.random())),
+                  f"m{int(rng.integers(48))}", bool(rng.random() < 0.5))
+    eng = RoutingEngine(m, fb, knn_k=8)
+    prefs, sigs = random_queries(b, seed=b)
+    batch = eng.route_many(prefs, sigs)
+    assert len(batch) == b
+    for d_b, p, s in zip(batch, prefs, sigs):
+        d_1 = eng.route(p, s)
+        assert d_b.model == d_1.model
+        assert d_b.fallback_kind == d_1.fallback_kind
+        assert d_b.score == pytest.approx(d_1.score, abs=1e-6)
+        # similarity comes out of a (B, N) f32 matmul whose BLAS
+        # accumulation order varies with B — compare at f32 precision
+        assert d_b.similarity == pytest.approx(d_1.similarity, abs=1e-5)
+        assert [n for n, _ in d_b.candidates] == [n for n, _ in d_1.candidates]
+
+
+def test_route_many_broadcasts_single_prefs():
+    m = random_catalog(16, seed=5)
+    eng = RoutingEngine(m)
+    _, sigs = random_queries(9, seed=5)
+    batch = eng.route_many("balanced", sigs)
+    assert len(batch) == 9
+    for d, s in zip(batch, sigs):
+        assert d.model == eng.route("balanced", s).model
+
+
+def test_route_many_kernel_matches_numpy_path():
+    """Interpret-mode Pallas kernel path == numpy path, incl. masks."""
+    m = random_catalog(96, seed=7)
+    prefs, sigs = random_queries(13, seed=7)
+    eng_np = RoutingEngine(m, knn_k=8, use_kernel=False)
+    eng_k = RoutingEngine(m, knn_k=8, use_kernel=True)
+    eng_k._kernel_min_n = 0
+    d_np = eng_np.route_many(prefs, sigs)
+    d_k = eng_k.route_many(prefs, sigs)
+    for a, b in zip(d_np, d_k):
+        assert a.model == b.model
+        assert a.fallback_kind == b.fallback_kind
+        assert a.score == pytest.approx(b.score, abs=1e-6)
+
+
+def test_route_many_fallback_ladder_engages():
+    """A catalog with no match for the signature walks the ladder."""
+    m = MRES()
+    m.register(make_entry("gen", task_types=("chat",), generalist=True))
+    m.register(make_entry("coder", task_types=("code",),
+                          domains=("software",)))
+    eng = RoutingEngine(m)
+    d, = eng.route_many("balanced", [TaskSignature(task_type="vqa",
+                                                   domain="healthcare")])
+    assert d.used_fallback and d.fallback_kind == "generalist"
+    assert d.model == "gen"
+
+
+def test_route_many_empty_batch():
+    eng = RoutingEngine(random_catalog(4))
+    assert eng.route_many([], []) == []
+
+
+def test_route_many_mismatched_lengths():
+    eng = RoutingEngine(random_catalog(4))
+    with pytest.raises(ValueError):
+        eng.route_many([UserPreferences()], [TaskSignature(),
+                                             TaskSignature()])
+
+
+# ----------------------------------------------------------------------
+# feedback bias_batch
+# ----------------------------------------------------------------------
+
+def test_bias_batch_matches_per_sig_bias():
+    fb = FeedbackStore()
+    rng = np.random.default_rng(11)
+    names = [f"m{i}" for i in range(12)]
+    sigs = [TaskSignature(task_type=str(rng.choice(TASK_TYPES)),
+                          domain=str(rng.choice(DOMAINS)),
+                          complexity=float(rng.random())) for _ in range(20)]
+    for _ in range(60):
+        fb.record(sigs[int(rng.integers(20))],
+                  names[int(rng.integers(12))], bool(rng.random() < 0.5))
+    mat = fb.bias_batch(sigs, names)
+    assert mat.shape == (20, 12)
+    for i, s in enumerate(sigs):
+        np.testing.assert_allclose(mat[i], fb.bias(s, names), atol=0)
+
+
+# ----------------------------------------------------------------------
+# orchestrator / serving wiring
+# ----------------------------------------------------------------------
+
+def test_route_batch_rejects_empty_input():
+    router = OptiRoute(random_catalog(4), StubAnalyzer())
+    with pytest.raises(ValueError):
+        router.route_batch([], "balanced")
+
+
+def test_route_all_matches_interactive_route():
+    router = OptiRoute(random_catalog(24, seed=2), StubAnalyzer())
+    texts = [f"query {i}" for i in range(10)]
+    all_rq = router.route_all(texts, "cost-effective")
+    assert [rq.decision.model for rq in all_rq] == \
+        [router.route(t, "cost-effective").decision.model for t in texts]
+    assert router.route_all([], "balanced") == []
+
+
+def test_route_timing_covers_merge_path():
+    """route_s must include the merge attempt + re-route (telemetry)."""
+    router = OptiRoute(random_catalog(8), StubAnalyzer())
+
+    class SlowMerger:
+        score_threshold = float("inf")   # always triggers the merge path
+
+        def maybe_merge(self, prefs, sig, score):
+            time.sleep(0.05)
+            return None
+
+    router.merger = SlowMerger()
+    rq = router.route("hello", "balanced")
+    assert rq.route_s >= 0.05
+
+
+def test_serving_submit_empty_and_grouping():
+    from repro.serving.engine import Request, ServingEngine
+    router = OptiRoute(random_catalog(24, seed=4), StubAnalyzer())
+    engine = ServingEngine(router)
+    assert engine.submit([]) == []
+    reqs = [Request(text=f"q{i}", prefs="balanced", id=i) for i in range(6)]
+    out = engine.submit(reqs)
+    assert len(out) == 6
+    # one routing pass, identical prefs + sigs -> identical model
+    assert len({r.model for r in out}) == 1
+    assert engine.summary()["requests"] == 6
