@@ -1,0 +1,300 @@
+"""Benchmark: online adaptive routing (the ``repro.adaptive`` bandit
+layer) vs. the static preference router under non-stationary traffic.
+
+Three sections:
+
+1. Regret under drift — the ``model-degrade`` scenario: the catalog's
+   accuracy leader silently loses most of its true quality mid-episode
+   while its catalog metrics stay stale.  The static router keeps
+   routing to it; the bandit-blended router observes shaped rewards
+   (quality minus cost/latency penalties) and re-routes.  Reports
+   cumulative regret vs. the per-query oracle, plus recovery time, and
+   asserts the bandit beats BOTH the static router (lower regret) and
+   uniform-random choice (higher cumulative reward).
+
+2. Kernel parity — Pallas ``bandit_update`` (interpret mode) against
+   the ``kernels/ref.py`` oracle on the benchmark's shapes.
+
+3. Throughput — batched route+learn (``route_many`` with the adaptive
+   blend + posterior update) must stay within 2x of the static
+   ``route_many`` path at serving batch sizes.
+
+``--smoke`` runs a seconds-scale version of all three for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import save_result, synthetic_entry
+from repro.adaptive import LinearBandit, RewardConfig, RewardShaper
+from repro.core.mres import MRES
+from repro.core.orchestrator import OptiRoute
+from repro.core.preferences import DOMAINS, TaskSignature
+from repro.core.telemetry import Telemetry
+from repro.data.workload import (DriftScenario, NonStationaryWorkload,
+                                 meta_of)
+
+
+class SigAnalyzer:
+    """Analyzer stand-in fed the workload's ground-truth signatures
+    (the benchmark measures the ROUTER's adaptivity, not the analyzer)."""
+
+    def __init__(self):
+        self.sigs: List[TaskSignature] = []
+
+    def analyze_batch(self, texts):
+        assert len(texts) == len(self.sigs)
+        return list(self.sigs)
+
+    def analyze(self, text):
+        return self.sigs[0]
+
+
+def _drift_catalog(n_models: int = 10, seed: int = 0) -> MRES:
+    """Chat catalog with an accuracy spread and varied cost/latency;
+    every model passes the hierarchical filters so adaptivity (not
+    filtering) decides the winner."""
+    rng = np.random.default_rng(seed)
+    m = MRES()
+    m.register_many([
+        synthetic_entry(
+            f"m{i}", accuracy=0.35 + 0.5 * i / max(n_models - 1, 1),
+            latency_ms=float(rng.uniform(30, 300)),
+            cost=float(rng.uniform(0.5, 8.0)),
+            task_types=("chat",), domains=tuple(DOMAINS),
+            generalist=True,
+            helpfulness=float(rng.uniform(0.3, 0.9)),
+            harmlessness=float(rng.uniform(0.3, 0.9)),
+            honesty=float(rng.uniform(0.3, 0.9)))
+        for i in range(n_models)])
+    return m
+
+
+def _episode(wl: NonStationaryWorkload, mres: MRES,
+             shaper: RewardShaper, *, policy: str, prefs: str,
+             adaptive_weight: float, alpha: float, forget: float,
+             seed: int = 0) -> Dict:
+    """Run one routing policy through the scenario; return the reward /
+    regret trajectory.  ``policy`` in {static, linucb, thompson,
+    random}."""
+    sc = wl.sc
+    names = wl.names
+    n = len(names)
+    pen = shaper.penalty_row()                      # (N,) shaped oracle
+    rng = np.random.default_rng(seed + 99)
+    an = SigAnalyzer()
+    bandit: Optional[LinearBandit] = None
+    router: Optional[OptiRoute] = None
+    if policy != "random":
+        if policy in ("linucb", "thompson"):
+            bandit = LinearBandit(n, policy=policy, alpha=alpha,
+                                  forget=forget, seed=seed)
+        router = OptiRoute(mres, an, knn_k=n, telemetry=Telemetry(),
+                           adaptive=bandit,
+                           adaptive_weight=(adaptive_weight
+                                            if bandit is not None else 0.0),
+                           reward_shaper=shaper)
+    reward_t = np.zeros(sc.n_steps)
+    regret_t = np.zeros(sc.n_steps)
+    chosen_log: List[List[str]] = []
+    for t in range(sc.n_steps):
+        batch = wl.batch(t)
+        sigs = [q.sig for q in batch]
+        if policy == "random":
+            chosen = rng.integers(0, n, len(batch))
+            models = [names[j] for j in chosen]
+        else:
+            an.sigs = sigs
+            rqs = router.route_all([q.text for q in batch], prefs)
+            models = [rq.decision.model for rq in rqs]
+            chosen = np.array([wl._col[m] for m in models])
+        # one quality table per step: realized qualities are a gather
+        # of the same matrix the oracle accounting uses
+        Q = wl.quality_matrix(t, sigs)
+        qual = Q[np.arange(len(batch)), chosen]
+        if bandit is not None:
+            router.observe(rqs, qualities=qual)
+        # shaped-reward oracle accounting (same reward the bandit sees)
+        Qs = Q - pen[None, :]
+        realized = qual - pen[chosen]
+        reward_t[t] = realized.sum()
+        regret_t[t] = (Qs.max(axis=1) - realized).sum()
+        chosen_log.append(models)
+    # recovery: steps after the shift until the degraded model stops
+    # winning the batch majority
+    recovery = None
+    deg = wl.degraded_model
+    if deg is not None:
+        for t in range(wl.shift_step, sc.n_steps):
+            top = max(set(chosen_log[t]), key=chosen_log[t].count)
+            if top != deg:
+                recovery = t - wl.shift_step
+                break
+    return {"policy": policy,
+            "cum_reward": float(reward_t.sum()),
+            "cum_regret": float(regret_t.sum()),
+            "regret_series": np.cumsum(regret_t).tolist(),
+            "recovery_steps": recovery}
+
+
+def run_regret(*, n_models: int = 10, steps: int = 80, batch: int = 16,
+               adaptive_weight: float = 2.0, alpha: float = 0.5,
+               forget: float = 0.96, with_thompson: bool = True,
+               verbose: bool = True) -> Dict:
+    mres = _drift_catalog(n_models)
+    shaper = RewardShaper(mres, RewardConfig(cost_weight=0.15,
+                                             latency_weight=0.1))
+    metas = [meta_of(e) for e in mres.entries]
+    # degrade the model the STATIC router prefers: its catalog metrics
+    # go stale mid-episode while it keeps winning the static blend —
+    # exactly the failure mode an online learner must route around
+    sc = DriftScenario(kind="model-degrade", n_steps=steps, batch=batch,
+                       task_type="chat", shift_frac=0.4, seed=7)
+    probe_wl = NonStationaryWorkload(metas, sc)
+    an = SigAnalyzer()
+    probe = OptiRoute(mres, an, knn_k=n_models)
+    pb = probe_wl.batch(0)
+    an.sigs = [q.sig for q in pb]
+    picked = [rq.decision.model
+              for rq in probe.route_all([q.text for q in pb],
+                                        "accuracy-first")]
+    sc = DriftScenario(kind="model-degrade", n_steps=steps, batch=batch,
+                       task_type="chat", shift_frac=0.4, seed=7,
+                       degrade_model=max(set(picked), key=picked.count))
+    wl = NonStationaryWorkload(metas, sc)
+    policies = ["static", "linucb", "random"]
+    if with_thompson:
+        policies.insert(2, "thompson")
+    rows = [_episode(wl, mres, shaper, policy=p, prefs="accuracy-first",
+                     adaptive_weight=adaptive_weight, alpha=alpha,
+                     forget=forget, seed=11) for p in policies]
+    by = {r["policy"]: r for r in rows}
+    if verbose:
+        for r in rows:
+            print(f"  {r['policy']:>9}: cum_reward={r['cum_reward']:8.1f}  "
+                  f"cum_regret={r['cum_regret']:8.1f}  "
+                  f"recovery={r['recovery_steps']}")
+    # the adaptive claims (acceptance criteria)
+    assert by["linucb"]["cum_regret"] < by["static"]["cum_regret"], by
+    assert by["linucb"]["cum_reward"] > by["random"]["cum_reward"], by
+    return {"scenario": "model-degrade", "steps": steps, "batch": batch,
+            "degraded": wl.degraded_model, "shift_step": wl.shift_step,
+            "episodes": rows}
+
+
+def run_parity(verbose: bool = True) -> None:
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as K
+    from repro.kernels import ref as R
+    rng = np.random.default_rng(5)
+    Bu, Bs, N, D = 32, 24, 150, 9
+    x_up = rng.random((Bu, D)).astype(np.float32)
+    w = np.zeros((Bu, N), np.float32)
+    w[np.arange(Bu), rng.integers(0, N, Bu)] = 1.0
+    r = rng.random(Bu).astype(np.float32)
+    xs = rng.random((Bs, D)).astype(np.float32)
+    theta = rng.standard_normal((N, D)).astype(np.float32)
+    L = rng.standard_normal((N, D, D)).astype(np.float32) * 0.1
+    ainv = np.einsum("nde,nfe->ndf", L, L) + np.eye(D, dtype=np.float32)
+    got = K.bandit_update(x_up, w, r, xs, theta, ainv, 0.8)
+    want = R.bandit_update(*(jnp.asarray(a) for a in
+                             (x_up, w, r, xs, theta, ainv)), 0.8)
+    for g, wnt, tol in zip(got, want, (1e-5, 1e-5, 1e-4)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(wnt),
+                                   rtol=tol, atol=tol)
+    if verbose:
+        print("  pallas bandit_update == ref oracle (interpret mode)")
+
+
+def _best_of(f, trials: int, inner: int) -> float:
+    times = []
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            f()
+        times.append((time.perf_counter() - t0) / inner)
+    return min(times)
+
+
+def run_throughput(catalog_n: int = 128, b: int = 256, repeats: int = 10,
+                   max_ratio: float = 2.0, verbose: bool = True) -> Dict:
+    """Batched route+learn vs. static route_many (must stay within 2x;
+    the CI smoke uses a looser guard-rail for shared-runner noise)."""
+    from benchmarks.router_scale import _random_queries, _synthetic_catalog
+    from repro.core.routing import RoutingEngine
+    mres = _synthetic_catalog(catalog_n)
+    mres.embeddings()
+    prefs, sigs = _random_queries(b)
+    eng_s = RoutingEngine(mres, knn_k=8)
+    bandit = LinearBandit(catalog_n, policy="linucb", alpha=0.5)
+    eng_a = RoutingEngine(mres, knn_k=8, adaptive=bandit,
+                          adaptive_weight=1.0)
+    names = mres.snapshot()[1]
+    col = {m: j for j, m in enumerate(names)}
+    rng = np.random.default_rng(3)
+    rewards = rng.random(b).astype(np.float32)
+
+    def adaptive_step():
+        ds = eng_a.route_many(prefs, sigs)
+        X = np.stack([d.task_vector for d in ds])
+        chosen = np.array([col[d.model] for d in ds])
+        bandit.update(X, chosen, rewards)
+
+    eng_s.route_many(prefs, sigs)            # warm-up both paths
+    adaptive_step()
+    t_static = _best_of(lambda: eng_s.route_many(prefs, sigs),
+                        trials=repeats, inner=3) / b * 1e6
+    t_adapt = _best_of(adaptive_step, trials=repeats, inner=3) / b * 1e6
+    ratio = t_adapt / t_static
+    if verbose:
+        print(f"  route+learn N={catalog_n} B={b}: "
+              f"static={t_static:6.1f}us/q  adaptive={t_adapt:6.1f}us/q  "
+              f"ratio={ratio:4.2f}x")
+    assert ratio <= max_ratio, (t_static, t_adapt)
+    return {"catalog": catalog_n, "batch": b, "static_us": t_static,
+            "adaptive_us": t_adapt, "ratio": ratio}
+
+
+def run(*, steps: int = 80, batch: int = 16, with_thompson: bool = True,
+        throughput_b: int = 256, throughput_max_ratio: float = 2.0,
+        verbose: bool = True):
+    regret = run_regret(steps=steps, batch=batch,
+                        with_thompson=with_thompson, verbose=verbose)
+    run_parity(verbose=verbose)
+    thr = run_throughput(b=throughput_b, max_ratio=throughput_max_ratio,
+                         verbose=verbose)
+    save_result("adaptive", {"regret": regret, "throughput": thr})
+    by = {r["policy"]: r for r in regret["episodes"]}
+    ratio = by["static"]["cum_regret"] / max(by["linucb"]["cum_regret"],
+                                             1e-9)
+    return ("adaptive", thr["adaptive_us"],
+            f"bandit regret {by['linucb']['cum_regret']:.0f} vs static "
+            f"{by['static']['cum_regret']:.0f} ({ratio:.1f}x lower) on "
+            f"model-degrade; recovery {by['linucb']['recovery_steps']} "
+            f"steps; route+learn {thr['ratio']:.2f}x static")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale run for CI (small B/steps; still "
+                    "asserts bandit > random reward and bandit < static "
+                    "regret, kernel parity and the 2x throughput bound)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        # 3x guard-rail: shared CI runners add ~unbounded timing noise;
+        # the real <=2x claim is asserted by the full (quiet-box) run
+        run(steps=30, batch=8, with_thompson=False,
+            throughput_max_ratio=3.0)
+    else:
+        run()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -12,13 +12,15 @@ import sys
 import time
 import traceback
 
-from benchmarks import (ablations, analyzer_pruning, batch_mode, feedback,
-                        merging, roofline, router_scale, routing_win)
+from benchmarks import (ablations, adaptive, analyzer_pruning, batch_mode,
+                        feedback, merging, roofline, router_scale,
+                        routing_win)
 
 ALL = {
     "routing_win": routing_win.run,
     "batch_mode": batch_mode.run,
     "feedback": feedback.run,
+    "adaptive": adaptive.run,
     "router_scale": router_scale.run,
     "analyzer_pruning": analyzer_pruning.run,
     "merging": merging.run,

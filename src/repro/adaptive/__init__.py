@@ -1,0 +1,6 @@
+"""Online adaptive routing: contextual bandits that learn per-model
+quality from live traffic and blend into the static MRES scores."""
+from repro.adaptive.bandit import POLICIES, LinearBandit
+from repro.adaptive.rewards import RewardConfig, RewardShaper
+
+__all__ = ["LinearBandit", "POLICIES", "RewardConfig", "RewardShaper"]

@@ -1,0 +1,225 @@
+"""Contextual-bandit model-quality learner (PickLLM / RouteLLM-style
+online routing, layered onto the paper's static MRES scores).
+
+One linear-bandit posterior per catalog model, kept as PACKED arrays so
+a whole batch learns in one fused pass:
+
+  A      (N, D, D)  regularized scatter matrices  (lam * I prior)
+  b      (N, D)     reward-weighted context sums
+  theta  (N, D)     ridge estimates A^{-1} b      (cached)
+  Ainv   (N, D, D)  precision inverses            (cached)
+
+The context of a query is its (M,) routing task vector (user preference
+weights with the accuracy axis raised to the analyzed complexity) plus
+an intercept, so D = M + 1: the intercept learns each model's base
+quality and the weight axes learn how quality co-varies with what the
+user asked for.
+
+Policies over the shared posterior:
+
+  * ``linucb``   — score = x.theta + alpha * sqrt(x^T Ainv x)
+  * ``thompson`` — score = x.theta~ with theta~ ~ N(theta, noise^2 Ainv)
+
+Non-stationarity is handled by exponential forgetting (``forget`` < 1
+decays A toward the lam*I prior and b toward 0 on every outcome batch),
+so the posterior tracks drifting model quality instead of averaging
+over it.
+
+The hot path is array-first throughout: ``scores`` is two einsums,
+``update`` one masked einsum pair, and ``update_and_score`` fuses the
+rank-1 posterior updates with the next batch's UCB scoring matmul in a
+single Pallas ``bandit_update`` kernel call (``use_kernel=True``), with
+the numpy einsum path as the small-catalog / parity reference.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.preferences import N_METRICS
+
+POLICIES = ("linucb", "thompson")
+
+
+class LinearBandit:
+    def __init__(self, n_models: int, context_dim: int = N_METRICS, *,
+                 policy: str = "linucb", alpha: float = 0.8,
+                 lam: float = 1.0, noise: float = 0.3,
+                 forget: float = 1.0, seed: int = 0,
+                 use_kernel: bool = False, kernel_min_n: int = 256):
+        assert policy in POLICIES, policy
+        assert 0.0 < forget <= 1.0, forget
+        self.policy = policy
+        self.alpha = float(alpha)
+        self.lam = float(lam)
+        self.noise = float(noise)
+        self.forget = float(forget)
+        self.use_kernel = use_kernel
+        self._kernel_min_n = kernel_min_n
+        self._rng = np.random.default_rng(seed)
+        self.dim = context_dim + 1                     # + intercept
+        self.n_models = 0
+        self.A = np.zeros((0, self.dim, self.dim), np.float32)
+        self.b = np.zeros((0, self.dim), np.float32)
+        self.counts = np.zeros(0, np.int64)
+        self._theta: Optional[np.ndarray] = None
+        self._ainv: Optional[np.ndarray] = None
+        self._zeros: Optional[Tuple[np.ndarray, ...]] = None
+        self.ensure(n_models)
+
+    # ---------------- capacity ----------------
+    def ensure(self, n_models: int) -> None:
+        """Grow to ``n_models`` arms (fresh lam*I priors for new ones) —
+        keeps the bandit consistent when the catalog grows (merging)."""
+        if n_models <= self.n_models:
+            return
+        grow = n_models - self.n_models
+        eye = np.broadcast_to(self.lam * np.eye(self.dim, dtype=np.float32),
+                              (grow, self.dim, self.dim))
+        self.A = np.concatenate([self.A, eye.copy()], axis=0)
+        self.b = np.concatenate(
+            [self.b, np.zeros((grow, self.dim), np.float32)], axis=0)
+        self.counts = np.concatenate(
+            [self.counts, np.zeros(grow, np.int64)])
+        self.n_models = n_models
+        self._theta = self._ainv = None
+
+    # ---------------- posterior ----------------
+    def _ctx(self, X: np.ndarray) -> np.ndarray:
+        """(B, M) task vectors -> (B, D) contexts with intercept."""
+        X = np.asarray(X, np.float32)
+        assert X.ndim == 2 and X.shape[1] == self.dim - 1, \
+            (X.shape, self.dim)
+        return np.concatenate(
+            [X, np.ones((X.shape[0], 1), np.float32)], axis=1)
+
+    def _refresh(self) -> Tuple[np.ndarray, np.ndarray]:
+        if self._theta is None or self._ainv is None:
+            self._ainv = np.linalg.inv(self.A).astype(np.float32)
+            self._theta = np.einsum("nde,ne->nd", self._ainv,
+                                    self.b).astype(np.float32)
+        return self._theta, self._ainv
+
+    @property
+    def theta(self) -> np.ndarray:
+        """(N, D) current per-model reward estimates."""
+        return self._refresh()[0]
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        """(B, N) posterior-mean reward estimates (no exploration)."""
+        theta, _ = self._refresh()
+        return self._ctx(X) @ theta.T
+
+    def scores(self, X: np.ndarray) -> np.ndarray:
+        """(B, N) policy scores for (B, M) task-vector contexts."""
+        return self.scores_at(X, None)
+
+    def scores_at(self, X: np.ndarray, cols: Optional[np.ndarray]
+                  ) -> np.ndarray:
+        """(B, C) policy scores restricted to the ``cols`` model subset
+        (None = all models) — the routing hot path only needs the kNN
+        candidate columns, so cost stays proportional to C, not N."""
+        theta, ainv = self._refresh()
+        ctx = self._ctx(X)
+        if cols is not None:
+            theta, ainv = theta[cols], ainv[cols]
+        if self.policy == "thompson":
+            # theta~ = theta + noise * L z,  L L^T = Ainv
+            L = np.linalg.cholesky(
+                ainv + 1e-6 * np.eye(self.dim, dtype=np.float32))
+            z = self._rng.standard_normal(
+                (theta.shape[0], self.dim)).astype(np.float32)
+            theta = theta + self.noise * np.einsum("nde,ne->nd", L, z)
+            return ctx @ theta.T
+        mean = ctx @ theta.T                                    # (B, C)
+        # x^T Ainv x over the flattened rank-1 layout: one BLAS matmul
+        # (B, D^2) x (D^2, C), same shape the Pallas kernel uses
+        xx = (ctx[:, :, None] * ctx[:, None, :]).reshape(ctx.shape[0], -1)
+        var = xx @ ainv.reshape(theta.shape[0], -1).T
+        return mean + self.alpha * np.sqrt(np.maximum(var, 0.0))
+
+    # ---------------- learning ----------------
+    def _choice_mask(self, chosen: np.ndarray, B: int) -> np.ndarray:
+        chosen = np.asarray(chosen)
+        assert chosen.shape == (B,), (chosen.shape, B)
+        assert (chosen >= 0).all() and (chosen < self.n_models).all(), chosen
+        w = np.zeros((B, self.n_models), np.float32)
+        w[np.arange(B), chosen] = 1.0
+        return w
+
+    def _apply(self, dA: np.ndarray, db: np.ndarray,
+               w: np.ndarray) -> None:
+        if self.forget < 1.0:
+            eye = self.lam * np.eye(self.dim, dtype=np.float32)
+            self.A = self.forget * (self.A - eye) + eye
+            self.b = self.forget * self.b
+        self.A += dA
+        self.b += db
+        self.counts += w.sum(axis=0).astype(np.int64)
+        self._theta = self._ainv = None
+
+    def update(self, X: np.ndarray, chosen: np.ndarray,
+               rewards: np.ndarray) -> None:
+        """Fold one outcome batch into the posterior.
+
+        X (B, M) task vectors; chosen (B,) catalog indices served;
+        rewards (B,) shaped rewards observed.
+        """
+        ctx = self._ctx(X)
+        B = ctx.shape[0]
+        if B == 0:
+            return
+        r = np.asarray(rewards, np.float32)
+        w = self._choice_mask(chosen, B)
+        if (self.use_kernel and self.policy == "linucb"
+                and self.n_models >= self._kernel_min_n):
+            # Pallas path (the serving stack's learning step when
+            # use_kernel is on): dA/db from the fused kernel with a
+            # dummy scoring batch — theta/ainv only feed the discarded
+            # ucb output, so cached zeros avoid a posterior refresh
+            from repro.kernels import ops as K
+            if self._zeros is None or self._zeros[1].shape[0] != \
+                    self.n_models:
+                self._zeros = (
+                    np.zeros((1, self.dim), np.float32),
+                    np.zeros((self.n_models, self.dim), np.float32),
+                    np.zeros((self.n_models, self.dim, self.dim),
+                             np.float32))
+            zD, zN, zA = self._zeros
+            dA, db, _ = K.bandit_update(ctx, w, r, zD, zN, zA, 0.0)
+            self._apply(np.asarray(dA), np.asarray(db), w)
+            return
+        # rank-1 sums as flattened matmuls (the kernel's layout):
+        # dA = W^T @ XX, db = W^T @ (r * X)
+        xx = (ctx[:, :, None] * ctx[:, None, :]).reshape(B, -1)
+        dA = (w.T @ xx).reshape(self.n_models, self.dim, self.dim)
+        db = w.T @ (ctx * r[:, None])
+        self._apply(dA, db, w)
+
+    def update_and_score(self, X_up: np.ndarray, chosen: np.ndarray,
+                         rewards: np.ndarray, X_score: np.ndarray
+                         ) -> np.ndarray:
+        """Serving-cadence fused step: score the incoming batch under
+        the CURRENT posterior, then fold the finished batch's outcomes
+        in.  On the kernel path both halves are one Pallas
+        ``bandit_update`` call; the numpy path is decision-identical.
+        Returns the (Bs, N) scores.
+        """
+        ctx_up = self._ctx(X_up)
+        B = ctx_up.shape[0]
+        w = self._choice_mask(chosen, B) if B else \
+            np.zeros((0, self.n_models), np.float32)
+        r = np.asarray(rewards, np.float32)
+        if (self.use_kernel and self.policy == "linucb"
+                and self.n_models >= self._kernel_min_n):
+            from repro.kernels import ops as K
+            theta, ainv = self._refresh()
+            dA, db, ucb = K.bandit_update(
+                ctx_up, w, r, self._ctx(X_score), theta, ainv, self.alpha)
+            if B:                # empty batch: no update, no forgetting
+                self._apply(np.asarray(dA), np.asarray(db), w)
+            return np.asarray(ucb)
+        s = self.scores(X_score)
+        self.update(X_up, chosen, rewards)
+        return s

@@ -11,6 +11,8 @@ granularity at which the paper's policy review operates.
 from __future__ import annotations
 
 import json
+import os
+import tempfile
 import threading
 from dataclasses import dataclass
 from typing import Dict, List, Sequence, Tuple
@@ -116,18 +118,44 @@ class FeedbackStore:
 
     # ---- persistence (part of the production story) ----
     def save(self, path: str) -> None:
+        """Atomic snapshot: a crash or a concurrent reader never sees a
+        partially-written file (write-temp + rename)."""
         with self._lock:
             data = [{"cluster": list(k[0]), "model": k[1], "bias": v,
                      "count": self._count.get(k, 0)}
                     for k, v in self._bias.items()]
-        with open(path, "w") as f:
-            json.dump(data, f)
+        d = os.path.dirname(os.path.abspath(path))
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".feedback-",
+                                   suffix=".json")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(data, f)
+            # mkstemp creates 0600; keep the target's mode (or the
+            # umask default) so external readers stay able to read it
+            try:
+                mode = os.stat(path).st_mode & 0o777
+            except FileNotFoundError:
+                um = os.umask(0)
+                os.umask(um)
+                mode = 0o666 & ~um
+            os.chmod(tmp, mode)
+            os.replace(tmp, path)
+        except BaseException:
+            os.unlink(tmp)
+            raise
 
     def load(self, path: str) -> None:
+        """Restore a ``save`` snapshot, REPLACING any in-memory state
+        (loading into a live store must not splice stale entries into
+        the snapshot's)."""
         with open(path) as f:
             data = json.load(f)
+        bias = {}
+        count = {}
+        for row in data:
+            key = (tuple(row["cluster"]), row["model"])
+            bias[key] = float(row["bias"])
+            count[key] = int(row["count"])
         with self._lock:
-            for row in data:
-                key = (tuple(row["cluster"]), row["model"])
-                self._bias[key] = float(row["bias"])
-                self._count[key] = int(row["count"])
+            self._bias = bias
+            self._count = count

@@ -40,6 +40,7 @@ class RoutedQuery:
     analyzer_s: float
     route_s: float
     response: Any = None
+    observed: bool = False            # reward already fed to the bandit
 
 
 class OptiRoute:
@@ -51,17 +52,27 @@ class OptiRoute:
                  knn_k: int = 8, merge_threshold: Optional[float] = None,
                  batch_sample_frac: float = 0.02,
                  use_kernel: bool = False, feedback_weight: float = 0.5,
-                 telemetry=None):
+                 telemetry=None, adaptive=None,
+                 adaptive_weight: float = 0.0, reward_fn=None,
+                 reward_shaper=None):
         self.mres = mres
         self.analyzer = analyzer
         self.feedback = feedback if feedback is not None else FeedbackStore()
         self.engine = RoutingEngine(mres, self.feedback, knn_k=knn_k,
                                     use_kernel=use_kernel,
-                                    feedback_weight=feedback_weight)
+                                    feedback_weight=feedback_weight,
+                                    adaptive=adaptive,
+                                    adaptive_weight=adaptive_weight)
         self.merger = (ModelMerger(mres, merge_threshold)
                        if merge_threshold is not None else None)
         self.batch_sample_frac = batch_sample_frac
         self.telemetry = telemetry
+        # adaptive loop: bandit + (optional) automatic reward emission.
+        # ``reward_fn(rq) -> quality in [0, 1]`` makes ``route_all``
+        # close the loop itself; without it, call ``observe`` explicitly.
+        self.adaptive = adaptive
+        self.reward_fn = reward_fn
+        self.reward_shaper = reward_shaper
 
     # ------------------------- interactive -------------------------
     def route(self, text: str, prefs) -> RoutedQuery:
@@ -128,7 +139,65 @@ class OptiRoute:
                for t, s, d in zip(texts, sigs, decisions)]
         for rq in out:
             self._record(rq)
+        if self.adaptive is not None and self.reward_fn is not None:
+            self.observe(out)
         return out
+
+    # ----------------------- adaptive loop -----------------------
+    def observe(self, rqs: Sequence[RoutedQuery],
+                qualities: Optional[Sequence[float]] = None,
+                extra_penalty=None) -> Optional[np.ndarray]:
+        """Close the adaptive loop for a routed batch.
+
+        Emits one reward observation per query into the bandit: quality
+        (from ``qualities`` or ``reward_fn``) shaped by the per-model
+        cost/latency penalties of ``reward_shaper`` (plus any realized
+        ``extra_penalty`` from telemetry), against the decision's task
+        vector as context.  Each query is observed AT MOST ONCE (so an
+        auto-observing ``reward_fn`` plus an explicit post-generation
+        ``observe`` never double-count an outcome).  Returns the shaped
+        rewards of the newly-observed queries, or None when no bandit
+        is attached / no quality source exists / nothing is new.
+        """
+        if self.adaptive is None or not rqs:
+            return None
+        if qualities is None and self.reward_fn is None:
+            return None
+        if qualities is not None and len(qualities) != len(rqs):
+            raise ValueError(f"{len(rqs)} routed queries but "
+                             f"{len(qualities)} qualities — observations "
+                             "must align one-to-one")
+        if extra_penalty is not None and len(extra_penalty) != len(rqs):
+            raise ValueError(f"{len(rqs)} routed queries but "
+                             f"{len(extra_penalty)} extra penalties")
+        # drop already-observed queries BEFORE evaluating reward_fn —
+        # quality evaluation can be expensive in real deployments
+        fresh = [i for i, rq in enumerate(rqs) if not rq.observed]
+        if not fresh:
+            return None
+        rqs = [rqs[i] for i in fresh]
+        if qualities is None:
+            qualities = [self.reward_fn(rq) for rq in rqs]
+        else:
+            qualities = [qualities[i] for i in fresh]
+        if extra_penalty is not None:
+            extra_penalty = np.asarray(extra_penalty, np.float32)[fresh]
+        names = self.mres.snapshot()[1]
+        col = {m: j for j, m in enumerate(names)}
+        midx = np.array([col[rq.decision.model] for rq in rqs])
+        X = np.stack([rq.decision.task_vector for rq in rqs])
+        if self.reward_shaper is not None:
+            rewards = self.reward_shaper.shape(qualities, midx,
+                                               extra_penalty)
+        else:
+            rewards = np.asarray(qualities, np.float32)
+            if extra_penalty is not None:
+                rewards = rewards - np.asarray(extra_penalty, np.float32)
+        self.adaptive.ensure(len(names))
+        self.adaptive.update(X, midx, rewards)
+        for rq in rqs:
+            rq.observed = True
+        return rewards
 
     # --------------------------- batch ---------------------------
     def route_batch(self, texts: Sequence[str], prefs, *,

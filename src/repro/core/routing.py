@@ -19,7 +19,10 @@ Batched pipeline (B queries, N catalog entries, M metric axes):
      non-empty stage becomes the candidate set;
   4. scoring       = one (B, M) x (M, N) matmul of user weights against
      the normalized metric embeddings plus a vectorized (B, N) feedback
-     bias; per-row argmax over the candidate mask wins.
+     bias; when an adaptive bandit is attached (``repro.adaptive``) its
+     learned reward estimates join the blend at ``adaptive_weight``
+     (scored only at the candidate columns, cost ~ k not N); per-row
+     argmax over the candidate mask wins.
 
 Filters only apply when the analyzer is confident (per query).  With the
 masks fused into the kNN, the candidate set is the k best models *among
@@ -106,7 +109,8 @@ class RoutingEngine:
                  confidence_threshold: float = 0.3,
                  feedback_weight: float = 0.5,
                  use_kernel: bool = False, kernel_min_n: int = 1024,
-                 use_complexity: bool = True):
+                 use_complexity: bool = True,
+                 adaptive=None, adaptive_weight: float = 0.0):
         self.mres = mres
         self.feedback = feedback
         self.knn_k = knn_k
@@ -116,6 +120,11 @@ class RoutingEngine:
         self._kernel_min_n = kernel_min_n
         self._kernel_fn = None
         self.use_complexity = use_complexity   # ablation knob
+        # online-learning layer (repro.adaptive): learned per-model
+        # reward estimates blended into the static scores at weight
+        # ``adaptive_weight`` (the preference knob; 0 = static routing)
+        self.adaptive = adaptive
+        self.adaptive_weight = float(adaptive_weight)
 
     # ------------------------------------------------------------------
     def task_vector(self, prefs: UserPreferences, sig: TaskSignature
@@ -209,6 +218,13 @@ class RoutingEngine:
         di = np.array([_DM_IDX[s.domain] if s.confidence >= thr
                        else _DM_ANY for s in sigs])
 
+        # adaptive layer: learned reward estimates join the blend below,
+        # restricted to the kNN candidate columns (cost ~ k, not N)
+        adaptive_on = (self.adaptive is not None
+                       and self.adaptive_weight != 0.0)
+        if adaptive_on:
+            self.adaptive.ensure(n)
+
         # stage 1: batched kNN with the filter masks fused in
         k = min(self.knn_k, n)
         vals, idx = self._knn_batch(T, k, ti, di, snap)
@@ -226,6 +242,13 @@ class RoutingEngine:
         if self.feedback is not None:
             cscores = cscores + self.feedback_weight * \
                 self.feedback.bias_for(sigs, names, idx)
+        if adaptive_on:
+            # bandit scores only at the union of candidate columns:
+            # (B, C) with C <= B*k, instead of the full (B, N) matrix
+            cols, inv = np.unique(idx, return_inverse=True)
+            asub = self.adaptive.scores_at(T, cols)               # (B, C)
+            cscores = cscores + self.adaptive_weight * \
+                np.take_along_axis(asub, inv.reshape(idx.shape), axis=1)
         cscores = np.where(finite, cscores, -np.inf)
         order = np.argsort(-cscores, axis=1, kind="stable")       # (B, k)
         knn_found = finite.sum(axis=1).tolist()
@@ -269,13 +292,13 @@ class RoutingEngine:
             out[b] = self._route_fallback(
                 b, emb, names, T, W,
                 (tt_b & dm_matrix[di[b]], tt_b, gmask), bias_b,
-                sigs[b], n, k, r)
+                adaptive_on, sigs[b], n, k, r)
         return out                      # type: ignore[return-value]
 
     # ------------------------------------------------------------------
     def _route_fallback(self, b: int, emb, names, T, W, ladder, bias_row,
-                        sig: TaskSignature, n: int, k: int, r: int
-                        ) -> RoutingDecision:
+                        adaptive_on: bool, sig: TaskSignature, n: int,
+                        k: int, r: int) -> RoutingDecision:
         """Fallback ladder for one row whose fused kNN came up empty."""
         for kind, mask in zip(FALLBACK_LADDER[1:], ladder):
             if mask.any():
@@ -286,6 +309,9 @@ class RoutingEngine:
         scores = emb[cidx] @ W[b]
         if bias_row is not None:
             scores = scores + self.feedback_weight * bias_row[cidx]
+        if adaptive_on:
+            scores = scores + self.adaptive_weight * \
+                self.adaptive.scores_at(T[b:b + 1], cidx)[0]
         order = np.argsort(-scores, kind="stable")
         best = int(cidx[order[0]])
         sim = float(cosine_sim(emb[best:best + 1], T[b])[0])

@@ -86,6 +86,18 @@ class Telemetry:
             return sum(bool(e.fallback) for e in self._events) \
                 / len(self._events)
 
+    def fallback_funnel(self) -> Dict[str, int]:
+        """Routed-request counts per fallback ladder stage.
+
+        Keys follow ``routing.FALLBACK_LADDER`` ('' = primary fused-kNN
+        hit); only stages that occurred appear.  The operator's view of
+        how far down the ladder traffic is falling."""
+        funnel: Dict[str, int] = {}
+        with self._lock:
+            for e in self._events:
+                funnel[e.fallback] = funnel.get(e.fallback, 0) + 1
+        return funnel
+
     def qps(self, now: Optional[float] = None) -> float:
         now = now if now is not None else time.time()
         with self._lock:
@@ -105,6 +117,7 @@ class Telemetry:
         return {
             "events": len(self._events),
             "fallback_rate": self.fallback_rate(),
+            "fallback_funnel": self.fallback_funnel(),
             "latency": self.latency_percentiles(),
             "per_model": self.per_model(),
         }

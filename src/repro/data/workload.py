@@ -158,6 +158,15 @@ def make_workload(n: int, seed: int = 0, *, task_type=None, domain=None,
 # ground-truth model quality (for routing benchmarks)
 # ----------------------------------------------------------------------
 
+def meta_of(entry) -> Dict:
+    """The ``quality_of`` meta dict for an MRES-style entry (anything
+    with name / raw_metrics / task_types / domains attributes)."""
+    return {"name": entry.name,
+            "accuracy": float(entry.raw_metrics.get("accuracy", 0.5)),
+            "task_types": tuple(entry.task_types),
+            "domains": tuple(entry.domains)}
+
+
 def quality_of(entry_meta: Dict, sig: TaskSignature) -> float:
     """Synthetic probability that a model answers a query well.
 
@@ -176,3 +185,118 @@ def quality_of(entry_meta: Dict, sig: TaskSignature) -> float:
     if sig.domain not in entry_meta.get("domains", ()):
         q -= 0.15
     return float(np.clip(q, 0.0, 1.0))
+
+
+# ----------------------------------------------------------------------
+# non-stationary scenarios (online-learning benchmarks)
+# ----------------------------------------------------------------------
+
+DRIFT_KINDS = ("quality-drift", "domain-shift", "model-degrade")
+
+
+@dataclass(frozen=True)
+class DriftScenario:
+    """A non-stationary traffic episode for the adaptive router.
+
+    kind:
+      * ``quality-drift``  — every model's true quality follows a slow
+        deterministic sinusoid around its catalog value (phase-shifted
+        per model, amplitude ``drift_amp``), so the best model keeps
+        changing;
+      * ``domain-shift``   — the query mix jumps from ``domain_a`` to
+        ``domain_b`` at ``shift_frac`` of the episode (quality table
+        static: the context distribution is what moves);
+      * ``model-degrade``  — ``degrade_model`` (default: the catalog's
+        accuracy leader) loses ``degrade_delta`` true quality at
+        ``shift_frac`` of the episode while its catalog metrics stay
+        stale — the recovery-after-drift stress test.
+    """
+    kind: str = "model-degrade"
+    n_steps: int = 60
+    batch: int = 16
+    seed: int = 0
+    task_type: Optional[str] = None
+    drift_amp: float = 0.35
+    drift_period: float = 40.0
+    shift_frac: float = 0.5
+    domain_a: str = "general"
+    domain_b: str = "healthcare"
+    degrade_model: Optional[str] = None
+    degrade_delta: float = 0.6
+
+    def validate(self) -> "DriftScenario":
+        assert self.kind in DRIFT_KINDS, self.kind
+        assert 0.0 < self.shift_frac < 1.0
+        return self
+
+
+class NonStationaryWorkload:
+    """Per-step query batches plus the time-varying ground-truth
+    quality table ``quality(t, model, sig)`` they are scored against.
+
+    ``entries_meta`` is one ``quality_of`` meta dict per catalog model
+    (see ``meta_of``), in catalog order; batches and the quality
+    trajectory are deterministic in (scenario.seed, t).
+    """
+
+    def __init__(self, entries_meta: Sequence[Dict],
+                 scenario: DriftScenario):
+        self.meta = list(entries_meta)
+        self.sc = scenario.validate()
+        self.names = [m["name"] for m in self.meta]
+        self._col = {n: j for j, n in enumerate(self.names)}
+        self.shift_step = int(round(self.sc.n_steps * self.sc.shift_frac))
+        if self.sc.kind == "model-degrade":
+            name = self.sc.degrade_model or max(
+                self.meta, key=lambda m: m["accuracy"])["name"]
+            self._degrade_idx = self._col[name]
+        else:
+            self._degrade_idx = -1
+
+    @property
+    def degraded_model(self) -> Optional[str]:
+        return (self.names[self._degrade_idx]
+                if self._degrade_idx >= 0 else None)
+
+    # ---------------- queries ----------------
+    def _domain_at(self, t: int) -> Optional[str]:
+        if self.sc.kind != "domain-shift":
+            return None                       # uniform domain mix
+        return self.sc.domain_a if t < self.shift_step else self.sc.domain_b
+
+    def batch(self, t: int) -> List[QueryRecord]:
+        """The step-t query batch (deterministic in (seed, t))."""
+        assert 0 <= t < self.sc.n_steps, t
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.sc.seed, t]))
+        return [make_query(rng, task_type=self.sc.task_type,
+                           domain=self._domain_at(t),
+                           qid=t * self.sc.batch + i)
+                for i in range(self.sc.batch)]
+
+    # ---------------- time-varying quality ----------------
+    def _offsets(self, t: int) -> np.ndarray:
+        """(N,) true-quality offsets vs. the static catalog table."""
+        n = len(self.meta)
+        off = np.zeros(n, np.float64)
+        if self.sc.kind == "quality-drift":
+            phase = 2.0 * np.pi * np.arange(n) / max(n, 1)
+            off = self.sc.drift_amp * np.sin(
+                2.0 * np.pi * t / self.sc.drift_period + phase)
+        elif self.sc.kind == "model-degrade" and t >= self.shift_step:
+            off[self._degrade_idx] = -self.sc.degrade_delta
+        return off
+
+    def quality(self, t: int, model: str, sig: TaskSignature) -> float:
+        """True quality of ``model`` answering ``sig`` at step ``t``."""
+        j = self._col[model]
+        return float(np.clip(quality_of(self.meta[j], sig)
+                             + self._offsets(t)[j], 0.0, 1.0))
+
+    def quality_matrix(self, t: int, sigs: Sequence[TaskSignature]
+                       ) -> np.ndarray:
+        """(B, N) true qualities of every model on every query — the
+        oracle table regret accounting is computed against."""
+        base = np.array([[quality_of(m, s) for m in self.meta]
+                         for s in sigs], np.float64)
+        return np.clip(base + self._offsets(t)[None, :], 0.0, 1.0)

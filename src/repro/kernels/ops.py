@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.bandit_update import bandit_update_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.moe_gating import moe_gating_pallas
 from repro.kernels.router_topk import router_topk_pallas
@@ -35,6 +36,12 @@ def _pad_to(x, mult: int, axis: int):
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths)
+
+
+def _clamp_blk_n(blk_n: int, n: int) -> int:
+    """Shrink a catalog block size toward n (rounded up to a power of
+    two, floored at one 128 lane) so tiny catalogs are one block."""
+    return min(blk_n, max(1 << max(n - 1, 1).bit_length(), 128))
 
 
 # ----------------------------------------------------------------------
@@ -60,7 +67,7 @@ def router_topk(emb, queries, k: int,
     N, D = emb.shape
     Q = queries.shape[0]
     interp = default_interpret() if interpret is None else interpret
-    blk_n = min(blk_n, max(1 << max(N - 1, 1).bit_length(), 128))
+    blk_n = _clamp_blk_n(blk_n, N)
 
     # fold weights + row norms into the catalog; unit-normalize queries
     en = jnp.linalg.norm(emb, axis=1, keepdims=True) + 1e-9
@@ -78,6 +85,60 @@ def router_topk(emb, queries, k: int,
     vals, idx = router_topk_pallas(qnp, ewp, maskp, k, blk_q=blk_q,
                                    blk_n=blk_n, interpret=interp)
     return vals[:Q], idx[:Q]
+
+
+# ----------------------------------------------------------------------
+# bandit_update
+# ----------------------------------------------------------------------
+
+def bandit_update(x_up, w, r, x_score, theta, ainv, alpha: float, *,
+                  blk_n: int = 128, interpret: Optional[bool] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused bandit posterior delta + LinUCB scores (see kernels/ref.py).
+
+    x_up (Bu, D) outcome contexts; w (Bu, N) choice mask; r (Bu,)
+    rewards; x_score (Bs, D) incoming contexts; theta (N, D); ainv
+    (N, D, D); alpha >= 0 exploration scale.  Returns
+    (dA (N, D, D), db (N, D), ucb (Bs, N)) f32.
+
+    Flattens the rank-1 structure into pure matmuls: outer products
+    become (B, D^2) rows, alpha^2 is folded into Ainv, and everything is
+    lane/sublane padded before ONE ``bandit_update_pallas`` call.
+    """
+    assert alpha >= 0.0, alpha
+    x_up = jnp.asarray(x_up, jnp.float32)
+    x_score = jnp.asarray(x_score, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    r = jnp.asarray(r, jnp.float32)
+    theta = jnp.asarray(theta, jnp.float32)
+    ainv = jnp.asarray(ainv, jnp.float32)
+    N, D = theta.shape
+    Bu, Bs = x_up.shape[0], x_score.shape[0]
+    if Bu == 0:                       # empty outcome batch: zero deltas
+        x_up = jnp.zeros((1, D), jnp.float32)
+        w = jnp.zeros((1, N), jnp.float32)
+        r = jnp.zeros((1,), jnp.float32)
+    interp = default_interpret() if interpret is None else interpret
+    blk_n = _clamp_blk_n(blk_n, N)
+
+    xx_up = (x_up[:, :, None] * x_up[:, None, :]).reshape(x_up.shape[0], -1)
+    xxs = (x_score[:, :, None] * x_score[:, None, :]).reshape(Bs, -1)
+    xr = x_up * r[:, None]
+    ainv2 = (alpha * alpha) * ainv.reshape(N, D * D)
+
+    sub = 8                                              # f32 sublane
+    wp = _pad_to(_pad_to(w, blk_n, 1), sub, 0)
+    xxup_p = _pad_to(_pad_to(xx_up, LANE, 1), sub, 0)
+    xr_p = _pad_to(_pad_to(xr, LANE, 1), sub, 0)
+    xs_p = _pad_to(_pad_to(x_score, LANE, 1), sub, 0)
+    xxs_p = _pad_to(_pad_to(xxs, LANE, 1), sub, 0)
+    theta_p = _pad_to(_pad_to(theta, LANE, 1), blk_n, 0)
+    ainv2_p = _pad_to(_pad_to(ainv2, LANE, 1), blk_n, 0)
+
+    da, db, ucb = bandit_update_pallas(
+        wp, xxup_p, xr_p, xs_p, xxs_p, theta_p, ainv2_p,
+        blk_n=blk_n, interpret=interp)
+    return (da[:N, :D * D].reshape(N, D, D), db[:N, :D], ucb[:Bs, :N])
 
 
 # ----------------------------------------------------------------------

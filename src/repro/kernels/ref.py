@@ -46,6 +46,48 @@ def router_topk(emb: jnp.ndarray, queries: jnp.ndarray, k: int,
 
 
 # ----------------------------------------------------------------------
+# bandit_update: batched rank-1 posterior updates + UCB scoring matmul
+# ----------------------------------------------------------------------
+
+def bandit_update(x_up: jnp.ndarray, w: jnp.ndarray, r: jnp.ndarray,
+                  x_score: jnp.ndarray, theta: jnp.ndarray,
+                  ainv: jnp.ndarray, alpha: float
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One contextual-bandit serving step over packed per-model stats.
+
+    The linear-bandit posterior per model n is (A_n, b_n) with
+    theta_n = A_n^{-1} b_n.  Given a finished outcome batch (contexts
+    ``x_up``, a (Bu, N) choice mask ``w`` with w[b, n] = 1 where query b
+    was served by model n, rewards ``r``) and an incoming batch
+    ``x_score``, this computes
+
+      dA[n]     = sum_b w[b, n] * x_up[b] x_up[b]^T     (rank-1 updates)
+      db[n]     = sum_b w[b, n] * r[b] * x_up[b]
+      ucb[q, n] = x_score[q] . theta[n]
+                  + alpha * sqrt(x_score[q]^T Ainv[n] x_score[q])
+
+    i.e. the posterior delta for the finished batch plus LinUCB scores
+    for the next batch under the CURRENT posterior (``theta``/``ainv``
+    are the pre-update estimates — the one-batch-lagged update cadence
+    of a serving loop).
+
+    x_up (Bu, D); w (Bu, N); r (Bu,); x_score (Bs, D); theta (N, D);
+    ainv (N, D, D).  Returns (dA (N, D, D), db (N, D), ucb (Bs, N)),
+    all f32.
+    """
+    xu = x_up.astype(jnp.float32)
+    xs = x_score.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    r = r.astype(jnp.float32)
+    dA = jnp.einsum("bn,bd,be->nde", w, xu, xu)
+    db = jnp.einsum("bn,b,bd->nd", w, r, xu)
+    mean = xs @ theta.astype(jnp.float32).T                        # (Bs, N)
+    var = jnp.einsum("qd,nde,qe->qn", xs, ainv.astype(jnp.float32), xs)
+    ucb = mean + alpha * jnp.sqrt(jnp.maximum(var, 0.0))
+    return dA, db, ucb
+
+
+# ----------------------------------------------------------------------
 # flash_attention: blocked causal/SWA/softcap GQA attention
 # ----------------------------------------------------------------------
 

@@ -6,7 +6,9 @@ in one vectorized ``route_all`` pass (interactive mode) or one
 sample-and-aggregate call (batch mode), groups requests by their routed
 model, executes each group as ONE batched generate call on that model's
 runner, and returns per-request results with latency / cost accounting.
-Thumbs feedback flows back into the router's FeedbackStore.
+Thumbs feedback flows back into the router's FeedbackStore, and
+post-generation quality observations flow into the router's adaptive
+bandit via ``observe`` (shaped rewards against each routed context).
 """
 from __future__ import annotations
 
@@ -40,6 +42,7 @@ class Response:
     route_s: float
     analyzer_s: float
     fallback: str = ""
+    rq: Any = None                    # RoutedQuery (adaptive loop handle)
 
 
 class ServingEngine:
@@ -86,7 +89,7 @@ class ServingEngine:
                     sim_latency_s=0.0 if gen is None
                     else gen.sim_latency_s / len(idxs),
                     route_s=rq.route_s, analyzer_s=rq.analyzer_s,
-                    fallback=rq.decision.fallback_kind)
+                    fallback=rq.decision.fallback_kind, rq=rq)
         self.log.extend(out)            # type: ignore[arg-type]
         return out                      # type: ignore[return-value]
 
@@ -114,6 +117,25 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def feedback(self, resp: Response, thumbs_up: bool) -> float:
         return self.router.feedback.record(resp.sig, resp.model, thumbs_up)
+
+    def observe(self, responses: Sequence[Response],
+                qualities: Sequence[float]):
+        """Close the adaptive loop with post-generation ground truth:
+        shaped rewards (quality minus cost/latency penalties) flow into
+        the router's bandit against each response's routed context.
+        Responses without a routed-query handle (the sample-and-
+        aggregate batch mode) carry no per-query context and are
+        skipped."""
+        if len(responses) != len(qualities):
+            raise ValueError(f"{len(responses)} responses but "
+                             f"{len(qualities)} qualities — observations "
+                             "must align one-to-one")
+        pairs = [(r.rq, q) for r, q in zip(responses, qualities)
+                 if r.rq is not None]
+        if not pairs:
+            return None
+        return self.router.observe([p[0] for p in pairs],
+                                   [p[1] for p in pairs])
 
     def summary(self) -> Dict[str, float]:
         if not self.log:

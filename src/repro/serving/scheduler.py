@@ -56,7 +56,24 @@ class ContinuousBatcher:
         self.ticks = 0
 
     # ------------------------------------------------------------------
-    def submit(self, req: SlotRequest) -> None:
+    def submit(self, req: SlotRequest, *, truncate: bool = False) -> None:
+        """Queue a request.  The prompt plus every decode step whose
+        output is kept must fit the slot cache: positions beyond
+        ``ctx_len`` are written with jax's out-of-bounds ``.at[].set``,
+        which drops the KV SILENTLY and corrupts later tokens.  The
+        last kept token decodes at ``len(tokens) + max_new - 2``, so
+        prompts longer than ``ctx_len - max(max_new - 1, 1)`` are
+        rejected, or clipped to that limit with ``truncate=True``.
+        """
+        limit = self.ctx_len - max(req.max_new - 1, 1)
+        if len(req.tokens) > limit:
+            if not truncate:
+                raise ValueError(
+                    f"prompt of {len(req.tokens)} tokens with max_new="
+                    f"{req.max_new} overflows the ctx_len={self.ctx_len} "
+                    f"slot cache (limit {limit}; pass truncate=True to "
+                    f"clip)")
+            req.tokens = req.tokens[:limit]
         self.queue.append(req)
 
     def _free_slots(self) -> List[int]:

@@ -1,0 +1,402 @@
+"""Adaptive routing subsystem: bandit learning, Pallas bandit_update
+parity, the route_many adaptive blend, the orchestrator/serving reward
+loop, and the non-stationary workload scenarios."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.adaptive import LinearBandit, RewardConfig, RewardShaper
+from repro.core.mres import MRES
+from repro.core.orchestrator import OptiRoute
+from repro.core.preferences import (DOMAINS, N_METRICS, TaskSignature,
+                                    resolve)
+from repro.core.routing import RoutingEngine
+from repro.data.workload import (DRIFT_KINDS, DriftScenario,
+                                 NonStationaryWorkload, meta_of,
+                                 quality_of)
+from repro.kernels import ops as K
+from repro.kernels import ref as R
+from tests.conftest import make_entry
+
+RNG = np.random.default_rng(7)
+
+
+class StubAnalyzer:
+    def __init__(self, sig=None):
+        self.sig = sig or TaskSignature(task_type="chat", domain="general",
+                                        complexity=0.4)
+
+    def analyze_batch(self, texts):
+        return [self.sig for _ in texts]
+
+    def analyze(self, text):
+        return self.sig
+
+
+def flat_catalog(n, **kw):
+    """n chat generalists with an accuracy spread, all domains tagged."""
+    m = MRES()
+    m.register_many([
+        make_entry(f"m{i}", accuracy=0.3 + 0.6 * i / max(n - 1, 1),
+                   domains=tuple(DOMAINS), generalist=True, **kw)
+        for i in range(n)])
+    return m
+
+
+# ----------------------------------------------------------------------
+# LinearBandit
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["linucb", "thompson"])
+def test_bandit_learns_best_arm(policy):
+    """On a stationary problem both policies beat uniform-random."""
+    rng = np.random.default_rng(3)
+    N = 4
+    base = np.linspace(0.1, 0.9, N)
+    b = LinearBandit(N, policy=policy, seed=1)
+    tot = rand = 0.0
+    for _ in range(120):
+        X = rng.random((8, N_METRICS)).astype(np.float32)
+        s = b.scores(X)
+        chosen = s.argmax(axis=1)
+        r = base[chosen] + 0.05 * rng.standard_normal(8)
+        b.update(X, chosen, r.astype(np.float32))
+        tot += base[chosen].sum()
+        rand += base[rng.integers(0, N, 8)].sum()
+    assert tot > rand * 1.2
+
+
+def test_bandit_update_matches_per_sample_loop():
+    """One batched update == the sum of per-sample rank-1 updates."""
+    b1 = LinearBandit(6, seed=0)
+    b2 = LinearBandit(6, seed=0)
+    X = RNG.random((16, N_METRICS)).astype(np.float32)
+    chosen = RNG.integers(0, 6, 16)
+    r = RNG.random(16).astype(np.float32)
+    b1.update(X, chosen, r)
+    for i in range(16):
+        b2.update(X[i:i + 1], chosen[i:i + 1], r[i:i + 1])
+    np.testing.assert_allclose(b1.A, b2.A, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(b1.b, b2.b, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(b1.counts, b2.counts)
+
+
+def test_bandit_linucb_scores_closed_form():
+    """scores == x.theta + alpha sqrt(x^T Ainv x) from the raw stats."""
+    b = LinearBandit(3, alpha=0.7, seed=0)
+    X = RNG.random((10, N_METRICS)).astype(np.float32)
+    b.update(X, RNG.integers(0, 3, 10), RNG.random(10).astype(np.float32))
+    q = RNG.random((2, N_METRICS)).astype(np.float32)
+    got = b.scores(q)
+    ctx = np.concatenate([q, np.ones((2, 1), np.float32)], axis=1)
+    ainv = np.linalg.inv(b.A)
+    theta = np.einsum("nde,ne->nd", ainv, b.b)
+    want = ctx @ theta.T + 0.7 * np.sqrt(
+        np.einsum("bd,nde,be->bn", ctx, ainv, ctx))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_bandit_forgetting_tracks_drift():
+    """With forget < 1 the posterior follows a reward flip; without it
+    the stale evidence dominates far longer."""
+    def run(forget):
+        b = LinearBandit(2, forget=forget, alpha=0.0, seed=0)
+        X = np.full((8, N_METRICS), 0.5, np.float32)
+        for phase, best in ((0, 0), (1, 1)):
+            for _ in range(40):
+                chosen = np.array([best] * 8)
+                r = np.full(8, 0.9, np.float32)
+                b.update(X, chosen, r)
+                other = np.array([1 - best] * 8)
+                b.update(X, other, np.full(8, 0.1, np.float32))
+        return b.predict(X[:1])[0]
+    est = run(0.9)
+    assert est[1] > est[0]            # flipped to the new best arm
+    # per-arm estimates stay near the post-flip rewards
+    assert abs(est[1] - 0.9) < 0.25 and abs(est[0] - 0.1) < 0.25
+
+
+def test_bandit_scores_at_matches_full_columns():
+    b = LinearBandit(8, alpha=0.6, seed=0)
+    X = RNG.random((10, N_METRICS)).astype(np.float32)
+    b.update(X, RNG.integers(0, 8, 10), RNG.random(10).astype(np.float32))
+    q = RNG.random((4, N_METRICS)).astype(np.float32)
+    cols = np.array([6, 1, 3])
+    np.testing.assert_allclose(b.scores_at(q, cols), b.scores(q)[:, cols],
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_bandit_ensure_grows():
+    b = LinearBandit(3, seed=0)
+    X = RNG.random((4, N_METRICS)).astype(np.float32)
+    b.update(X, np.array([0, 1, 2, 0]), np.ones(4, np.float32))
+    b.ensure(5)
+    assert b.n_models == 5 and b.A.shape[0] == 5
+    assert b.counts[3] == 0 and b.counts[0] == 2
+    assert b.scores(X).shape == (4, 5)
+
+
+# ----------------------------------------------------------------------
+# Pallas bandit_update kernel vs ref / numpy class
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("Bu,Bs,N,D", [
+    (16, 8, 12, 9), (64, 32, 300, 9), (1, 1, 5, 4), (0, 3, 7, 9),
+])
+def test_bandit_update_kernel_matches_ref(Bu, Bs, N, D):
+    x_up = RNG.random((Bu, D)).astype(np.float32)
+    w = np.zeros((Bu, N), np.float32)
+    if Bu:
+        w[np.arange(Bu), RNG.integers(0, N, Bu)] = 1.0
+    r = RNG.random(Bu).astype(np.float32)
+    xs = RNG.random((Bs, D)).astype(np.float32)
+    theta = RNG.standard_normal((N, D)).astype(np.float32)
+    L = RNG.standard_normal((N, D, D)).astype(np.float32) * 0.1
+    ainv = np.einsum("nde,nfe->ndf", L, L) + np.eye(D, dtype=np.float32)
+    alpha = 0.8
+    dA1, db1, u1 = K.bandit_update(x_up, w, r, xs, theta, ainv, alpha)
+    dA2, db2, u2 = R.bandit_update(
+        jnp.asarray(x_up), jnp.asarray(w), jnp.asarray(r), jnp.asarray(xs),
+        jnp.asarray(theta), jnp.asarray(ainv), alpha)
+    np.testing.assert_allclose(np.asarray(dA1), np.asarray(dA2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(db1), np.asarray(db2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(u1), np.asarray(u2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bandit_kernel_class_matches_numpy_class():
+    """update_and_score: kernel-backed bandit == numpy bandit."""
+    b_np = LinearBandit(300, policy="linucb", seed=2)
+    b_k = LinearBandit(300, policy="linucb", seed=2,
+                       use_kernel=True, kernel_min_n=0)
+    for _ in range(3):
+        X = RNG.random((24, N_METRICS)).astype(np.float32)
+        ch = RNG.integers(0, 300, 24)
+        r = RNG.random(24).astype(np.float32)
+        Xs = RNG.random((12, N_METRICS)).astype(np.float32)
+        s1 = b_np.update_and_score(X, ch, r, Xs)
+        s2 = b_k.update_and_score(X, ch, r, Xs)
+        np.testing.assert_allclose(s1, s2, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(b_np.A, b_k.A, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(b_np.b, b_k.b, rtol=1e-4, atol=1e-4)
+
+
+def test_bandit_kernel_update_matches_numpy_update():
+    """The serving learning step (observe -> update) hits the Pallas
+    kernel when use_kernel is on and stays numerically identical."""
+    b_np = LinearBandit(200, policy="linucb", forget=0.95, seed=4)
+    b_k = LinearBandit(200, policy="linucb", forget=0.95, seed=4,
+                       use_kernel=True, kernel_min_n=0)
+    for _ in range(3):
+        X = RNG.random((16, N_METRICS)).astype(np.float32)
+        ch = RNG.integers(0, 200, 16)
+        r = RNG.random(16).astype(np.float32)
+        b_np.update(X, ch, r)
+        b_k.update(X, ch, r)
+    np.testing.assert_allclose(b_np.A, b_k.A, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(b_np.b, b_k.b, rtol=1e-4, atol=1e-4)
+    q = RNG.random((4, N_METRICS)).astype(np.float32)
+    np.testing.assert_allclose(b_np.scores(q), b_k.scores(q),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_bandit_kernel_empty_batch_applies_no_forgetting():
+    """An empty outcome batch must not decay the posterior on either
+    path (regression: the kernel path used to forget on B=0)."""
+    kw = dict(policy="linucb", forget=0.9, seed=1)
+    b_np = LinearBandit(10, **kw)
+    b_k = LinearBandit(10, use_kernel=True, kernel_min_n=0, **kw)
+    X = RNG.random((8, N_METRICS)).astype(np.float32)
+    ch = RNG.integers(0, 10, 8)
+    r = RNG.random(8).astype(np.float32)
+    for b in (b_np, b_k):
+        b.update(X, ch, r)
+    empty = np.zeros((0, N_METRICS), np.float32)
+    Xs = RNG.random((4, N_METRICS)).astype(np.float32)
+    s_np = b_np.update_and_score(empty, np.zeros(0, np.int64),
+                                 np.zeros(0, np.float32), Xs)
+    s_k = b_k.update_and_score(empty, np.zeros(0, np.int64),
+                               np.zeros(0, np.float32), Xs)
+    np.testing.assert_allclose(s_np, s_k, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(b_np.A, b_k.A, rtol=1e-6, atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# reward shaping
+# ----------------------------------------------------------------------
+
+def test_reward_shaper_penalizes_cost_and_latency():
+    m = MRES()
+    m.register(make_entry("cheap-fast", cost=0.1, latency_ms=5))
+    m.register(make_entry("pricey-slow", cost=10.0, latency_ms=500))
+    sh = RewardShaper(m, RewardConfig(cost_weight=0.2, latency_weight=0.1))
+    r = sh.shape([0.8, 0.8], np.array([0, 1]))
+    assert r[0] == pytest.approx(0.8)          # extremes: zero penalty
+    assert r[1] == pytest.approx(0.8 - 0.3)    # full cost+latency penalty
+    # refresh picks up catalog growth
+    m.register(make_entry("mid", cost=5.0, latency_ms=250))
+    assert sh.shape([0.5], np.array([2]))[0] < 0.5
+
+
+# ----------------------------------------------------------------------
+# routing blend + orchestrator loop
+# ----------------------------------------------------------------------
+
+def test_adaptive_blend_overrides_static_choice():
+    """A bandit trained to favor a mid-tier model flips route_many."""
+    m = flat_catalog(6)
+    static = RoutingEngine(m, knn_k=6)
+    sig = TaskSignature(task_type="chat", domain="general", complexity=0.2)
+    d0 = static.route("balanced", sig)
+    bandit = LinearBandit(6, alpha=0.0, seed=0)
+    target = 2
+    assert d0.model != f"m{target}"
+    X = np.tile(static.task_vector(resolve("balanced"), sig), (40, 1))
+    chosen = np.full(40, target)
+    bandit.update(X, chosen, np.full(40, 1.0, np.float32))
+    for j in range(6):
+        if j != target:
+            bandit.update(X[:10], np.full(10, j), np.zeros(10, np.float32))
+    adaptive = RoutingEngine(m, knn_k=6, adaptive=bandit,
+                             adaptive_weight=4.0)
+    d1 = adaptive.route("balanced", sig)
+    assert d1.model == f"m{target}"
+    # weight 0 keeps the static decision
+    off = RoutingEngine(m, knn_k=6, adaptive=bandit, adaptive_weight=0.0)
+    assert off.route("balanced", sig).model == d0.model
+
+
+def test_orchestrator_reward_fn_closes_loop():
+    """route_all with a reward_fn converges onto the rewarded model."""
+    m = flat_catalog(6)
+    bandit = LinearBandit(6, seed=0)
+    router = OptiRoute(m, StubAnalyzer(), adaptive=bandit,
+                       adaptive_weight=2.0, reward_shaper=RewardShaper(m),
+                       reward_fn=lambda rq: 0.9 if rq.decision.model == "m1"
+                       else 0.1)
+    for step in range(25):
+        rqs = router.route_all([f"q{step}{i}" for i in range(6)], "balanced")
+    assert {rq.decision.model for rq in rqs} == {"m1"}
+    assert bandit.counts.sum() == 25 * 6
+
+
+def test_orchestrator_observe_explicit_qualities():
+    m = flat_catalog(4)
+    bandit = LinearBandit(4, seed=0)
+    router = OptiRoute(m, StubAnalyzer(), adaptive=bandit,
+                       adaptive_weight=1.0)
+    rqs = router.route_all(["a", "b", "c"], "balanced")
+    assert bandit.counts.sum() == 0        # no reward_fn -> no auto loop
+    rewards = router.observe(rqs, qualities=[0.5, 0.6, 0.7])
+    assert rewards is not None and rewards.shape == (3,)
+    assert bandit.counts.sum() == 3
+    # no bandit attached -> observe is a no-op
+    assert OptiRoute(m, StubAnalyzer()).observe(rqs, [0.1, 0.2, 0.3]) is None
+
+
+def test_serving_engine_observe_feeds_bandit():
+    from repro.serving.engine import Request, ServingEngine
+    m = flat_catalog(4)
+    bandit = LinearBandit(4, seed=0)
+    router = OptiRoute(m, StubAnalyzer(), adaptive=bandit,
+                       adaptive_weight=1.0, reward_shaper=RewardShaper(m))
+    eng = ServingEngine(router)
+    out = eng.submit([Request(text=f"q{i}", prefs="balanced", id=i)
+                      for i in range(5)])
+    assert all(r.rq is not None for r in out)
+    eng.observe(out, [0.8] * 5)
+    assert bandit.counts.sum() == 5
+
+
+def test_observe_never_double_counts():
+    """reward_fn auto-observe + explicit post-generation observe must
+    fold each outcome in exactly once."""
+    from repro.serving.engine import Request, ServingEngine
+    m = flat_catalog(4)
+    bandit = LinearBandit(4, seed=0)
+    router = OptiRoute(m, StubAnalyzer(), adaptive=bandit,
+                       adaptive_weight=1.0, reward_fn=lambda rq: 0.5)
+    eng = ServingEngine(router)
+    out = eng.submit([Request(text=f"q{i}", prefs="balanced", id=i)
+                      for i in range(5)])
+    assert bandit.counts.sum() == 5        # auto-observed in route_all
+    assert eng.observe(out, [0.9] * 5) is None
+    assert router.observe([r.rq for r in out]) is None
+    assert bandit.counts.sum() == 5        # still once per query
+    # misaligned observations are an error, not silent truncation
+    with pytest.raises(ValueError, match="one-to-one"):
+        eng.observe(out, [0.9] * 4)
+
+
+# ----------------------------------------------------------------------
+# non-stationary workload
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", DRIFT_KINDS)
+def test_drift_workload_deterministic_and_consistent(kind):
+    meta = [{"name": f"m{i}", "accuracy": 0.3 + 0.1 * i,
+             "task_types": ("chat",), "domains": tuple(DOMAINS)}
+            for i in range(5)]
+    wl = NonStationaryWorkload(
+        meta, DriftScenario(kind=kind, n_steps=12, batch=4, seed=5))
+    assert [q.text for q in wl.batch(3)] == [q.text for q in wl.batch(3)]
+    sigs = [q.sig for q in wl.batch(3)]
+    Q = wl.quality_matrix(3, sigs)
+    assert Q.shape == (4, 5)
+    for bi, s in enumerate(sigs):
+        for j in range(5):
+            assert Q[bi, j] == pytest.approx(wl.quality(3, f"m{j}", s))
+
+
+def test_model_degrade_flips_best_model():
+    meta = [{"name": f"m{i}", "accuracy": 0.3 + 0.15 * i,
+             "task_types": ("chat",), "domains": tuple(DOMAINS)}
+            for i in range(4)]
+    wl = NonStationaryWorkload(meta, DriftScenario(
+        kind="model-degrade", n_steps=10, batch=2, shift_frac=0.5,
+        degrade_delta=0.6, task_type="chat"))
+    assert wl.degraded_model == "m3"
+    sig = wl.batch(0)[0].sig
+    before = wl.quality(0, "m3", sig)
+    after = wl.quality(9, "m3", sig)
+    assert after < before
+    # the static table is untouched for other models
+    assert wl.quality(9, "m1", sig) == pytest.approx(
+        wl.quality(0, "m1", sig))
+
+
+def test_domain_shift_changes_mix():
+    meta = [{"name": "m0", "accuracy": 0.5, "task_types": ("chat",),
+             "domains": ("general",)}]
+    wl = NonStationaryWorkload(meta, DriftScenario(
+        kind="domain-shift", n_steps=10, batch=6, shift_frac=0.5,
+        domain_a="general", domain_b="legal", task_type="chat"))
+    assert {q.sig.domain for q in wl.batch(1)} == {"general"}
+    assert {q.sig.domain for q in wl.batch(8)} == {"legal"}
+
+
+def test_bandit_recovers_after_degrade():
+    """End-to-end: the blended router abandons a degraded model."""
+    m = flat_catalog(6)
+    metas = [meta_of(e) for e in m.entries]
+    an = StubAnalyzer()
+    static = OptiRoute(m, an, knn_k=6)
+    probe = static.route_all(["probe"] * 4, "accuracy-first")
+    fav = probe[0].decision.model
+    wl = NonStationaryWorkload(metas, DriftScenario(
+        kind="model-degrade", n_steps=30, batch=6, shift_frac=0.34,
+        degrade_model=fav, degrade_delta=0.7, task_type="chat", seed=2))
+    bandit = LinearBandit(6, alpha=0.5, forget=0.95, seed=0)
+    router = OptiRoute(m, an, knn_k=6, adaptive=bandit,
+                       adaptive_weight=2.0)
+    last = None
+    for t in range(30):
+        batch = wl.batch(t)
+        an.sig = batch[0].sig       # stub: one sig per batch
+        rqs = router.route_all([q.text for q in batch], "accuracy-first")
+        router.observe(rqs, [wl.quality(t, rq.decision.model, rq.sig)
+                             for rq in rqs])
+        last = [rq.decision.model for rq in rqs]
+    assert fav not in last          # routed around the degraded favorite

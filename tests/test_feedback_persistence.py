@@ -1,0 +1,145 @@
+"""FeedbackStore persistence (save/load JSON round-trip) and
+thread-safety under concurrent updates."""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.feedback import FeedbackStore, cluster_of
+from repro.core.preferences import DOMAINS, TASK_TYPES, TaskSignature
+
+MODELS = [f"m{i}" for i in range(6)]
+
+
+def _populated_store(n_events: int = 80, seed: int = 0) -> FeedbackStore:
+    fb = FeedbackStore()
+    rng = np.random.default_rng(seed)
+    for _ in range(n_events):
+        sig = TaskSignature(task_type=str(rng.choice(TASK_TYPES)),
+                            domain=str(rng.choice(DOMAINS)),
+                            complexity=float(rng.random()))
+        fb.record(sig, str(rng.choice(MODELS)), bool(rng.random() < 0.6))
+    return fb
+
+
+def _sigs(n: int, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    return [TaskSignature(task_type=str(rng.choice(TASK_TYPES)),
+                          domain=str(rng.choice(DOMAINS)),
+                          complexity=float(rng.random())) for _ in range(n)]
+
+
+def test_save_load_round_trip(tmp_path):
+    fb = _populated_store()
+    path = str(tmp_path / "fb.json")
+    fb.save(path)
+    fresh = FeedbackStore()
+    fresh.load(path)
+    sigs = _sigs(30)
+    np.testing.assert_array_equal(fresh.bias_batch(sigs, MODELS),
+                                  fb.bias_batch(sigs, MODELS))
+    assert fresh._count == fb._count
+    # EMA continues from the restored bias identically
+    sig = sigs[0]
+    assert fresh.record(sig, "m0", True) == fb.record(sig, "m0", True)
+
+
+def test_load_replaces_existing_state(tmp_path):
+    """Loading a snapshot must not splice stale in-memory entries in."""
+    fb = _populated_store(seed=3)
+    path = str(tmp_path / "fb.json")
+    fb.save(path)
+    dirty = _populated_store(seed=4)      # different clusters/biases
+    dirty.load(path)
+    sigs = _sigs(30)
+    np.testing.assert_array_equal(dirty.bias_batch(sigs, MODELS),
+                                  fb.bias_batch(sigs, MODELS))
+
+
+def test_save_is_atomic_no_partial_file(tmp_path):
+    """save overwrites via rename: the target is always valid JSON and
+    no temp droppings stay behind."""
+    fb = _populated_store()
+    path = tmp_path / "fb.json"
+    fb.save(str(path))
+    fb.record(TaskSignature(), "m0", True)
+    fb.save(str(path))                    # overwrite in place
+    data = json.loads(path.read_text())
+    assert isinstance(data, list) and data
+    assert [p.name for p in tmp_path.iterdir()] == ["fb.json"]
+
+
+def test_cluster_keys_survive_json(tmp_path):
+    """Cluster tuples (str, str, int) round-trip exactly."""
+    fb = FeedbackStore()
+    sig = TaskSignature(task_type="code", domain="software",
+                        complexity=0.9)
+    fb.record(sig, "m1", True)
+    path = str(tmp_path / "fb.json")
+    fb.save(path)
+    fresh = FeedbackStore()
+    fresh.load(path)
+    assert (cluster_of(sig), "m1") in fresh._bias
+
+
+def test_concurrent_records_are_all_counted():
+    fb = FeedbackStore()
+    sig_pool = _sigs(5, seed=9)
+    n_threads, per_thread = 8, 200
+    errs = []
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(per_thread):
+                b = fb.record(sig_pool[int(rng.integers(5))],
+                              str(rng.choice(MODELS)),
+                              bool(rng.random() < 0.5))
+                assert -1.0 <= b <= 1.0
+        except Exception as e:                     # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert len(fb.events()) == n_threads * per_thread
+    assert sum(fb._count.values()) == n_threads * per_thread
+
+
+def test_concurrent_save_load_record(tmp_path):
+    """Persistence racing live updates never corrupts the file."""
+    fb = _populated_store()
+    path = str(tmp_path / "fb.json")
+    fb.save(path)
+    stop = threading.Event()
+    errs = []
+
+    def recorder():
+        rng = np.random.default_rng(1)
+        while not stop.is_set():
+            fb.record(TaskSignature(), str(rng.choice(MODELS)), True)
+
+    def saver():
+        try:
+            for _ in range(50):
+                fb.save(path)
+                with open(path) as f:
+                    json.load(f)              # always complete JSON
+        except Exception as e:                 # noqa: BLE001
+            errs.append(e)
+
+    rec = threading.Thread(target=recorder)
+    sv = threading.Thread(target=saver)
+    rec.start()
+    sv.start()
+    sv.join()
+    stop.set()
+    rec.join()
+    assert not errs
+    fresh = FeedbackStore()
+    fresh.load(path)                           # final file loads clean

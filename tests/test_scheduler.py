@@ -70,3 +70,37 @@ def test_drains_empty_queue(setup):
     cb = ContinuousBatcher(cfg, params, slots=2, ctx_len=32)
     assert cb.run_until_drained() == []
     assert cb.tick() == 0
+
+
+def test_submit_rejects_overflowing_prompt(setup):
+    """Prompts that would run the decode position off the slot cache
+    (silent OOB .at[].set KV drops) must be refused at submit time."""
+    cfg, params = setup
+    cb = ContinuousBatcher(cfg, params, slots=2, ctx_len=16)
+    for bad_len in (16, 17, 40):
+        with pytest.raises(ValueError, match="ctx_len"):
+            cb.submit(SlotRequest(
+                id=0, tokens=RNG.integers(2, cfg.vocab_size,
+                                          bad_len).astype(np.int32),
+                max_new=2))
+    assert not cb.queue                  # nothing was enqueued
+    # the boundary case: len + max_new - 1 == ctx_len is admissible
+    cb.submit(SlotRequest(
+        id=1, tokens=RNG.integers(2, cfg.vocab_size, 15).astype(np.int32),
+        max_new=2))
+    assert len(cb.queue) == 1
+
+
+def test_submit_truncate_clips_and_generates(setup):
+    cfg, params = setup
+    cb = ContinuousBatcher(cfg, params, slots=2, ctx_len=16)
+    long = RNG.integers(2, cfg.vocab_size, 48).astype(np.int32)
+    req = SlotRequest(id=0, tokens=long, max_new=3)
+    cb.submit(req, truncate=True)
+    assert len(req.tokens) == 14         # clipped to ctx_len - max_new + 1
+    np.testing.assert_array_equal(req.tokens, long[:14])
+    finished = cb.run_until_drained()
+    assert len(finished) == 1 and len(finished[0].out) == 3
+    # truncated prompt == natively-short prompt (same decode result)
+    want = _sequential(cfg, params, long[:14], 3)
+    assert finished[0].out == want

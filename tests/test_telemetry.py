@@ -1,0 +1,112 @@
+"""Telemetry ledger: rolling-window QPS, per-model aggregates,
+fallback-funnel stats and thumbs attribution."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.routing import FALLBACK_LADDER
+from repro.core.telemetry import RouteEvent, Telemetry
+
+
+def _ev(ts, model="m0", fallback="", route_s=0.0, analyzer_s=0.0,
+        cost=0.0):
+    return RouteEvent(ts=ts, model=model, task_type="chat",
+                      domain="general", complexity=0.5,
+                      fallback=fallback, analyzer_s=analyzer_s,
+                      route_s=route_s, sim_cost=cost)
+
+
+def test_qps_rolling_window():
+    tel = Telemetry(window_s=10.0)
+    base = 1000.0
+    for i in range(40):                  # 4 events/s for 10s
+        tel.record(_ev(base + i * 0.25))
+    # window (now - 10, now]: 39 of 40 events (ts == now-10 excluded)
+    assert tel.qps(now=base + 10.0) == pytest.approx(3.9)
+    # events age out of the window: ts in (1005, 1009.75] -> 19 events
+    assert tel.qps(now=base + 15.0) == pytest.approx(1.9)
+    assert tel.qps(now=base + 100.0) == 0.0
+
+
+def test_qps_empty():
+    assert Telemetry().qps() == 0.0
+
+
+def test_per_model_aggregates():
+    tel = Telemetry()
+    for _ in range(3):
+        tel.record(_ev(1.0, "a", route_s=0.01, cost=2.0))
+    tel.record(_ev(1.0, "b", fallback="generalist", route_s=0.02,
+                   cost=5.0))
+    tel.attach_thumbs("a", True)
+    tel.attach_thumbs("a", False)
+    agg = tel.per_model()
+    assert agg["a"]["requests"] == 3
+    assert agg["a"]["cost"] == pytest.approx(6.0)
+    assert agg["a"]["route_s"] == pytest.approx(0.03)
+    assert agg["a"]["fallback_rate"] == 0.0
+    assert agg["a"]["thumbs_up"] == 1 and agg["a"]["thumbs_down"] == 1
+    assert agg["a"]["satisfaction"] == pytest.approx(0.5)
+    assert agg["b"]["fallback_rate"] == 1.0
+    assert agg["b"]["satisfaction"] is None
+
+
+def test_attach_thumbs_targets_latest_unrated():
+    tel = Telemetry()
+    tel.record(_ev(1.0, "a"))
+    tel.record(_ev(2.0, "a"))
+    tel.attach_thumbs("a", False)
+    with tel._lock:
+        assert tel._events[0].thumbs is None
+        assert tel._events[1].thumbs is False
+
+
+def test_fallback_funnel_counts_ladder_stages():
+    tel = Telemetry()
+    mix = {"": 5, "widened-knn": 2, "generalist": 3, "any": 1}
+    for kind, n in mix.items():
+        assert kind in FALLBACK_LADDER
+        for _ in range(n):
+            tel.record(_ev(1.0, fallback=kind))
+    assert tel.fallback_funnel() == mix
+    assert tel.fallback_rate() == pytest.approx(6 / 11)
+    s = tel.summary()
+    assert s["fallback_funnel"] == mix
+    assert s["events"] == 11
+
+
+def test_latency_percentiles():
+    tel = Telemetry()
+    for i in range(100):
+        tel.record(_ev(1.0, route_s=(i + 1) / 1000.0, analyzer_s=0.0))
+    p = tel.latency_percentiles()
+    assert p["p50"] == pytest.approx(0.0505, rel=0.01)
+    assert p["p99"] > p["p90"] > p["p50"]
+    assert Telemetry().latency_percentiles() == {
+        "p50": 0.0, "p90": 0.0, "p99": 0.0}
+
+
+def test_concurrent_records():
+    tel = Telemetry()
+    errs = []
+
+    def worker(i):
+        try:
+            for j in range(300):
+                tel.record(_ev(float(j), f"m{i % 3}",
+                               fallback="any" if j % 7 == 0 else ""))
+        except Exception as e:                 # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    s = tel.summary()
+    assert s["events"] == 1800
+    assert sum(s["fallback_funnel"].values()) == 1800
+    assert sum(a["requests"] for a in s["per_model"].values()) == 1800
