@@ -54,7 +54,7 @@ class OptiRoute:
                  use_kernel: bool = False, feedback_weight: float = 0.5,
                  telemetry=None, adaptive=None,
                  adaptive_weight: float = 0.0, reward_fn=None,
-                 reward_shaper=None):
+                 reward_shaper=None, load=None, load_weight: float = 0.0):
         self.mres = mres
         self.analyzer = analyzer
         self.feedback = feedback if feedback is not None else FeedbackStore()
@@ -62,7 +62,8 @@ class OptiRoute:
                                     use_kernel=use_kernel,
                                     feedback_weight=feedback_weight,
                                     adaptive=adaptive,
-                                    adaptive_weight=adaptive_weight)
+                                    adaptive_weight=adaptive_weight,
+                                    load=load, load_weight=load_weight)
         self.merger = (ModelMerger(mres, merge_threshold)
                        if merge_threshold is not None else None)
         self.batch_sample_frac = batch_sample_frac
@@ -73,6 +74,9 @@ class OptiRoute:
         self.adaptive = adaptive
         self.reward_fn = reward_fn
         self.reward_shaper = reward_shaper
+        # load-aware loop: live per-model capacity state the serving
+        # engine maintains and route_many penalizes at ``load_weight``
+        self.load = load
 
     # ------------------------- interactive -------------------------
     def route(self, text: str, prefs) -> RoutedQuery:

@@ -21,8 +21,16 @@ Batched pipeline (B queries, N catalog entries, M metric axes):
      the normalized metric embeddings plus a vectorized (B, N) feedback
      bias; when an adaptive bandit is attached (``repro.adaptive``) its
      learned reward estimates join the blend at ``adaptive_weight``
-     (scored only at the candidate columns, cost ~ k not N); per-row
-     argmax over the candidate mask wins.
+     (scored only at the candidate columns, cost ~ k not N); when a
+     ``LoadTracker`` is attached its saturating expected-wait penalty
+     joins at ``load_weight`` the same way; per-row argmax over the
+     candidate mask wins.
+
+When load-aware routing is on, the (N,) load penalty row is ALSO fused
+into the kNN itself — added to valid rows inside the batched scoring
+matmul (the numpy fused-matmul path) or via the Pallas kernel's
+``row_bias`` operand — so a saturated model does not crowd healthier
+alternates out of the candidate set in the first place.
 
 Filters only apply when the analyzer is confident (per query).  With the
 masks fused into the kNN, the candidate set is the k best models *among
@@ -110,7 +118,8 @@ class RoutingEngine:
                  feedback_weight: float = 0.5,
                  use_kernel: bool = False, kernel_min_n: int = 1024,
                  use_complexity: bool = True,
-                 adaptive=None, adaptive_weight: float = 0.0):
+                 adaptive=None, adaptive_weight: float = 0.0,
+                 load=None, load_weight: float = 0.0):
         self.mres = mres
         self.feedback = feedback
         self.knn_k = knn_k
@@ -125,6 +134,11 @@ class RoutingEngine:
         # ``adaptive_weight`` (the preference knob; 0 = static routing)
         self.adaptive = adaptive
         self.adaptive_weight = float(adaptive_weight)
+        # load-aware layer (repro.serving.load): live expected-wait
+        # penalties blended into the scores at ``load_weight`` (0 =
+        # load-blind routing) and fused into the kNN as a row bias
+        self.load = load
+        self.load_weight = float(load_weight)
 
     # ------------------------------------------------------------------
     def task_vector(self, prefs: UserPreferences, sig: TaskSignature
@@ -136,7 +150,8 @@ class RoutingEngine:
 
     # ------------------------------------------------------------------
     def _knn_batch(self, T: np.ndarray, k: int, ti: np.ndarray,
-                   di: np.ndarray, snap) -> Tuple[np.ndarray, np.ndarray]:
+                   di: np.ndarray, snap, bias: Optional[np.ndarray] = None
+                   ) -> Tuple[np.ndarray, np.ndarray]:
         """Mask-fused batched kNN: (vals (B, k), idx (B, k)).
 
         Rows failing the hierarchical filters surface as vals == -inf.
@@ -145,6 +160,11 @@ class RoutingEngine:
         single matmul against the MRES's augmented routing matrix (see
         ``repro.core.mres``) — valid rows score their pure cosine,
         filtered rows drop below -2 — then top-k selects per row.
+
+        ``bias`` (N,) is an optional additive per-catalog-row term
+        (the negated load penalty) applied to VALID rows only, fused
+        into the matmul on both backends, so candidate selection under
+        load prefers models with headroom.
         """
         emb, _, tt_matrix, dm_matrix, _, route_mat = snap
         B = T.shape[0]
@@ -153,7 +173,8 @@ class RoutingEngine:
             if self._kernel_fn is None:
                 self._kernel_fn = K.router_topk
             valid = tt_matrix[ti] & dm_matrix[di]             # (B, N)
-            vals, idx = self._kernel_fn(emb, T, k, mask=valid)
+            vals, idx = self._kernel_fn(emb, T, k, mask=valid,
+                                        row_bias=bias)
             return np.asarray(vals), np.asarray(idx)
         # fused matmul: [T/|T|, onehot(tt), onehot(dm), -2b] @ A^T
         tn = np.sqrt(np.einsum("bm,bm->b", T, T)) + 1e-9
@@ -165,6 +186,11 @@ class RoutingEngine:
         Q[:, BIAS_COL] = -2.0 * MASK_BONUS
         ms = Q @ route_mat.T                                  # (B, N)
         n = ms.shape[1]
+        if bias is not None:
+            # resolve validity BEFORE the bias shifts scores (a large
+            # penalty must not be confused with a failed filter)
+            ms = np.where(ms > -2.0, ms + bias[None, :].astype(np.float32),
+                          -np.inf)
         if B >= 4 and k <= 16 and n >= 1024:
             vals, idx = _topk_two_level(ms, k)
         else:
@@ -172,6 +198,8 @@ class RoutingEngine:
             idx = (np.argpartition(ms, n - k, axis=1)[:, n - k:] if k < n
                    else np.broadcast_to(np.arange(n), ms.shape))
             vals = np.take_along_axis(ms, idx, axis=1)
+        if bias is not None:
+            return vals, idx
         return np.where(vals > -2.0, vals, -np.inf), idx
 
     # ------------------------------------------------------------------
@@ -225,9 +253,21 @@ class RoutingEngine:
         if adaptive_on:
             self.adaptive.ensure(n)
 
+        # load-aware layer: one (N,) expected-wait penalty snapshot per
+        # batch, fused into the kNN as a row bias AND subtracted from
+        # the candidate scores below at ``load_weight``
+        load_on = self.load is not None and self.load_weight != 0.0
+        lpen = None
+        if load_on:
+            self.load.ensure(n)
+            # slice to the catalog: a tracker pre-sized for growth (or
+            # shared) may carry more arms than this snapshot has rows
+            lpen = self.load_weight * self.load.penalty()[:n]  # (N,)
+
         # stage 1: batched kNN with the filter masks fused in
         k = min(self.knn_k, n)
-        vals, idx = self._knn_batch(T, k, ti, di, snap)
+        vals, idx = self._knn_batch(T, k, ti, di, snap,
+                                    bias=None if lpen is None else -lpen)
         finite = np.isfinite(vals) & (idx >= 0)
         idx = np.where(finite, idx, 0)        # safe gather index
         has_primary = finite.any(axis=1)                          # (B,)
@@ -249,6 +289,10 @@ class RoutingEngine:
             asub = self.adaptive.scores_at(T, cols)               # (B, C)
             cscores = cscores + self.adaptive_weight * \
                 np.take_along_axis(asub, inv.reshape(idx.shape), axis=1)
+        if lpen is not None:
+            # saturated candidates lose up to load_weight (the penalty
+            # saturates in [0, 1)), again only at the candidate columns
+            cscores = cscores - lpen[idx]
         cscores = np.where(finite, cscores, -np.inf)
         order = np.argsort(-cscores, axis=1, kind="stable")       # (B, k)
         knn_found = finite.sum(axis=1).tolist()
@@ -258,7 +302,13 @@ class RoutingEngine:
         idx_s = np.take_along_axis(idx, order, axis=1).tolist()
         sc_s = np.take_along_axis(cscores, order, axis=1).tolist()
         fin_s = np.take_along_axis(finite, order, axis=1).tolist()
-        sim_s = np.take_along_axis(vals, order, axis=1)[:, 0].tolist()
+        simv = np.take_along_axis(vals, order, axis=1)[:, 0]
+        if lpen is not None:
+            # the kNN vals carry the fused load bias; the reported
+            # similarity stays PURE cosine regardless of the knob
+            top = np.take_along_axis(idx, order, axis=1)[:, 0]
+            simv = np.where(np.isfinite(simv), simv + lpen[top], simv)
+        sim_s = simv.tolist()
 
         r = min(max(5, k), n)
         out: List[Optional[RoutingDecision]] = [None] * B
@@ -292,13 +342,13 @@ class RoutingEngine:
             out[b] = self._route_fallback(
                 b, emb, names, T, W,
                 (tt_b & dm_matrix[di[b]], tt_b, gmask), bias_b,
-                adaptive_on, sigs[b], n, k, r)
+                adaptive_on, lpen, sigs[b], n, k, r)
         return out                      # type: ignore[return-value]
 
     # ------------------------------------------------------------------
     def _route_fallback(self, b: int, emb, names, T, W, ladder, bias_row,
-                        adaptive_on: bool, sig: TaskSignature, n: int,
-                        k: int, r: int) -> RoutingDecision:
+                        adaptive_on: bool, lpen, sig: TaskSignature,
+                        n: int, k: int, r: int) -> RoutingDecision:
         """Fallback ladder for one row whose fused kNN came up empty."""
         for kind, mask in zip(FALLBACK_LADDER[1:], ladder):
             if mask.any():
@@ -312,6 +362,8 @@ class RoutingEngine:
         if adaptive_on:
             scores = scores + self.adaptive_weight * \
                 self.adaptive.scores_at(T[b:b + 1], cidx)[0]
+        if lpen is not None:
+            scores = scores - lpen[cidx]
         order = np.argsort(-scores, kind="stable")
         best = int(cidx[order[0]])
         sim = float(cosine_sim(emb[best:best + 1], T[b])[0])

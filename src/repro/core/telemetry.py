@@ -33,6 +33,7 @@ class Telemetry:
     def __init__(self, window_s: float = 60.0):
         self.window_s = window_s
         self._events: List[RouteEvent] = []
+        self._admissions: Dict[str, int] = {}
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------
@@ -50,6 +51,19 @@ class Telemetry:
             analyzer_s=rq.analyzer_s, route_s=rq.route_s,
             sim_cost=sim_cost))
 
+    def record_admission(self, kind: str, count: int = 1) -> None:
+        """Count one deadline-admission outcome (``admitted`` /
+        ``rerouted`` / ``shed`` — see ``repro.serving.load``)."""
+        with self._lock:
+            self._admissions[kind] = self._admissions.get(kind, 0) + count
+
+    def admission_funnel(self) -> Dict[str, int]:
+        """Deadline-admission outcome counts: how much traffic was
+        admitted as routed, rerouted to a lower-ranked candidate to
+        make its SLO, or shed as a guaranteed miss."""
+        with self._lock:
+            return dict(self._admissions)
+
     def attach_thumbs(self, model: str, thumbs_up: bool) -> None:
         with self._lock:
             for e in reversed(self._events):
@@ -59,8 +73,10 @@ class Telemetry:
 
     # ------------------------------------------------------------------
     def per_model(self) -> Dict[str, Dict[str, float]]:
+        import numpy as np
         with self._lock:
             agg: Dict[str, Dict[str, float]] = {}
+            lat: Dict[str, List[float]] = {}
             for e in self._events:
                 a = agg.setdefault(e.model, dict(
                     requests=0, fallbacks=0, cost=0.0, route_s=0.0,
@@ -69,14 +85,19 @@ class Telemetry:
                 a["fallbacks"] += bool(e.fallback)
                 a["cost"] += e.sim_cost
                 a["route_s"] += e.route_s
+                lat.setdefault(e.model, []).append(e.analyzer_s + e.route_s)
                 if e.thumbs is True:
                     a["thumbs_up"] += 1
                 elif e.thumbs is False:
                     a["thumbs_down"] += 1
-        for a in agg.values():
+        for m, a in agg.items():
             a["fallback_rate"] = a["fallbacks"] / max(a["requests"], 1)
             n_fb = a["thumbs_up"] + a["thumbs_down"]
             a["satisfaction"] = (a["thumbs_up"] / n_fb) if n_fb else None
+            # per-model routing-latency distribution, not just means:
+            # operators alarm on tails, and means hide queueing spikes
+            a["latency_p50_s"] = float(np.quantile(lat[m], 0.5))
+            a["latency_p99_s"] = float(np.quantile(lat[m], 0.99))
         return agg
 
     def fallback_rate(self) -> float:
@@ -118,6 +139,7 @@ class Telemetry:
             "events": len(self._events),
             "fallback_rate": self.fallback_rate(),
             "fallback_funnel": self.fallback_funnel(),
+            "admission_funnel": self.admission_funnel(),
             "latency": self.latency_percentiles(),
             "per_model": self.per_model(),
         }

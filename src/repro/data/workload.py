@@ -9,8 +9,9 @@ per-model ground-truth quality table used by the routing benchmarks.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -300,3 +301,171 @@ class NonStationaryWorkload:
         base = np.array([[quality_of(m, s) for m in self.meta]
                          for s in sigs], np.float64)
         return np.clip(base + self._offsets(t)[None, :], 0.0, 1.0)
+
+
+# ----------------------------------------------------------------------
+# bursty open-loop traffic + discrete-event serving simulation
+# (load-/SLO-aware routing benchmarks)
+# ----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TrafficScenario:
+    """A bursty open-loop arrival episode.
+
+    Arrivals follow a piecewise-homogeneous Poisson process: ``base_rate``
+    req/s outside the burst window, ``burst_rate`` inside it (the window
+    spans ``[burst_start, burst_start + burst_len)`` as fractions of the
+    episode).  Every request carries the same latency SLO
+    ``deadline_ms``.  The stress shape this models: steady traffic a
+    catalog handles easily, then a burst that saturates the statically
+    best-scoring model while its alternates still have headroom.
+    """
+    duration_s: float = 20.0
+    base_rate: float = 30.0           # req/s outside the burst
+    burst_rate: float = 150.0         # req/s inside the burst
+    burst_start: float = 0.25         # fraction of the episode
+    burst_len: float = 0.35           # fraction of the episode
+    deadline_ms: float = 400.0
+    seed: int = 0
+    task_type: Optional[str] = "chat"
+    domain: Optional[str] = "general"
+
+    def validate(self) -> "TrafficScenario":
+        assert self.duration_s > 0 and self.base_rate > 0
+        assert self.burst_rate >= self.base_rate
+        assert 0.0 <= self.burst_start < 1.0
+        assert 0.0 < self.burst_len <= 1.0 - self.burst_start
+        return self
+
+    @property
+    def burst_window_s(self) -> Tuple[float, float]:
+        t0 = self.burst_start * self.duration_s
+        return t0, t0 + self.burst_len * self.duration_s
+
+
+def poisson_arrivals(sc: TrafficScenario) -> np.ndarray:
+    """Arrival times for the scenario by thinning: draw a homogeneous
+    process at the peak rate, keep each point with prob rate(t)/peak.
+    Deterministic in ``sc.seed``."""
+    sc = sc.validate()
+    rng = np.random.default_rng(sc.seed)
+    rmax = sc.burst_rate
+    ts: List[np.ndarray] = []
+    t = 0.0
+    while t < sc.duration_s:                 # chunked gap draws
+        gaps = rng.exponential(1.0 / rmax, int(rmax * sc.duration_s) + 64)
+        chunk = t + np.cumsum(gaps)
+        ts.append(chunk)
+        t = float(chunk[-1])
+    all_ts = np.concatenate(ts)
+    all_ts = all_ts[all_ts < sc.duration_s]
+    b0, b1 = sc.burst_window_s
+    rate = np.where((all_ts >= b0) & (all_ts < b1),
+                    sc.burst_rate, sc.base_rate)
+    keep = rng.random(all_ts.size) < rate / rmax
+    return all_ts[keep]
+
+
+class ServingSimulator:
+    """Discrete-event queueing simulator over a routed catalog.
+
+    Model ``n`` has ``capacity[n]`` parallel servers with deterministic
+    per-request service time ``service_s[n]``.  Requests arrive at the
+    given times, are assigned a model by ``route_fn`` (which sees the
+    LIVE tracker state, because every queue/slot transition is mirrored
+    into ``tracker`` as it happens), wait FIFO for a free server,
+    execute, and complete.  Shed requests never occupy a server.
+
+    ``route_fn(i, t) -> (model_col, admission_kind)`` with kind in
+    ``repro.serving.load.ADMISSION_KINDS``; a load-blind policy simply
+    always returns ("admitted", static choice).
+
+    ``run`` returns packed per-request arrays (model, admission codes,
+    wait/latency seconds, SLO misses) plus aggregate percentiles — the
+    evidence table the load-aware benchmark reads.
+    """
+
+    def __init__(self, service_s: Sequence[float],
+                 capacity: Sequence[float], tracker=None):
+        self.service_s = np.asarray(service_s, np.float64)
+        self.capacity = np.asarray(capacity, np.int64)
+        assert self.service_s.shape == self.capacity.shape
+        assert (self.service_s > 0).all() and (self.capacity > 0).all()
+        self.tracker = tracker
+        if tracker is not None:
+            tracker.ensure(len(self.service_s))
+            for j, c in enumerate(self.capacity):
+                tracker.set_capacity(j, float(c))
+
+    # ------------------------------------------------------------------
+    def run(self, arrivals: np.ndarray,
+            route_fn: Callable[[int, float], Tuple[int, str]],
+            deadline_ms: Optional[float] = None) -> Dict[str, np.ndarray]:
+        arrivals = np.asarray(arrivals, np.float64)
+        R = arrivals.size
+        n = len(self.service_s)
+        busy = np.zeros(n, np.int64)
+        queues: List[List[Tuple[float, int]]] = [[] for _ in range(n)]
+        qhead = np.zeros(n, np.int64)        # FIFO pop index per model
+        done_t = np.full(R, np.nan)
+        start_t = np.full(R, np.nan)
+        model = np.full(R, -1, np.int64)
+        shed = np.zeros(R, bool)
+        rerouted = np.zeros(R, bool)
+        events: List[Tuple[float, int, int]] = []   # (finish, model, req)
+        trk = self.tracker
+
+        def begin(req: int, m: int, now: float) -> None:
+            busy[m] += 1
+            start_t[req] = now
+            fin = now + self.service_s[m]
+            done_t[req] = fin
+            if trk is not None:
+                trk.start(m)
+            heapq.heappush(events, (fin, m, req))
+
+        def drain_until(now: float) -> None:
+            while events and events[0][0] <= now:
+                fin, m, req = heapq.heappop(events)
+                busy[m] -= 1
+                if trk is not None:
+                    trk.finish(m, float(self.service_s[m]))
+                if qhead[m] < len(queues[m]):        # hand the slot on
+                    _, nxt = queues[m][qhead[m]]
+                    qhead[m] += 1
+                    begin(nxt, m, fin)
+
+        for i, t in enumerate(arrivals):
+            drain_until(float(t))
+            m, kind = route_fn(i, float(t))
+            if kind == "shed":
+                shed[i] = True
+                model[i] = m
+                continue
+            rerouted[i] = kind == "rerouted"
+            model[i] = m
+            if trk is not None:
+                trk.admit(m)
+            if busy[m] < self.capacity[m]:
+                begin(i, m, float(t))
+            else:
+                queues[m].append((float(t), i))
+        drain_until(np.inf)                          # flush the tail
+
+        served = ~shed
+        latency = np.where(served, done_t - arrivals, np.nan)
+        wait = np.where(served, start_t - arrivals, np.nan)
+        out: Dict[str, np.ndarray] = {
+            "arrival_s": arrivals, "model": model, "shed": shed,
+            "rerouted": rerouted, "latency_s": latency, "wait_s": wait,
+        }
+        lat_ok = latency[served]
+        out["p50_s"] = float(np.quantile(lat_ok, 0.5)) if lat_ok.size else 0.0
+        out["p99_s"] = float(np.quantile(lat_ok, 0.99)) if lat_ok.size else 0.0
+        if deadline_ms is not None:
+            # a shed request is an SLO miss by definition: it got no answer
+            miss = shed | (np.nan_to_num(latency, nan=np.inf)
+                           > deadline_ms / 1e3)
+            out["slo_miss"] = miss
+            out["slo_miss_rate"] = float(miss.mean()) if R else 0.0
+        return out

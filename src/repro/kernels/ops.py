@@ -50,7 +50,8 @@ def _clamp_blk_n(blk_n: int, n: int) -> int:
 
 def router_topk(emb, queries, k: int,
                 mask: Optional[jnp.ndarray] = None,
-                weights: Optional[jnp.ndarray] = None, *,
+                weights: Optional[jnp.ndarray] = None,
+                row_bias: Optional[jnp.ndarray] = None, *,
                 blk_q: int = 8, blk_n: int = 512,
                 interpret: Optional[bool] = None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -58,9 +59,12 @@ def router_topk(emb, queries, k: int,
 
     emb (N, D); queries (Q, D); mask (N,) or (Q, N) bool — a 2-D mask
     gives every query its own hierarchical-filter row (the batched
-    routing path fuses task-type & domain masks here); weights (D,).
+    routing path fuses task-type & domain masks here); weights (D,);
+    row_bias (N,) f32 — additive per-catalog-row score term fused into
+    the scoring matmul (the load-aware path passes the negated live
+    expected-wait penalty), applied to mask-valid rows only.
     Returns (vals (Q, k) f32, idx (Q, k) i32).  Masked / padded rows
-    surface as vals == -inf.
+    surface as vals == -inf, as does the tail when k > N.
     """
     emb = jnp.asarray(emb, jnp.float32)
     queries = jnp.asarray(queries, jnp.float32)
@@ -78,11 +82,14 @@ def router_topk(emb, queries, k: int,
     maskf = (jnp.asarray(mask, jnp.float32) if mask is not None
              else jnp.ones((N,), jnp.float32))
     maskf = jnp.broadcast_to(maskf, (Q, N)) if maskf.ndim == 1 else maskf
+    biasf = (jnp.asarray(row_bias, jnp.float32)[None, :]
+             if row_bias is not None else jnp.zeros((1, N), jnp.float32))
     ewp = _pad_to(_pad_to(ew, LANE, 1), blk_n, 0)
     qnp = _pad_to(_pad_to(qn, LANE, 1), blk_q, 0)
     maskp = _pad_to(_pad_to(maskf, blk_n, 1), blk_q, 0)      # pad -> 0 -> -inf
+    biasp = _pad_to(biasf, blk_n, 1)
 
-    vals, idx = router_topk_pallas(qnp, ewp, maskp, k, blk_q=blk_q,
+    vals, idx = router_topk_pallas(qnp, ewp, maskp, biasp, k, blk_q=blk_q,
                                    blk_n=blk_n, interpret=interp)
     return vals[:Q], idx[:Q]
 

@@ -18,29 +18,40 @@ import jax.numpy as jnp
 
 def router_topk(emb: jnp.ndarray, queries: jnp.ndarray, k: int,
                 mask: Optional[jnp.ndarray] = None,
-                weights: Optional[jnp.ndarray] = None
+                weights: Optional[jnp.ndarray] = None,
+                row_bias: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Top-k catalog rows by (optionally weighted) cosine similarity.
 
-    emb:     (N, D) catalog metric embeddings.
-    queries: (Q, D) task vectors.
-    mask:    (N,) or (Q, N) bool — rows excluded by the hierarchical
-             filter get score -inf (they can still appear in the idx
-             tail when fewer than k rows survive; callers check
-             vals > -inf).  A 2-D mask is per-query.
-    weights: (D,) per-axis importance applied INSIDE the dot product
-             (weighted cosine: sim = sum_d w_d e_d q_d / (|e||q|)).
+    emb:      (N, D) catalog metric embeddings.
+    queries:  (Q, D) task vectors.
+    mask:     (N,) or (Q, N) bool — rows excluded by the hierarchical
+              filter get score -inf (they can still appear in the idx
+              tail when fewer than k rows survive; callers check
+              vals > -inf).  A 2-D mask is per-query.
+    weights:  (D,) per-axis importance applied INSIDE the dot product
+              (weighted cosine: sim = sum_d w_d e_d q_d / (|e||q|)).
+    row_bias: (N,) additive per-catalog-row term (e.g. the negated live
+              load penalty) applied to VALID rows only — masked rows
+              stay -inf regardless of bias.
     Returns (vals (Q, k) f32 descending, idx (Q, k) int32).
+    k > N is allowed: the tail beyond the catalog surfaces as -inf.
     """
     emb = emb.astype(jnp.float32)
     q = queries.astype(jnp.float32)
+    N = emb.shape[0]
     en = jnp.linalg.norm(emb, axis=1, keepdims=True) + 1e-9
     qn = jnp.linalg.norm(q, axis=1, keepdims=True) + 1e-9
     ew = emb * (weights.astype(jnp.float32)[None, :] if weights is not None else 1.0)
     scores = (q / qn) @ (ew / en).T                      # (Q, N)
+    if row_bias is not None:
+        scores = scores + row_bias.astype(jnp.float32)[None, :]
     if mask is not None:
         mask2 = mask if mask.ndim == 2 else mask[None, :]
         scores = jnp.where(mask2, scores, -jnp.inf)
+    if k > N:                       # pad the catalog axis with -inf rows
+        scores = jnp.pad(scores, ((0, 0), (0, k - N)),
+                         constant_values=-jnp.inf)
     vals, idx = jax.lax.top_k(scores, k)
     return vals, idx.astype(jnp.int32)
 

@@ -46,8 +46,8 @@ def _select_topk(vals, idx, k):
     return jnp.stack(out_v, axis=1), jnp.stack(out_i, axis=1)
 
 
-def _router_topk_kernel(q_ref, emb_ref, mask_ref, vals_ref, idx_ref,
-                        sv_ref, si_ref, *, k: int, blk_n: int):
+def _router_topk_kernel(q_ref, emb_ref, mask_ref, bias_ref, vals_ref,
+                        idx_ref, sv_ref, si_ref, *, k: int, blk_n: int):
     jn = pl.program_id(1)
     nn = pl.num_programs(1)
 
@@ -59,10 +59,13 @@ def _router_topk_kernel(q_ref, emb_ref, mask_ref, vals_ref, idx_ref,
     q = q_ref[...].astype(jnp.float32)                      # (BLK_Q, D)
     emb = emb_ref[...].astype(jnp.float32)                  # (BLK_N, D)
     mask = mask_ref[...]                                    # (BLK_Q, BLK_N)
+    bias = bias_ref[...]                                    # (1, BLK_N)
     scores = jax.lax.dot_general(
         q, emb, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)                 # (BLK_Q, BLK_N)
-    scores = jnp.where(mask > 0, scores, NEG_INF)
+    # bias joins valid rows only: a heavy load penalty must stay
+    # distinguishable from a failed hierarchical filter (-inf)
+    scores = jnp.where(mask > 0, scores + bias, NEG_INF)
 
     col0 = jn * blk_n
     col_idx = col0 + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
@@ -81,11 +84,13 @@ def _router_topk_kernel(q_ref, emb_ref, mask_ref, vals_ref, idx_ref,
 
 @functools.partial(jax.jit, static_argnames=("k", "blk_q", "blk_n", "interpret"))
 def router_topk_pallas(qn: jnp.ndarray, embn: jnp.ndarray, mask: jnp.ndarray,
-                       k: int, *, blk_q: int = 8, blk_n: int = 512,
-                       interpret: bool = True):
+                       bias: jnp.ndarray, k: int, *, blk_q: int = 8,
+                       blk_n: int = 512, interpret: bool = True):
     """qn (Q, D) unit rows; embn (N, D) unit(+weighted) rows;
     mask (Q, N) f32 — per-query hierarchical filter mask (ops.py
-    broadcasts a shared (N,) mask to all queries).
+    broadcasts a shared (N,) mask to all queries); bias (1, N) f32 —
+    additive per-catalog-row score term (zeros when unused), applied
+    to mask-valid rows in-register right after the scoring matmul.
 
     Q % blk_q == 0, N % blk_n == 0, D padded to 128 (done by ops.py).
     Returns (vals (Q, k) f32, idx (Q, k) i32).
@@ -94,6 +99,7 @@ def router_topk_pallas(qn: jnp.ndarray, embn: jnp.ndarray, mask: jnp.ndarray,
     N = embn.shape[0]
     assert Q % blk_q == 0 and N % blk_n == 0, (Q, N, blk_q, blk_n)
     assert mask.shape == (Q, N), (mask.shape, Q, N)
+    assert bias.shape == (1, N), (bias.shape, N)
     grid = (Q // blk_q, N // blk_n)
 
     kernel = functools.partial(_router_topk_kernel, k=k, blk_n=blk_n)
@@ -104,6 +110,7 @@ def router_topk_pallas(qn: jnp.ndarray, embn: jnp.ndarray, mask: jnp.ndarray,
             pl.BlockSpec((blk_q, D), lambda i, j: (i, 0)),
             pl.BlockSpec((blk_n, D), lambda i, j: (j, 0)),
             pl.BlockSpec((blk_q, blk_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, blk_n), lambda i, j: (0, j)),
         ],
         out_specs=[
             pl.BlockSpec((blk_q, k), lambda i, j: (i, 0)),
@@ -120,5 +127,5 @@ def router_topk_pallas(qn: jnp.ndarray, embn: jnp.ndarray, mask: jnp.ndarray,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(qn, embn, mask)
+    )(qn, embn, mask, bias)
     return vals, idx

@@ -1,1 +1,5 @@
-"""Serving substrate: runners, catalog builder, batched engine."""
+"""Serving substrate: runners, catalog builder, batched engine, live
+per-model load tracking for load-/SLO-aware routing."""
+from repro.serving.load import ADMISSION_KINDS, LoadTracker, plan_admission
+
+__all__ = ["ADMISSION_KINDS", "LoadTracker", "plan_admission"]

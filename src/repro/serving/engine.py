@@ -9,6 +9,15 @@ runner, and returns per-request results with latency / cost accounting.
 Thumbs feedback flows back into the router's FeedbackStore, and
 post-generation quality observations flow into the router's adaptive
 bandit via ``observe`` (shaped rewards against each routed context).
+
+When a ``LoadTracker`` is attached (``load=`` or via the router's
+engine), the serving engine maintains the live per-model capacity
+signals the router scores against (admit -> start -> finish per
+request) and enforces per-request latency SLOs: a request carrying
+``deadline_ms`` whose routed model's estimated wait+service misses the
+deadline is rerouted to its best-scoring candidate that fits, or shed
+outright when none can make it (``Response.admission`` records the
+outcome; counts land in ``Telemetry.admission_funnel``).
 """
 from __future__ import annotations
 
@@ -22,6 +31,7 @@ import numpy as np
 from repro.core.orchestrator import OptiRoute
 from repro.core.preferences import TaskSignature
 from repro.data.tokenizer import HashTokenizer
+from repro.serving.load import LoadTracker, plan_admission
 
 
 @dataclass
@@ -30,6 +40,7 @@ class Request:
     prefs: Any                        # UserPreferences | profile name | dict
     id: int = 0
     max_new: int = 8
+    deadline_ms: Optional[float] = None   # latency SLO (None = no SLO)
 
 
 @dataclass
@@ -43,14 +54,23 @@ class Response:
     analyzer_s: float
     fallback: str = ""
     rq: Any = None                    # RoutedQuery (adaptive loop handle)
+    admission: str = "admitted"       # admitted | rerouted | shed
+    est_latency_s: float = 0.0        # admission-time wait+service estimate
+
+    @property
+    def shed(self) -> bool:
+        return self.admission == "shed"
 
 
 class ServingEngine:
     def __init__(self, router: OptiRoute, *, prompt_len: int = 32,
-                 vocab_hash: int = 4096):
+                 vocab_hash: int = 4096,
+                 load: Optional[LoadTracker] = None):
         self.router = router
         self.tok = HashTokenizer(vocab_hash)
         self.prompt_len = prompt_len
+        self.load = load if load is not None \
+            else getattr(router.engine, "load", None)
         self.log: List[Response] = []
 
     def _tokens(self, texts: Sequence[str], vocab_size: int) -> np.ndarray:
@@ -66,30 +86,83 @@ class ServingEngine:
         if mode == "batch":
             return self._submit_batch(requests)
         # interactive: ONE vectorized routing pass over all requests,
+        # then deadline-aware admission against the live load state,
         # then group identical (model, max_new) for batched generation
         routed_q = self.router.route_all([r.text for r in requests],
                                          [r.prefs for r in requests])
         routed = list(zip(requests, routed_q))
+        col: Dict[str, int] = {}
+        if self.load is not None:
+            names = self.router.mres.snapshot()[1]
+            col = {m: j for j, m in enumerate(names)}
+            self.load.ensure(len(names))
+        plans = []
+        tel = self.router.telemetry
+        # pending placements from EARLIER requests in this same batch:
+        # request #50 of a burst must see the 49 ahead of it, or the
+        # whole batch is waved through against a frozen snapshot
+        # sized to the TRACKER (which may carry more arms than the
+        # catalog) so estimated_latency_s can add it elementwise
+        pending = np.zeros(self.load.n_models, np.int64) \
+            if self.load is not None else None
+        for r, rq in routed:
+            model, kind, est = plan_admission(rq.decision, self.load, col,
+                                              r.deadline_ms,
+                                              pending=pending)
+            plans.append((model, kind, est))
+            if pending is not None and kind != "shed":
+                pending[col[model]] += 1
+            if tel is not None and r.deadline_ms is not None \
+                    and self.load is not None:
+                tel.record_admission(kind)
         groups: Dict[Tuple[str, int], List[int]] = defaultdict(list)
-        for i, (r, rq) in enumerate(routed):
-            groups[(rq.decision.model, r.max_new)].append(i)
+        for i, (r, _) in enumerate(routed):
+            model, kind, _ = plans[i]
+            if kind != "shed":
+                groups[(model, r.max_new)].append(i)
         out: List[Optional[Response]] = [None] * len(requests)
         for (model, max_new), idxs in groups.items():
             entry = self.router.mres.entry(model)
-            gen = None
-            if entry.runner is not None:
-                toks = self._tokens([requests[i].text for i in idxs],
-                                    entry.runner.cfg.vocab_size)
-                gen = entry.runner.generate(toks, max_new=max_new)
+            if self.load is not None:
+                self.load.admit(col[model], count=len(idxs))
+                self.load.start(col[model], count=len(idxs))
+            gen, per_req_s = None, None
+            try:
+                if entry.runner is not None:
+                    toks = self._tokens([requests[i].text for i in idxs],
+                                        entry.runner.cfg.vocab_size)
+                    gen = entry.runner.generate(toks, max_new=max_new)
+                per_req_s = (gen.sim_latency_s / len(idxs)
+                             if gen is not None else
+                             entry.raw_metrics.get("latency_ms", 0.0) / 1e3)
+            finally:
+                # a generate failure must still release the slots, or
+                # the model's inflight count (and its routing penalty)
+                # stays inflated forever; no EWMA sample on failure
+                if self.load is not None:
+                    self.load.finish(col[model], per_req_s,
+                                     count=len(idxs))
             for j, i in enumerate(idxs):
                 r, rq = routed[i]
+                # a rerouted request was SERVED by a different model
+                # than its routed decision; dropping the rq handle
+                # keeps observe() from crediting the wrong bandit arm
                 out[i] = Response(
                     request=r, model=model, sig=rq.sig,
                     tokens=None if gen is None else gen.tokens[j],
-                    sim_latency_s=0.0 if gen is None
-                    else gen.sim_latency_s / len(idxs),
+                    sim_latency_s=0.0 if gen is None else per_req_s,
                     route_s=rq.route_s, analyzer_s=rq.analyzer_s,
-                    fallback=rq.decision.fallback_kind, rq=rq)
+                    fallback=rq.decision.fallback_kind,
+                    rq=rq if plans[i][1] == "admitted" else None,
+                    admission=plans[i][1], est_latency_s=plans[i][2])
+        for i, (r, rq) in enumerate(routed):   # shed: fail fast, no slot
+            if out[i] is None:
+                out[i] = Response(
+                    request=r, model=plans[i][0], sig=rq.sig, tokens=None,
+                    sim_latency_s=0.0, route_s=rq.route_s,
+                    analyzer_s=rq.analyzer_s,
+                    fallback=rq.decision.fallback_kind, rq=None,
+                    admission="shed", est_latency_s=plans[i][2])
         self.log.extend(out)            # type: ignore[arg-type]
         return out                      # type: ignore[return-value]
 
@@ -123,9 +196,10 @@ class ServingEngine:
         """Close the adaptive loop with post-generation ground truth:
         shaped rewards (quality minus cost/latency penalties) flow into
         the router's bandit against each response's routed context.
-        Responses without a routed-query handle (the sample-and-
-        aggregate batch mode) carry no per-query context and are
-        skipped."""
+        Responses without a routed-query handle are skipped: the
+        sample-and-aggregate batch mode (no per-query context), and
+        rerouted/shed requests (the routed decision's model is not the
+        one that produced — or failed to produce — the outcome)."""
         if len(responses) != len(qualities):
             raise ValueError(f"{len(responses)} responses but "
                              f"{len(qualities)} qualities — observations "
@@ -137,16 +211,31 @@ class ServingEngine:
         return self.router.observe([p[0] for p in pairs],
                                    [p[1] for p in pairs])
 
-    def summary(self) -> Dict[str, float]:
+    def summary(self) -> Dict[str, Any]:
         if not self.log:
             return {}
         by_model: Dict[str, int] = defaultdict(int)
+        lat: Dict[str, List[float]] = defaultdict(list)
+        admissions: Dict[str, int] = defaultdict(int)
         for r in self.log:
+            admissions[r.admission] += 1
+            if r.shed:        # a shed request was served by NO model —
+                continue      # it only shows up in the admission counts
             by_model[r.model] += 1
+            lat[r.model].append(r.sim_latency_s + r.route_s
+                                + r.analyzer_s)
+        # per-model end-to-end latency PERCENTILES, not means: tails
+        # are what SLOs are written against, and a mean hides the
+        # queueing spikes load-aware routing exists to prevent
+        latency = {m: {"p50_s": float(np.quantile(v, 0.5)),
+                       "p99_s": float(np.quantile(v, 0.99))}
+                   for m, v in lat.items()}
         return {
             "requests": len(self.log),
             "sim_latency_s": sum(r.sim_latency_s for r in self.log),
             "route_s": sum(r.route_s for r in self.log),
             "analyzer_s": sum(r.analyzer_s for r in self.log),
             "models": dict(by_model),
+            "latency": latency,
+            "admissions": dict(admissions),
         }

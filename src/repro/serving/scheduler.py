@@ -14,6 +14,7 @@ admission and retirement are pure cache-slot updates.
 from __future__ import annotations
 
 import collections
+import time
 from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional
 
@@ -33,6 +34,7 @@ class SlotRequest:
     max_new: int
     out: List[int] = field(default_factory=list)
     slot: int = -1
+    started_s: float = 0.0           # perf_counter at slot admission
 
     @property
     def done(self) -> bool:
@@ -40,8 +42,13 @@ class SlotRequest:
 
 
 class ContinuousBatcher:
+    """``load``/``model_idx`` optionally mirror this batcher's queue
+    depth, slot occupancy and realized per-request service time into a
+    ``repro.serving.load.LoadTracker`` arm, so the router's load-aware
+    scoring sees this model's live state."""
+
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 ctx_len: int = 256):
+                 ctx_len: int = 256, load=None, model_idx: int = 0):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -54,6 +61,11 @@ class ContinuousBatcher:
         self._decode = jax.jit(make_decode_step(cfg))
         self._next_tok = np.zeros(slots, np.int32)
         self.ticks = 0
+        self.load = load
+        self.model_idx = model_idx
+        if load is not None:
+            load.ensure(model_idx + 1)
+            load.set_capacity(model_idx, float(slots))
 
     # ------------------------------------------------------------------
     def submit(self, req: SlotRequest, *, truncate: bool = False) -> None:
@@ -75,6 +87,12 @@ class ContinuousBatcher:
                     f"clip)")
             req.tokens = req.tokens[:limit]
         self.queue.append(req)
+        if self.load is not None:
+            self.load.admit(self.model_idx)
+
+    def queue_depth(self) -> int:
+        """Queued + active requests (the batcher's outstanding work)."""
+        return len(self.queue) + sum(r is not None for r in self.active)
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.active) if r is None]
@@ -96,13 +114,20 @@ class ContinuousBatcher:
             self.pos[i] = int(pos1[0])
             self._next_tok[i] = int(jnp.argmax(last[0]))
             req.slot = i
+            req.started_s = time.perf_counter()
             self.active[i] = req
+            if self.load is not None:
+                self.load.start(self.model_idx)
 
     def _retire(self) -> None:
         for i, req in enumerate(self.active):
             if req is not None and req.done:
                 self.finished.append(req)
                 self.active[i] = None
+                if self.load is not None:
+                    self.load.finish(
+                        self.model_idx,
+                        time.perf_counter() - req.started_s)
 
     # ------------------------------------------------------------------
     def tick(self) -> int:

@@ -58,6 +58,79 @@ def test_router_topk_all_masked():
     assert not np.isfinite(np.asarray(v)).any()
 
 
+@pytest.mark.parametrize("N,D,Q,k", [
+    (130, 8, 1, 4),     # B=1, N not a multiple of any block size
+    (512, 8, 1, 8),     # B=1, block-aligned catalog
+    (5, 8, 2, 8),       # k >= N: the tail must surface as -inf
+    (3, 8, 1, 3),       # k == N == tiny
+    (257, 16, 9, 16),   # off-by-one catalog, Q not a blk_q multiple
+    (1000, 8, 5, 1000), # k == N, large
+])
+def test_router_topk_nonaligned_shapes(N, D, Q, k):
+    """Regression sweep: shapes OFF the 128-lane/block happy path —
+    padding, B=1, and k >= N must all match the oracle exactly."""
+    emb = RNG.random((N, D)).astype(np.float32)
+    q = RNG.random((Q, D)).astype(np.float32)
+    mask = RNG.random(N) >= 0.3
+    v1, i1 = K.router_topk(emb, q, k, mask=mask)
+    v2, i2 = R.router_topk(jnp.asarray(emb), jnp.asarray(q), k,
+                           mask=jnp.asarray(mask))
+    v1, v2 = np.asarray(v1), np.asarray(v2)
+    np.testing.assert_allclose(v1, v2, rtol=1e-5, atol=1e-6)
+    # both backends surface exactly the same number of real candidates,
+    # and finite entries never point at masked or padded rows
+    fin = np.isfinite(v1)
+    assert (fin == np.isfinite(v2)).all()
+    i1 = np.asarray(i1)
+    assert (i1[fin] < N).all() and mask[i1[fin]].all()
+
+
+def test_router_topk_row_bias_matches_ref():
+    """The fused per-row score bias (load-aware routing) vs. oracle,
+    including its interaction with the filter mask: masked rows stay
+    -inf no matter how large the bias."""
+    N, D, Q, k = 300, 8, 5, 8
+    emb = RNG.random((N, D)).astype(np.float32)
+    q = RNG.random((Q, D)).astype(np.float32)
+    mask = RNG.random(N) >= 0.4
+    bias = (RNG.random(N) * -2.0).astype(np.float32)
+    bias[~mask] = 100.0                  # must NOT resurrect masked rows
+    v1, i1 = K.router_topk(emb, q, k, mask=mask, row_bias=bias)
+    v2, i2 = R.router_topk(jnp.asarray(emb), jnp.asarray(q), k,
+                           mask=jnp.asarray(mask),
+                           row_bias=jnp.asarray(bias))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                               rtol=1e-5, atol=1e-6)
+    fin = np.isfinite(np.asarray(v1))
+    assert mask[np.asarray(i1)[fin]].all()
+
+
+@pytest.mark.parametrize("Bu,Bs,N,D", [
+    (1, 1, 1, 3),       # every axis at its minimum
+    (7, 5, 130, 9),     # N just past one 128 block
+    (32, 24, 150, 9),   # the adaptive benchmark's shape
+    (3, 2, 257, 5),     # off-by-one catalog
+])
+def test_bandit_update_nonaligned_shapes(Bu, Bs, N, D):
+    """Pallas bandit_update vs. oracle on non-lane-aligned shapes
+    (B=1, N=1, N not a multiple of the block size)."""
+    rng = np.random.default_rng(Bu * 100 + N)
+    x_up = rng.random((Bu, D)).astype(np.float32)
+    w = np.zeros((Bu, N), np.float32)
+    w[np.arange(Bu), rng.integers(0, N, Bu)] = 1.0
+    r = rng.random(Bu).astype(np.float32)
+    xs = rng.random((Bs, D)).astype(np.float32)
+    theta = rng.standard_normal((N, D)).astype(np.float32)
+    L = rng.standard_normal((N, D, D)).astype(np.float32) * 0.1
+    ainv = np.einsum("nde,nfe->ndf", L, L) + np.eye(D, dtype=np.float32)
+    got = K.bandit_update(x_up, w, r, xs, theta, ainv, 0.8)
+    want = R.bandit_update(*(jnp.asarray(a) for a in
+                             (x_up, w, r, xs, theta, ainv)), 0.8)
+    for g, wnt, tol in zip(got, want, (1e-5, 1e-5, 1e-4)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(wnt),
+                                   rtol=tol, atol=tol)
+
+
 # ----------------------------------------------------------------------
 # flash attention
 # ----------------------------------------------------------------------

@@ -1,0 +1,460 @@
+"""Load- and SLO-aware routing: LoadTracker state machine, the
+load_weight scoring term (numpy + kernel paths), deadline admission in
+the serving engine, and the discrete-event traffic simulator."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.mres import MRES
+from repro.core.preferences import TaskSignature
+from repro.core.routing import RoutingEngine
+from repro.core.telemetry import Telemetry
+from repro.data.workload import (ServingSimulator, TrafficScenario,
+                                 poisson_arrivals)
+from repro.serving.load import ADMISSION_KINDS, LoadTracker, plan_admission
+from tests.conftest import make_entry
+
+
+def _flat_catalog(n=6, accuracy_step=0.05):
+    """All-chat catalog with a strict accuracy ordering (m0 best)."""
+    m = MRES()
+    for i in range(n):
+        m.register(make_entry(
+            f"m{i}", accuracy=0.9 - accuracy_step * i,
+            latency_ms=50.0 + 10 * i, cost=1.0 + i,
+            task_types=("chat",), domains=("general",), generalist=True))
+    return m
+
+
+SIG = TaskSignature(task_type="chat", domain="general", complexity=0.2)
+
+
+# ----------------------------------------------------------------------
+# LoadTracker state machine
+# ----------------------------------------------------------------------
+
+def test_tracker_lifecycle_counts():
+    lt = LoadTracker(3, capacity=2.0)
+    lt.admit(0)
+    lt.admit(0)
+    lt.admit_many(np.array([1, 1, 1, 2]))
+    q, f, c, _ = lt.snapshot()
+    assert q.tolist() == [2, 3, 1] and f.tolist() == [0, 0, 0]
+    lt.start(0)
+    q, f, _, _ = lt.snapshot()
+    assert q[0] == 1 and f[0] == 1
+    lt.finish(0, 0.5)
+    q, f, _, _ = lt.snapshot()
+    assert f[0] == 0
+    # finish never drives counters negative
+    lt.finish(2)
+    assert lt.snapshot()[1][2] == 0
+
+
+def test_tracker_ewma_and_wait_estimates():
+    lt = LoadTracker(2, capacity=2.0, ewma_alpha=0.5,
+                     default_service_s=0.1)
+    # 4 outstanding on capacity 2 at 0.1s each -> 0.2s expected wait
+    lt.admit(0, count=4)
+    np.testing.assert_allclose(lt.estimated_wait_s(), [0.2, 0.0],
+                               atol=1e-6)
+    np.testing.assert_allclose(lt.estimated_latency_s([0]), [0.3],
+                               atol=1e-6)
+    # EWMA folds realized service times
+    lt.start(0)
+    lt.finish(0, 0.3)
+    assert lt.snapshot()[3][0] == pytest.approx(0.2)
+    # penalty saturates in [0, 1) and is monotone in queue depth
+    p1 = lt.penalty()[0]
+    lt.admit(0, count=50)
+    p2 = lt.penalty()[0]
+    assert 0.0 <= p1 < p2 < 1.0
+    assert lt.penalty()[1] == 0.0
+
+
+def test_tracker_ensure_growth_and_capacity():
+    lt = LoadTracker(2, capacity=4.0)
+    lt.admit(1)
+    lt.ensure(5, capacity=[1.0, 2.0, 8.0])
+    assert lt.n_models == 5
+    q, _, c, _ = lt.snapshot()
+    assert q.tolist() == [0, 1, 0, 0, 0]
+    assert c.tolist() == [4.0, 4.0, 1.0, 2.0, 8.0]
+    lt.ensure(3)                        # shrink is a no-op
+    assert lt.n_models == 5
+    lt.set_capacity(0, 16.0)
+    assert lt.snapshot()[2][0] == 16.0
+
+
+def test_tracker_thread_safety():
+    lt = LoadTracker(4, capacity=2.0)
+    errs = []
+
+    def worker(i):
+        try:
+            for _ in range(500):
+                lt.admit(i % 4)
+                lt.start(i % 4)
+                lt.finish(i % 4, 0.01)
+        except Exception as e:                 # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    q, f, _, _ = lt.snapshot()
+    assert (q == 0).all() and (f == 0).all()
+
+
+# ----------------------------------------------------------------------
+# load term in the routing blend
+# ----------------------------------------------------------------------
+
+def test_load_weight_zero_matches_no_tracker():
+    m = _flat_catalog()
+    lt = LoadTracker(len(m))
+    lt.admit(0, count=100)              # saturate the static winner
+    d0 = RoutingEngine(m).route("accuracy-first", SIG)
+    d1 = RoutingEngine(m, load=lt, load_weight=0.0).route(
+        "accuracy-first", SIG)
+    assert d0.model == d1.model and d0.score == pytest.approx(d1.score)
+
+
+def test_saturated_model_loses_to_alternate():
+    m = _flat_catalog()
+    lt = LoadTracker(len(m), capacity=2.0)
+    eng = RoutingEngine(m, load=lt, load_weight=1.0)
+    assert eng.route("accuracy-first", SIG).model == "m0"
+    lt.admit(0, count=200)              # m0 saturates -> penalty ~ 1
+    d = eng.route("accuracy-first", SIG)
+    assert d.model != "m0"
+    lt.reset()                          # drained -> winner returns
+    assert eng.route("accuracy-first", SIG).model == "m0"
+
+
+def test_load_penalty_reaches_fallback_scorer():
+    m = MRES()
+    m.register(make_entry("gen-a", accuracy=0.9, task_types=("chat",),
+                          generalist=True))
+    m.register(make_entry("gen-b", accuracy=0.8, task_types=("chat",),
+                          generalist=True))
+    lt = LoadTracker(2, capacity=1.0)
+    eng = RoutingEngine(m, load=lt, load_weight=2.0)
+    sig = TaskSignature(task_type="vqa", domain="healthcare")
+    assert eng.route("accuracy-first", sig).fallback_kind == "generalist"
+    assert eng.route("accuracy-first", sig).model == "gen-a"
+    lt.admit(0, count=100)
+    d = eng.route("accuracy-first", sig)
+    assert d.used_fallback and d.model == "gen-b"
+
+
+def test_load_kernel_matches_numpy_path():
+    from tests.test_routing_batch import random_catalog, random_queries
+    m = random_catalog(96, seed=13)
+    lt = LoadTracker(96, capacity=2.0)
+    rng = np.random.default_rng(3)
+    lt.admit_many(rng.integers(0, 96, 400))
+    prefs, sigs = random_queries(11, seed=13)
+    eng_np = RoutingEngine(m, knn_k=8, load=lt, load_weight=1.5)
+    eng_k = RoutingEngine(m, knn_k=8, load=lt, load_weight=1.5,
+                          use_kernel=True)
+    eng_k._kernel_min_n = 0
+    for a, b in zip(eng_np.route_many(prefs, sigs),
+                    eng_k.route_many(prefs, sigs)):
+        assert a.model == b.model
+        assert a.fallback_kind == b.fallback_kind
+        assert a.score == pytest.approx(b.score, abs=1e-5)
+
+
+def test_load_route_single_matches_batch():
+    from tests.test_routing_batch import random_catalog, random_queries
+    m = random_catalog(32, seed=21)
+    lt = LoadTracker(32, capacity=2.0)
+    lt.admit_many(np.random.default_rng(0).integers(0, 32, 100))
+    eng = RoutingEngine(m, knn_k=8, load=lt, load_weight=1.0)
+    prefs, sigs = random_queries(9, seed=21)
+    batch = eng.route_many(prefs, sigs)
+    for d_b, p, s in zip(batch, prefs, sigs):
+        d_1 = eng.route(p, s)
+        assert d_b.model == d_1.model
+        assert d_b.score == pytest.approx(d_1.score, abs=1e-6)
+
+
+# ----------------------------------------------------------------------
+# deadline admission planning
+# ----------------------------------------------------------------------
+
+def _decision(eng, prefs="accuracy-first", sig=SIG):
+    return eng.route(prefs, sig)
+
+
+def test_plan_admission_paths():
+    m = _flat_catalog(3)
+    lt = LoadTracker(3, capacity=1.0, default_service_s=0.1)
+    col = {f"m{i}": i for i in range(3)}
+    eng = RoutingEngine(m, knn_k=3)          # load-blind routing...
+    d = _decision(eng)
+    # no deadline / no tracker -> admitted untouched
+    assert plan_admission(d, lt, col, None) == (d.model, "admitted", 0.0)
+    assert plan_admission(d, None, col, 100.0)[1] == "admitted"
+    # idle catalog: the routed model fits its SLO
+    model, kind, est = plan_admission(d, lt, col, 1000.0)
+    assert (model, kind) == (d.model, "admitted") and est > 0.0
+    # saturate the winner: reroute to the best-scoring candidate that fits
+    lt.admit(col[d.model], count=50)
+    model, kind, _ = plan_admission(d, lt, col, 1000.0)
+    assert kind == "rerouted" and model != d.model
+    second = [c for c, _ in d.candidates][1]
+    assert model == second
+    # impossible SLO anywhere -> shed
+    model, kind, est = plan_admission(d, lt, col, 0.001)
+    assert kind == "shed" and est > 0.001 / 1e3
+    assert kind in ADMISSION_KINDS
+
+
+# ----------------------------------------------------------------------
+# serving engine integration
+# ----------------------------------------------------------------------
+
+def _serving_setup(deadline_ms=None):
+    from repro.core.orchestrator import OptiRoute
+    from repro.serving.engine import Request, ServingEngine
+    from tests.test_routing_batch import StubAnalyzer
+    m = _flat_catalog()
+    lt = LoadTracker(len(m), capacity=2.0, default_service_s=0.05)
+    router = OptiRoute(m, StubAnalyzer(), telemetry=Telemetry(),
+                       load=lt, load_weight=1.0)
+    engine = ServingEngine(router)
+    assert engine.load is lt                 # picked up from the router
+    reqs = [Request(text=f"q{i}", prefs="accuracy-first", id=i,
+                    deadline_ms=deadline_ms) for i in range(6)]
+    return engine, lt, reqs
+
+
+def test_serving_engine_admits_and_drains_load():
+    engine, lt, reqs = _serving_setup(deadline_ms=10_000.0)
+    out = engine.submit(reqs)
+    assert [r.admission for r in out] == ["admitted"] * 6
+    q, f, _, _ = lt.snapshot()               # lifecycle completed
+    assert (q == 0).all() and (f == 0).all()
+    s = engine.summary()
+    assert s["admissions"] == {"admitted": 6}
+    funnel = engine.router.telemetry.admission_funnel()
+    assert funnel == {"admitted": 6}
+    for stats in s["latency"].values():
+        assert stats["p50_s"] <= stats["p99_s"]
+
+
+def test_serving_engine_sheds_on_impossible_deadline():
+    engine, lt, reqs = _serving_setup(deadline_ms=1e-6)
+    out = engine.submit(reqs)
+    assert all(r.shed for r in out)
+    assert all(r.tokens is None for r in out)
+    q, f, _, _ = lt.snapshot()               # shed burns no capacity
+    assert (q == 0).all() and (f == 0).all()
+    assert engine.summary()["admissions"] == {"shed": 6}
+    assert engine.router.telemetry.admission_funnel() == {"shed": 6}
+
+
+def test_serving_engine_no_deadline_unchanged():
+    engine, _, reqs = _serving_setup(deadline_ms=None)
+    out = engine.submit(reqs)
+    assert all(r.admission == "admitted" for r in out)
+    # no SLO -> nothing lands in the admission funnel
+    assert engine.router.telemetry.admission_funnel() == {}
+
+
+# ----------------------------------------------------------------------
+# traffic scenario + simulator
+# ----------------------------------------------------------------------
+
+def test_poisson_arrivals_deterministic_and_bursty():
+    sc = TrafficScenario(duration_s=10.0, base_rate=20.0,
+                         burst_rate=200.0, burst_start=0.4,
+                         burst_len=0.2, seed=3)
+    a1, a2 = poisson_arrivals(sc), poisson_arrivals(sc)
+    np.testing.assert_array_equal(a1, a2)
+    assert (np.diff(a1) >= 0).all() and a1[-1] < sc.duration_s
+    b0, b1 = sc.burst_window_s
+    in_burst = ((a1 >= b0) & (a1 < b1)).sum() / (b1 - b0)
+    outside = ((a1 < b0) | (a1 >= b1)).sum() / (sc.duration_s - (b1 - b0))
+    assert in_burst > 3 * outside            # rate ratio is 10x
+
+
+def test_traffic_scenario_validation():
+    with pytest.raises(AssertionError):
+        TrafficScenario(burst_rate=1.0, base_rate=10.0).validate()
+    with pytest.raises(AssertionError):
+        TrafficScenario(burst_start=0.9, burst_len=0.5).validate()
+
+
+def test_simulator_single_server_math():
+    """3 back-to-back arrivals on one 1s server: waits 0/1/2 s."""
+    sim = ServingSimulator([1.0], [1], tracker=LoadTracker(1))
+    res = sim.run(np.array([0.0, 0.0, 0.0]),
+                  lambda i, t: (0, "admitted"), deadline_ms=1500.0)
+    np.testing.assert_allclose(res["wait_s"], [0.0, 1.0, 2.0])
+    np.testing.assert_allclose(res["latency_s"], [1.0, 2.0, 3.0])
+    assert res["slo_miss"].tolist() == [False, True, True]
+    assert res["slo_miss_rate"] == pytest.approx(2 / 3)
+
+
+def test_simulator_parallel_servers_and_shed():
+    sim = ServingSimulator([1.0, 1.0], [2, 1])
+    kinds = ["admitted", "admitted", "rerouted", "shed"]
+    models = [0, 0, 1, 0]
+    res = sim.run(np.zeros(4),
+                  lambda i, t: (models[i], kinds[i]), deadline_ms=1100.0)
+    np.testing.assert_allclose(res["latency_s"][:3], [1.0, 1.0, 1.0])
+    assert res["shed"].tolist() == [False, False, False, True]
+    assert res["rerouted"].tolist() == [False, False, True, False]
+    assert np.isnan(res["latency_s"][3])
+    assert res["slo_miss"].tolist() == [False, False, False, True]
+
+
+def test_simulator_mirrors_tracker_state():
+    lt = LoadTracker(1, default_service_s=9.9)
+    sim = ServingSimulator([0.5], [1], tracker=lt)
+    seen = []
+
+    def route(i, t):
+        seen.append(lt.estimated_wait_s()[0])
+        return 0, "admitted"
+
+    sim.run(np.array([0.0, 0.1, 5.0]), route)
+    # 2nd arrival sees the 1st in flight; 3rd sees a drained system
+    assert seen[0] == 0.0 and seen[1] > 0.0 and seen[2] == 0.0
+    q, f, _, _ = lt.snapshot()
+    assert (q == 0).all() and (f == 0).all()
+    # EWMA pulled toward the realized 0.5s service time
+    assert lt.snapshot()[3][0] < 9.9
+
+
+def test_plan_admission_sees_pending_batch_placements():
+    """Request #k of one batch must see the k-1 placements planned
+    ahead of it — a burst cannot be waved through (or rerouted onto a
+    single alternate) against a frozen pre-batch snapshot."""
+    m = _flat_catalog(3)
+    lt = LoadTracker(3, capacity=1.0, default_service_s=0.1)
+    col = {f"m{i}": i for i in range(3)}
+    d = RoutingEngine(m, knn_k=3).route("accuracy-first", SIG)
+    pending = np.zeros(3, np.int64)
+    kinds = []
+    # deadline fits 2 requests per model (wait+service <= 0.25s)
+    for _ in range(8):
+        model, kind, _ = plan_admission(d, lt, col, 250.0, pending=pending)
+        kinds.append(kind)
+        if kind != "shed":
+            pending[col[model]] += 1
+    # 3 models x 2 slots-worth of budget -> 6 placed, the rest shed
+    assert kinds.count("shed") == 2
+    assert pending.tolist() == [2, 2, 2]
+    # without pending accounting every request would be admitted
+    assert plan_admission(d, lt, col, 250.0)[1] == "admitted"
+
+
+def test_serving_engine_intra_batch_admission():
+    from repro.serving.engine import Request
+    engine, lt, _ = _serving_setup()
+    # capacity 2, service estimate 0.05s -> ~0.175s budget fits the
+    # first few placements per model, then the batch must spill/shed
+    reqs = [Request(text=f"q{i}", prefs="accuracy-first", id=i,
+                    deadline_ms=175.0) for i in range(40)]
+    out = engine.submit(reqs)
+    kinds = {r.admission for r in out}
+    assert "shed" in kinds, [r.admission for r in out]
+    assert len({r.model for r in out if not r.shed}) > 1
+    funnel = engine.router.telemetry.admission_funnel()
+    assert funnel.get("shed", 0) + funnel.get("admitted", 0) \
+        + funnel.get("rerouted", 0) == 40
+
+
+def test_similarity_stays_pure_cosine_under_load():
+    from repro.core.routing import cosine_sim
+    m = _flat_catalog()
+    emb = m.embeddings()
+    names = m.snapshot()[1]
+    lt = LoadTracker(len(m), capacity=2.0)
+    lt.admit(0, count=200)
+    eng = RoutingEngine(m, load=lt, load_weight=1.0)
+    d = eng.route("accuracy-first", SIG)
+    j = names.index(d.model)
+    pure = float(cosine_sim(emb[j:j + 1], d.task_vector)[0])
+    assert d.similarity == pytest.approx(pure, abs=1e-5)
+    assert -1.0 - 1e-6 <= d.similarity <= 1.0 + 1e-6
+
+
+def test_generate_failure_releases_load_slots():
+    """A runner crash mid-batch must not leak inflight counts (which
+    would permanently penalize a healthy model)."""
+    from repro.serving.engine import Request
+
+    class BoomCfg:
+        vocab_size = 64
+
+    class BoomRunner:
+        cfg = BoomCfg()
+
+        def generate(self, toks, max_new=8):
+            raise RuntimeError("boom")
+
+    engine, lt, reqs = _serving_setup()
+    routed = engine.router.route_all([r.text for r in reqs[:1]],
+                                     "accuracy-first")
+    engine.router.mres.entry(routed[0].decision.model).runner = \
+        BoomRunner()
+    with pytest.raises(RuntimeError, match="boom"):
+        engine.submit(reqs)
+    q, f, _, _ = lt.snapshot()
+    assert (f == 0).all() and (q == 0).all()
+
+
+def test_rerouted_and_shed_responses_carry_no_bandit_handle():
+    """observe() must never credit the routed model's bandit arm with
+    an outcome produced by a different model (reroute) or by no model
+    (shed): those responses drop their RoutedQuery handle, and
+    shed requests vanish from the per-model summary counts."""
+    from repro.serving.engine import Request
+    engine, lt, _ = _serving_setup()
+    reqs = [Request(text=f"q{i}", prefs="accuracy-first", id=i,
+                    deadline_ms=175.0) for i in range(40)]
+    out = engine.submit(reqs)
+    kinds = {r.admission for r in out}
+    assert kinds >= {"admitted", "shed"}
+    for r in out:
+        if r.admission == "admitted":
+            assert r.rq is not None and r.rq.decision.model == r.model
+        else:
+            assert r.rq is None
+    # observe() silently skips handle-less responses
+    assert engine.observe([r for r in out if r.shed], 
+                          [1.0] * sum(r.shed for r in out)) is None
+    s = engine.summary()
+    assert sum(s["models"].values()) == sum(1 for r in out if not r.shed)
+
+
+def test_oversized_tracker_routes_and_serves():
+    """A tracker pre-sized beyond the catalog (ensure() only grows;
+    trackers can be shared / provisioned ahead) must not break routing
+    or admission — penalties are sliced to the catalog snapshot."""
+    from repro.serving.engine import Request
+    m = _flat_catalog(3)
+    lt = LoadTracker(8, capacity=2.0)        # 8 arms, 3-model catalog
+    lt.admit(0, count=200)
+    eng = RoutingEngine(m, load=lt, load_weight=1.0)
+    d = eng.route("accuracy-first", SIG)
+    assert d.model != "m0"                   # penalty still applies
+    from repro.core.orchestrator import OptiRoute
+    from repro.serving.engine import ServingEngine
+    from tests.test_routing_batch import StubAnalyzer
+    router = OptiRoute(m, StubAnalyzer(), telemetry=Telemetry(),
+                       load=lt, load_weight=1.0)
+    engine = ServingEngine(router)
+    out = engine.submit([Request(text="q", prefs="balanced", id=0,
+                                 deadline_ms=60_000.0)])
+    assert out[0].admission in ADMISSION_KINDS

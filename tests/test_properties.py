@@ -10,7 +10,7 @@ from repro.core.feedback import FeedbackStore
 from repro.core.mres import MRES, normalize_catalog
 from repro.core.preferences import (DOMAINS, METRICS, TASK_TYPES,
                                     TaskSignature, UserPreferences)
-from repro.core.routing import RoutingEngine
+from repro.core.routing import FALLBACK_LADDER, RoutingEngine
 from tests.conftest import make_entry
 
 FAST = settings(max_examples=40, deadline=None,
@@ -139,3 +139,67 @@ def test_task_vector_in_unit_box(sig):
     prefs = UserPreferences(weights={m: 1.0 for m in METRICS})
     v = eng.task_vector(prefs, sig)
     assert (v >= 0).all() and (v <= 1).all()
+
+
+# ----------------------------------------------------------------------
+# fallback-ladder invariants
+# ----------------------------------------------------------------------
+
+def _ladder_masks(mres, eng, sig):
+    """The staged candidate masks exactly as route_many builds them."""
+    conf = sig.confidence >= eng.confidence_threshold
+    tt, dm = mres.masks(sig.task_type if conf else None,
+                        sig.domain if conf else None)
+    n = len(mres.entries)
+    return [("", tt & dm), ("widened-knn", tt & dm),
+            ("task-type-only", tt),
+            ("generalist", mres.generalist_mask().copy()),
+            ("any", np.ones(n, bool))]
+
+
+@FAST
+@given(catalogs(), signatures(), preferences())
+def test_fallback_stage_mask_invariant(mres, sig, prefs):
+    """(vi) the chosen model always satisfies the FIRST non-empty
+    ladder stage's mask, and the reported stage label is consistent
+    with that rung (labels drawn from FALLBACK_LADDER)."""
+    eng = RoutingEngine(mres)
+    d = eng.route(prefs, sig)
+    assert d.fallback_kind in FALLBACK_LADDER
+    assert d.used_fallback == (d.fallback_kind != "")
+    names = [e.name for e in mres.entries]
+    stages = _ladder_masks(mres, eng, sig)
+    fi = next(i for i, (_, m) in enumerate(stages) if m.any())
+    assert stages[fi][1][names.index(d.model)]
+    # primary and widened-kNN share a mask, so either label is a valid
+    # report for rung 0; deeper rungs must report their own label
+    allowed = {"", "widened-knn"} if fi == 0 else {stages[fi][0]}
+    assert d.fallback_kind in allowed
+    # label/mask consistency: the model passes its REPORTED stage too
+    label_mask = dict(stages)[d.fallback_kind]
+    assert label_mask[names.index(d.model)]
+
+
+@st.composite
+def query_batches(draw, max_b=5):
+    b = draw(st.integers(1, max_b))
+    return ([draw(preferences()) for _ in range(b)],
+            [draw(signatures()) for _ in range(b)])
+
+
+@FAST
+@given(catalogs(), query_batches())
+def test_route_many_equals_single_route(mres, batch):
+    """(vii) single-vs-batch differential: route(p, s) is decision-
+    identical to route_many over any batch containing (p, s)."""
+    prefs, sigs = batch
+    eng = RoutingEngine(mres)
+    out = eng.route_many(prefs, sigs)
+    assert len(out) == len(sigs)
+    for d_b, p, s in zip(out, prefs, sigs):
+        d_1 = eng.route(p, s)
+        assert d_b.model == d_1.model
+        assert d_b.fallback_kind == d_1.fallback_kind
+        assert d_b.score == pytest.approx(d_1.score, abs=1e-5)
+        assert [n for n, _ in d_b.candidates] == \
+            [n for n, _ in d_1.candidates]

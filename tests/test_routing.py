@@ -38,6 +38,63 @@ def test_duplicate_registration_rejected(small_mres):
         small_mres.register(make_entry("mid"))
 
 
+def test_update_metrics_refreshes_all_caches(small_mres):
+    """Regression: updating a raw metric must invalidate EVERY derived
+    cache (embeddings, fused routing matrix, mask matrices) so the
+    next route_many sees the new values — not a stale snapshot."""
+    snap1 = small_mres.snapshot()
+    eng = RoutingEngine(small_mres)
+    sig = TaskSignature(task_type="chat", domain="general", complexity=0.3)
+    d1 = eng.route("accuracy-first", sig)
+    assert d1.model == "big-accurate"
+    # tank the old winner's accuracy; the cheap model becomes the leader
+    small_mres.update_metrics("big-accurate", accuracy=0.01)
+    small_mres.update_metrics("tiny-fast", accuracy=0.99)
+    snap2 = small_mres.snapshot()
+    assert snap2[0] is not snap1[0]           # embeddings rebuilt
+    assert snap2[5] is not snap1[5]           # fused routing matrix rebuilt
+    assert not np.allclose(snap2[0], snap1[0])
+    names = snap2[1]
+    acc = snap2[0][:, METRICS.index("accuracy")]
+    assert names[int(np.argmax(acc))] == "tiny-fast"
+    # the fused routing matrix's metric block tracks the new embeddings
+    en = np.linalg.norm(snap2[0], axis=1, keepdims=True) + 1e-9
+    np.testing.assert_allclose(snap2[5][:, :len(METRICS)],
+                               snap2[0] / en, rtol=1e-5, atol=1e-6)
+    d2 = eng.route("accuracy-first", sig)
+    assert d2.model != "big-accurate"
+
+
+def test_update_metrics_refresh_under_concurrent_readers(small_mres):
+    """Writers flip the dirty flag while reader threads snapshot —
+    every snapshot must be internally consistent (all-old or all-new),
+    never a torn mix."""
+    import threading
+    small_mres.snapshot()
+    stop = threading.Event()
+    errs = []
+
+    def reader():
+        try:
+            while not stop.is_set():
+                emb, names, *_, mat = small_mres.snapshot()
+                en = np.linalg.norm(emb, axis=1, keepdims=True) + 1e-9
+                np.testing.assert_allclose(mat[:, :len(METRICS)],
+                                           emb / en, rtol=1e-5, atol=1e-6)
+        except Exception as e:                 # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=reader) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for i in range(200):
+        small_mres.update_metrics("mid", accuracy=0.1 + (i % 9) / 10.0)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errs
+
+
 def test_route_prefers_cheap_for_cost_profile(small_mres):
     eng = RoutingEngine(small_mres)
     sig = TaskSignature(task_type="chat", domain="general", complexity=0.1)

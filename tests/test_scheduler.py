@@ -104,3 +104,28 @@ def test_submit_truncate_clips_and_generates(setup):
     # truncated prompt == natively-short prompt (same decode result)
     want = _sequential(cfg, params, long[:14], 3)
     assert finished[0].out == want
+
+
+def test_batcher_mirrors_load_tracker(setup):
+    """The batcher reports queue depth, slot occupancy and realized
+    service time into its LoadTracker arm as requests move through."""
+    from repro.serving.load import LoadTracker
+    cfg, params = setup
+    lt = LoadTracker(default_service_s=99.0)
+    cb = ContinuousBatcher(cfg, params, slots=2, ctx_len=64,
+                           load=lt, model_idx=1)
+    assert lt.n_models == 2 and lt.snapshot()[2][1] == 2.0  # capacity=slots
+    for i in range(4):
+        cb.submit(SlotRequest(
+            id=i, tokens=RNG.integers(2, cfg.vocab_size, 6).astype(np.int32),
+            max_new=2))
+    q, f, _, _ = lt.snapshot()
+    assert q[1] == 4 and f[1] == 0
+    assert cb.queue_depth() == 4
+    cb.tick()                            # 2 admitted into slots
+    q, f, _, _ = lt.snapshot()
+    assert q[1] == 2 and f[1] == 2
+    cb.run_until_drained()
+    q, f, _, ewma = lt.snapshot()
+    assert q[1] == 0 and f[1] == 0 and cb.queue_depth() == 0
+    assert ewma[1] < 99.0                # realized service times folded in

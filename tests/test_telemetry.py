@@ -76,6 +76,36 @@ def test_fallback_funnel_counts_ladder_stages():
     assert s["events"] == 11
 
 
+def test_per_model_latency_percentiles():
+    """per_model reports the tail, not just means: p50 <= p99 and both
+    bracket the per-model distribution."""
+    tel = Telemetry()
+    for i in range(200):
+        tel.record(_ev(1.0, "a", route_s=(i + 1) / 1000.0))
+    tel.record(_ev(1.0, "b", route_s=0.5))
+    agg = tel.per_model()
+    a = agg["a"]
+    assert a["latency_p50_s"] <= a["latency_p99_s"]
+    assert a["latency_p50_s"] == pytest.approx(0.1005, rel=0.01)
+    assert a["latency_p99_s"] >= 0.19
+    # single-event model: both percentiles collapse to the one sample
+    assert agg["b"]["latency_p50_s"] == agg["b"]["latency_p99_s"] == 0.5
+    for m in agg.values():
+        assert m["latency_p50_s"] <= m["latency_p99_s"]
+
+
+def test_admission_funnel():
+    tel = Telemetry()
+    assert tel.admission_funnel() == {}
+    tel.record_admission("admitted", count=5)
+    tel.record_admission("rerouted")
+    tel.record_admission("shed", count=2)
+    tel.record_admission("rerouted")
+    assert tel.admission_funnel() == {"admitted": 5, "rerouted": 2,
+                                      "shed": 2}
+    assert tel.summary()["admission_funnel"]["shed"] == 2
+
+
 def test_latency_percentiles():
     tel = Telemetry()
     for i in range(100):
