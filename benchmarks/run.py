@@ -6,8 +6,8 @@ Prints a ``name,us_per_call,derived`` CSV summary (plus per-benchmark
 detail above it) and writes JSON payloads to results/bench/.
 
 ``--smoke`` runs the seconds-scale CI variants of every benchmark that
-has one (routing throughput, adaptive regret, load-aware SLO) — the CI
-slow job's entry point.
+has one (routing throughput, adaptive regret, load-aware SLO, semantic
+cache hit path) — the CI slow job's entry point.
 """
 from __future__ import annotations
 
@@ -17,7 +17,7 @@ import time
 import traceback
 
 from benchmarks import (ablations, adaptive, analyzer_pruning, batch_mode,
-                        feedback, load_aware, merging, roofline,
+                        cache_hit, feedback, load_aware, merging, roofline,
                         router_scale, routing_win)
 
 ALL = {
@@ -26,6 +26,7 @@ ALL = {
     "feedback": feedback.run,
     "adaptive": adaptive.run,
     "load_aware": load_aware.run,
+    "cache_hit": cache_hit.run,
     "router_scale": router_scale.run,
     "analyzer_pruning": analyzer_pruning.run,
     "merging": merging.run,
@@ -38,6 +39,7 @@ SMOKE = {
     "router_scale": router_scale.main,
     "adaptive": adaptive.main,
     "load_aware": load_aware.main,
+    "cache_hit": cache_hit.main,
 }
 
 

@@ -197,6 +197,26 @@ class LinearBandit:
         db = w.T @ (ctx * r[:, None])
         self._apply(dA, db, w)
 
+    # ---------------- persistence (RouterState) ----------------
+    def state(self) -> dict:
+        """Sufficient statistics snapshot: (A, b, counts) determine the
+        whole posterior (theta/Ainv are derived caches)."""
+        return {"A": self.A.copy(), "b": self.b.copy(),
+                "counts": self.counts.copy()}
+
+    def load_state(self, state: dict) -> None:
+        """Restore a ``state()`` snapshot, REPLACING the posterior."""
+        A = np.asarray(state["A"], np.float32)
+        if A.ndim != 3 or A.shape[1:] != (self.dim, self.dim):
+            raise ValueError(f"bandit dim mismatch: snapshot {A.shape}, "
+                             f"expected (*, {self.dim}, {self.dim})")
+        self.A = A.copy()
+        self.b = np.asarray(state["b"], np.float32).copy()
+        self.counts = np.asarray(state["counts"], np.int64).copy()
+        self.n_models = int(A.shape[0])
+        self._theta = self._ainv = None
+        self._zeros = None
+
     def update_and_score(self, X_up: np.ndarray, chosen: np.ndarray,
                          rewards: np.ndarray, X_score: np.ndarray
                          ) -> np.ndarray:

@@ -1,0 +1,8 @@
+"""Semantic response cache: avoid the route -> generate path entirely
+for repeated / near-duplicate queries (keyed on the routing task-vector
+space, answered by the same fused Pallas top-k the router uses)."""
+from repro.cache.semantic import (CACHE_KINDS, CacheEntry, SemanticCache,
+                                  prefs_fingerprint, text_sketch)
+
+__all__ = ["CACHE_KINDS", "CacheEntry", "SemanticCache",
+           "prefs_fingerprint", "text_sketch"]

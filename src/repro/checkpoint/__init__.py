@@ -1,2 +1,5 @@
-"""Pytree checkpointing (npz)."""
+"""Pytree checkpointing (npz) + durable router state."""
+from repro.checkpoint.router_state import (RouterState,  # noqa: F401
+                                           load_router_state,
+                                           save_router_state)
 from repro.checkpoint.store import CheckpointManager, load, save  # noqa: F401

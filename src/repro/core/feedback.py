@@ -117,13 +117,31 @@ class FeedbackStore:
             return list(self._log)
 
     # ---- persistence (part of the production story) ----
+    def state(self) -> List[Dict]:
+        """JSON-able snapshot of every (cluster, model) bias — the
+        payload ``save`` writes and ``RouterState`` embeds."""
+        with self._lock:
+            return [{"cluster": list(k[0]), "model": k[1], "bias": v,
+                     "count": self._count.get(k, 0)}
+                    for k, v in self._bias.items()]
+
+    def load_state(self, data: List[Dict]) -> None:
+        """Restore a ``state()`` snapshot, REPLACING in-memory biases
+        (same replace semantics as ``load``)."""
+        bias = {}
+        count = {}
+        for row in data:
+            key = (tuple(row["cluster"]), row["model"])
+            bias[key] = float(row["bias"])
+            count[key] = int(row["count"])
+        with self._lock:
+            self._bias = bias
+            self._count = count
+
     def save(self, path: str) -> None:
         """Atomic snapshot: a crash or a concurrent reader never sees a
         partially-written file (write-temp + rename)."""
-        with self._lock:
-            data = [{"cluster": list(k[0]), "model": k[1], "bias": v,
-                     "count": self._count.get(k, 0)}
-                    for k, v in self._bias.items()]
+        data = self.state()
         d = os.path.dirname(os.path.abspath(path))
         fd, tmp = tempfile.mkstemp(dir=d, prefix=".feedback-",
                                    suffix=".json")
@@ -149,13 +167,4 @@ class FeedbackStore:
         (loading into a live store must not splice stale entries into
         the snapshot's)."""
         with open(path) as f:
-            data = json.load(f)
-        bias = {}
-        count = {}
-        for row in data:
-            key = (tuple(row["cluster"]), row["model"])
-            bias[key] = float(row["bias"])
-            count[key] = int(row["count"])
-        with self._lock:
-            self._bias = bias
-            self._count = count
+            self.load_state(json.load(f))

@@ -41,6 +41,16 @@ class RoutedQuery:
     route_s: float
     response: Any = None
     observed: bool = False            # reward already fed to the bandit
+    # semantic-cache write-back key, stamped by the serving engine at
+    # submit time (a cache MISS that later validates well becomes the
+    # entry that answers the next near-duplicate).  ``cache_written``
+    # tracks write-back separately from ``observed``: an auto-observing
+    # reward_fn marks queries observed BEFORE the engine stamps keys,
+    # and that must not starve the cache of the post-generation
+    # write-back
+    cache_key: Optional[np.ndarray] = None
+    cache_fp: int = 0
+    cache_written: bool = False
 
 
 class OptiRoute:
@@ -54,7 +64,8 @@ class OptiRoute:
                  use_kernel: bool = False, feedback_weight: float = 0.5,
                  telemetry=None, adaptive=None,
                  adaptive_weight: float = 0.0, reward_fn=None,
-                 reward_shaper=None, load=None, load_weight: float = 0.0):
+                 reward_shaper=None, load=None, load_weight: float = 0.0,
+                 cache=None):
         self.mres = mres
         self.analyzer = analyzer
         self.feedback = feedback if feedback is not None else FeedbackStore()
@@ -77,6 +88,10 @@ class OptiRoute:
         # load-aware loop: live per-model capacity state the serving
         # engine maintains and route_many penalizes at ``load_weight``
         self.load = load
+        # semantic response cache (repro.cache): the serving engine
+        # consults it before routing; ``observe`` writes validated
+        # responses back so future near-duplicates short-circuit
+        self.cache = cache
 
     # ------------------------- interactive -------------------------
     def route(self, text: str, prefs) -> RoutedQuery:
@@ -157,13 +172,19 @@ class OptiRoute:
         (from ``qualities`` or ``reward_fn``) shaped by the per-model
         cost/latency penalties of ``reward_shaper`` (plus any realized
         ``extra_penalty`` from telemetry), against the decision's task
-        vector as context.  Each query is observed AT MOST ONCE (so an
-        auto-observing ``reward_fn`` plus an explicit post-generation
-        ``observe`` never double-count an outcome).  Returns the shaped
-        rewards of the newly-observed queries, or None when no bandit
-        is attached / no quality source exists / nothing is new.
+        vector as context.  When a semantic cache is attached, each
+        newly-observed query whose serving-time cache key is stamped
+        also writes its validated (response, RAW quality) back — the
+        cache gates on its own ``min_quality`` bar, so only responses
+        the quality loop vouches for are ever replayed.  Each query is
+        observed AT MOST ONCE (so an auto-observing ``reward_fn`` plus
+        an explicit post-generation ``observe`` never double-count an
+        outcome, and a response is never cache-written twice).  Returns
+        the shaped rewards of the newly-observed queries, or None when
+        neither a bandit nor a cache is attached / no quality source
+        exists / nothing is new.
         """
-        if self.adaptive is None or not rqs:
+        if (self.adaptive is None and self.cache is None) or not rqs:
             return None
         if qualities is None and self.reward_fn is None:
             return None
@@ -174,32 +195,60 @@ class OptiRoute:
         if extra_penalty is not None and len(extra_penalty) != len(rqs):
             raise ValueError(f"{len(rqs)} routed queries but "
                              f"{len(extra_penalty)} extra penalties")
-        # drop already-observed queries BEFORE evaluating reward_fn —
-        # quality evaluation can be expensive in real deployments
-        fresh = [i for i, rq in enumerate(rqs) if not rq.observed]
-        if not fresh:
+        # bandit-fresh and cache-unwritten are tracked SEPARATELY: an
+        # auto-observing reward_fn consumes bandit freshness inside
+        # route_all, before the serving engine has stamped cache keys —
+        # the later post-generation observe() must still write back.
+        # Quality is only evaluated for queries that need it (quality
+        # evaluation can be expensive in real deployments).
+        fresh = [] if self.adaptive is None else \
+            [i for i, rq in enumerate(rqs) if not rq.observed]
+        cacheable = [] if self.cache is None else \
+            [i for i, rq in enumerate(rqs)
+             if rq.cache_key is not None and not rq.cache_written]
+        todo = sorted(set(fresh) | set(cacheable))
+        if not todo:
             return None
-        rqs = [rqs[i] for i in fresh]
         if qualities is None:
-            qualities = [self.reward_fn(rq) for rq in rqs]
+            qual = {i: float(self.reward_fn(rqs[i])) for i in todo}
         else:
-            qualities = [qualities[i] for i in fresh]
-        if extra_penalty is not None:
-            extra_penalty = np.asarray(extra_penalty, np.float32)[fresh]
+            qual = {i: float(qualities[i]) for i in todo}
+        # cache write-back takes RAW quality: the cache's admission bar
+        # is about answer trustworthiness, not the cost/latency-shaped
+        # bandit reward
+        for i in cacheable:
+            rq = rqs[i]
+            kind = self.cache.put(rq.cache_key, rq.cache_fp,
+                                  rq.decision.model, rq.response,
+                                  qual[i], sig=rq.sig)
+            rq.cache_written = True
+            if self.telemetry is not None:
+                self.telemetry.record_cache(kind)
+        if cacheable and self.telemetry is not None:
+            # inserts can evict/expire internally; surface that churn
+            for kind, n in self.cache.drain_events().items():
+                self.telemetry.record_cache(kind, n)
+        if self.adaptive is None or not fresh:
+            for i in fresh:
+                rqs[i].observed = True
+            return None
+        sub = [rqs[i] for i in fresh]
+        sub_q = [qual[i] for i in fresh]
+        sub_ep = None if extra_penalty is None else \
+            np.asarray(extra_penalty, np.float32)[fresh]
         names = self.mres.snapshot()[1]
         col = {m: j for j, m in enumerate(names)}
-        midx = np.array([col[rq.decision.model] for rq in rqs])
-        X = np.stack([rq.decision.task_vector for rq in rqs])
+        midx = np.array([col[rq.decision.model] for rq in sub])
+        X = np.stack([rq.decision.task_vector for rq in sub])
         if self.reward_shaper is not None:
-            rewards = self.reward_shaper.shape(qualities, midx,
-                                               extra_penalty)
+            rewards = self.reward_shaper.shape(sub_q, midx, sub_ep)
         else:
-            rewards = np.asarray(qualities, np.float32)
-            if extra_penalty is not None:
-                rewards = rewards - np.asarray(extra_penalty, np.float32)
+            rewards = np.asarray(sub_q, np.float32)
+            if sub_ep is not None:
+                rewards = rewards - sub_ep
         self.adaptive.ensure(len(names))
         self.adaptive.update(X, midx, rewards)
-        for rq in rqs:
+        for rq in sub:
             rq.observed = True
         return rewards
 

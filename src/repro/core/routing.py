@@ -26,11 +26,15 @@ Batched pipeline (B queries, N catalog entries, M metric axes):
      joins at ``load_weight`` the same way; per-row argmax over the
      candidate mask wins.
 
-When load-aware routing is on, the (N,) load penalty row is ALSO fused
-into the kNN itself — added to valid rows inside the batched scoring
-matmul (the numpy fused-matmul path) or via the Pallas kernel's
-``row_bias`` operand — so a saturated model does not crowd healthier
-alternates out of the candidate set in the first place.
+The load penalty joins the blend at the candidate-scoring stage ONLY —
+it is deliberately NOT fused into the kNN similarity search.  Fusing it
+there (as an earlier revision did via the kernel's ``row_bias``
+operand) applies the penalty twice: once on the cosine-similarity
+scale, where a modest penalty dwarfs the similarity spread and crowds a
+loaded model out of the candidate set entirely (an unbounded penalty),
+and once in the blend.  The penalty must affect the final score exactly
+once, so candidate selection stays pure-cosine and fused-kNN decisions
+match an unfused scorer bit-for-bit.
 
 Filters only apply when the analyzer is confident (per query).  With the
 masks fused into the kNN, the candidate set is the k best models *among
@@ -135,8 +139,8 @@ class RoutingEngine:
         self.adaptive = adaptive
         self.adaptive_weight = float(adaptive_weight)
         # load-aware layer (repro.serving.load): live expected-wait
-        # penalties blended into the scores at ``load_weight`` (0 =
-        # load-blind routing) and fused into the kNN as a row bias
+        # penalties blended into the candidate scores at ``load_weight``
+        # (0 = load-blind routing), counted exactly once
         self.load = load
         self.load_weight = float(load_weight)
 
@@ -162,9 +166,11 @@ class RoutingEngine:
         filtered rows drop below -2 — then top-k selects per row.
 
         ``bias`` (N,) is an optional additive per-catalog-row term
-        (the negated load penalty) applied to VALID rows only, fused
-        into the matmul on both backends, so candidate selection under
-        load prefers models with headroom.
+        applied to VALID rows only, fused into the matmul on both
+        backends.  The load-aware path does NOT pass it (the penalty
+        joins the blend exactly once, at the candidate columns); it
+        stays available for callers that want a true selection-stage
+        prior.
         """
         emb, _, tt_matrix, dm_matrix, _, route_mat = snap
         B = T.shape[0]
@@ -254,8 +260,11 @@ class RoutingEngine:
             self.adaptive.ensure(n)
 
         # load-aware layer: one (N,) expected-wait penalty snapshot per
-        # batch, fused into the kNN as a row bias AND subtracted from
-        # the candidate scores below at ``load_weight``
+        # batch, subtracted from the candidate scores below at
+        # ``load_weight`` — exactly once.  It is NOT fused into the kNN
+        # selection: on the cosine scale the penalty would crowd loaded
+        # models out of the candidate set (a second, unbounded
+        # application of the same term; see the module docstring)
         load_on = self.load is not None and self.load_weight != 0.0
         lpen = None
         if load_on:
@@ -266,8 +275,7 @@ class RoutingEngine:
 
         # stage 1: batched kNN with the filter masks fused in
         k = min(self.knn_k, n)
-        vals, idx = self._knn_batch(T, k, ti, di, snap,
-                                    bias=None if lpen is None else -lpen)
+        vals, idx = self._knn_batch(T, k, ti, di, snap)
         finite = np.isfinite(vals) & (idx >= 0)
         idx = np.where(finite, idx, 0)        # safe gather index
         has_primary = finite.any(axis=1)                          # (B,)
@@ -302,13 +310,9 @@ class RoutingEngine:
         idx_s = np.take_along_axis(idx, order, axis=1).tolist()
         sc_s = np.take_along_axis(cscores, order, axis=1).tolist()
         fin_s = np.take_along_axis(finite, order, axis=1).tolist()
-        simv = np.take_along_axis(vals, order, axis=1)[:, 0]
-        if lpen is not None:
-            # the kNN vals carry the fused load bias; the reported
-            # similarity stays PURE cosine regardless of the knob
-            top = np.take_along_axis(idx, order, axis=1)[:, 0]
-            simv = np.where(np.isfinite(simv), simv + lpen[top], simv)
-        sim_s = simv.tolist()
+        # the kNN vals are pure cosine (no load bias), so the reported
+        # similarity needs no correction under the load knob
+        sim_s = np.take_along_axis(vals, order, axis=1)[:, 0].tolist()
 
         r = min(max(5, k), n)
         out: List[Optional[RoutingDecision]] = [None] * B

@@ -34,6 +34,7 @@ class Telemetry:
         self.window_s = window_s
         self._events: List[RouteEvent] = []
         self._admissions: Dict[str, int] = {}
+        self._cache: Dict[str, int] = {}
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------
@@ -63,6 +64,22 @@ class Telemetry:
         make its SLO, or shed as a guaranteed miss."""
         with self._lock:
             return dict(self._admissions)
+
+    def record_cache(self, kind: str, count: int = 1) -> None:
+        """Count one semantic-cache outcome (``hit`` / ``miss`` at
+        lookup, ``stored`` / ``rejected`` at write-back — see
+        ``repro.cache.CACHE_KINDS``)."""
+        with self._lock:
+            self._cache[kind] = self._cache.get(kind, 0) + count
+
+    def cache_funnel(self) -> Dict[str, int]:
+        """Semantic-cache outcome counts with a STABLE key set: every
+        kind in ``repro.cache.CACHE_KINDS`` is always present (zeroed
+        on an empty engine), so dashboards and tests can key into the
+        funnel without existence checks."""
+        from repro.cache import CACHE_KINDS
+        with self._lock:
+            return {k: self._cache.get(k, 0) for k in CACHE_KINDS}
 
     def attach_thumbs(self, model: str, thumbs_up: bool) -> None:
         with self._lock:
@@ -140,6 +157,7 @@ class Telemetry:
             "fallback_rate": self.fallback_rate(),
             "fallback_funnel": self.fallback_funnel(),
             "admission_funnel": self.admission_funnel(),
+            "cache_funnel": self.cache_funnel(),
             "latency": self.latency_percentiles(),
             "per_model": self.per_model(),
         }

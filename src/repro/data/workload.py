@@ -304,6 +304,57 @@ class NonStationaryWorkload:
 
 
 # ----------------------------------------------------------------------
+# repeat-heavy replay traffic (semantic-cache benchmarks)
+# ----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ZipfReplayScenario:
+    """Repeat-heavy traffic: a fixed pool of ``n_unique`` queries
+    replayed ``n_requests`` times with Zipf-distributed popularity
+    (rank r drawn with probability proportional to ``r**-zipf_a``) —
+    the production query-log shape where a small head of queries
+    dominates traffic and a semantic cache pays for itself.
+
+    ``zipf_a`` > 1 concentrates mass on the head (the classic web/LLM
+    traffic exponent is ~1); after the pool has been seen once, the
+    steady-state repeat fraction is what the cache-hit benchmarks
+    measure.  Deterministic in ``seed``.
+    """
+    n_unique: int = 64
+    n_requests: int = 512
+    zipf_a: float = 1.1
+    seed: int = 0
+    task_type: Optional[str] = None
+    domain: Optional[str] = None
+    complexity: Optional[float] = None
+
+    def validate(self) -> "ZipfReplayScenario":
+        assert self.n_unique > 0 and self.n_requests > 0
+        assert self.zipf_a > 0.0
+        return self
+
+    @property
+    def rank_probs(self) -> np.ndarray:
+        """(n_unique,) popularity of each pool rank (descending)."""
+        p = np.arange(1, self.n_unique + 1, dtype=np.float64) ** -self.zipf_a
+        return p / p.sum()
+
+
+def zipf_replay(sc: ZipfReplayScenario
+                ) -> Tuple[List[QueryRecord], np.ndarray]:
+    """(query pool, replay order): ``order`` is the (n_requests,) array
+    of pool indices in arrival order, drawn from the scenario's Zipf
+    popularity.  Replay ``pool[order[i]]`` to reproduce the episode."""
+    sc = sc.validate()
+    pool = make_workload(sc.n_unique, seed=sc.seed,
+                         task_type=sc.task_type, domain=sc.domain,
+                         complexity=sc.complexity)
+    rng = np.random.default_rng(np.random.SeedSequence([sc.seed, 1]))
+    order = rng.choice(sc.n_unique, size=sc.n_requests, p=sc.rank_probs)
+    return pool, order.astype(np.int64)
+
+
+# ----------------------------------------------------------------------
 # bursty open-loop traffic + discrete-event serving simulation
 # (load-/SLO-aware routing benchmarks)
 # ----------------------------------------------------------------------

@@ -51,7 +51,8 @@ def _clamp_blk_n(blk_n: int, n: int) -> int:
 def router_topk(emb, queries, k: int,
                 mask: Optional[jnp.ndarray] = None,
                 weights: Optional[jnp.ndarray] = None,
-                row_bias: Optional[jnp.ndarray] = None, *,
+                row_bias: Optional[jnp.ndarray] = None,
+                min_score: Optional[float] = None, *,
                 blk_q: int = 8, blk_n: int = 512,
                 interpret: Optional[bool] = None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -61,10 +62,12 @@ def router_topk(emb, queries, k: int,
     gives every query its own hierarchical-filter row (the batched
     routing path fuses task-type & domain masks here); weights (D,);
     row_bias (N,) f32 — additive per-catalog-row score term fused into
-    the scoring matmul (the load-aware path passes the negated live
-    expected-wait penalty), applied to mask-valid rows only.
-    Returns (vals (Q, k) f32, idx (Q, k) i32).  Masked / padded rows
-    surface as vals == -inf, as does the tail when k > N.
+    the scoring matmul, applied to mask-valid rows only; min_score —
+    static score floor fused after mask + bias (the semantic cache's
+    similarity threshold): rows below it surface as -inf.
+    Returns (vals (Q, k) f32, idx (Q, k) i32).  Masked / padded /
+    sub-threshold rows surface as vals == -inf, as does the tail when
+    k > N.
     """
     emb = jnp.asarray(emb, jnp.float32)
     queries = jnp.asarray(queries, jnp.float32)
@@ -89,8 +92,10 @@ def router_topk(emb, queries, k: int,
     maskp = _pad_to(_pad_to(maskf, blk_n, 1), blk_q, 0)      # pad -> 0 -> -inf
     biasp = _pad_to(biasf, blk_n, 1)
 
-    vals, idx = router_topk_pallas(qnp, ewp, maskp, biasp, k, blk_q=blk_q,
-                                   blk_n=blk_n, interpret=interp)
+    vals, idx = router_topk_pallas(
+        qnp, ewp, maskp, biasp, k, blk_q=blk_q, blk_n=blk_n,
+        min_score=float("-inf") if min_score is None else float(min_score),
+        interpret=interp)
     return vals[:Q], idx[:Q]
 
 

@@ -19,7 +19,8 @@ import jax.numpy as jnp
 def router_topk(emb: jnp.ndarray, queries: jnp.ndarray, k: int,
                 mask: Optional[jnp.ndarray] = None,
                 weights: Optional[jnp.ndarray] = None,
-                row_bias: Optional[jnp.ndarray] = None
+                row_bias: Optional[jnp.ndarray] = None,
+                min_score: Optional[float] = None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Top-k catalog rows by (optionally weighted) cosine similarity.
 
@@ -31,9 +32,11 @@ def router_topk(emb: jnp.ndarray, queries: jnp.ndarray, k: int,
               vals > -inf).  A 2-D mask is per-query.
     weights:  (D,) per-axis importance applied INSIDE the dot product
               (weighted cosine: sim = sum_d w_d e_d q_d / (|e||q|)).
-    row_bias: (N,) additive per-catalog-row term (e.g. the negated live
-              load penalty) applied to VALID rows only — masked rows
-              stay -inf regardless of bias.
+    row_bias: (N,) additive per-catalog-row term applied to VALID rows
+              only — masked rows stay -inf regardless of bias.
+    min_score: score floor applied AFTER mask + bias (the semantic
+              cache's similarity threshold): rows scoring below it
+              surface as -inf, exactly like masked rows.
     Returns (vals (Q, k) f32 descending, idx (Q, k) int32).
     k > N is allowed: the tail beyond the catalog surfaces as -inf.
     """
@@ -49,6 +52,8 @@ def router_topk(emb: jnp.ndarray, queries: jnp.ndarray, k: int,
     if mask is not None:
         mask2 = mask if mask.ndim == 2 else mask[None, :]
         scores = jnp.where(mask2, scores, -jnp.inf)
+    if min_score is not None:
+        scores = jnp.where(scores >= min_score, scores, -jnp.inf)
     if k > N:                       # pad the catalog axis with -inf rows
         scores = jnp.pad(scores, ((0, 0), (0, k - N)),
                          constant_values=-jnp.inf)

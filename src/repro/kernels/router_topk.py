@@ -47,7 +47,8 @@ def _select_topk(vals, idx, k):
 
 
 def _router_topk_kernel(q_ref, emb_ref, mask_ref, bias_ref, vals_ref,
-                        idx_ref, sv_ref, si_ref, *, k: int, blk_n: int):
+                        idx_ref, sv_ref, si_ref, *, k: int, blk_n: int,
+                        min_score: float):
     jn = pl.program_id(1)
     nn = pl.num_programs(1)
 
@@ -66,6 +67,11 @@ def _router_topk_kernel(q_ref, emb_ref, mask_ref, bias_ref, vals_ref,
     # bias joins valid rows only: a heavy load penalty must stay
     # distinguishable from a failed hierarchical filter (-inf)
     scores = jnp.where(mask > 0, scores + bias, NEG_INF)
+    if min_score != NEG_INF:
+        # fused admission threshold (the semantic cache's similarity
+        # floor): sub-threshold rows drop out in-register, so callers
+        # never see a "best" match that is not a usable one
+        scores = jnp.where(scores >= min_score, scores, NEG_INF)
 
     col0 = jn * blk_n
     col_idx = col0 + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
@@ -82,15 +88,19 @@ def _router_topk_kernel(q_ref, emb_ref, mask_ref, bias_ref, vals_ref,
         idx_ref[...] = si_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "blk_q", "blk_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "blk_q", "blk_n",
+                                             "min_score", "interpret"))
 def router_topk_pallas(qn: jnp.ndarray, embn: jnp.ndarray, mask: jnp.ndarray,
                        bias: jnp.ndarray, k: int, *, blk_q: int = 8,
-                       blk_n: int = 512, interpret: bool = True):
+                       blk_n: int = 512, min_score: float = NEG_INF,
+                       interpret: bool = True):
     """qn (Q, D) unit rows; embn (N, D) unit(+weighted) rows;
     mask (Q, N) f32 — per-query hierarchical filter mask (ops.py
     broadcasts a shared (N,) mask to all queries); bias (1, N) f32 —
     additive per-catalog-row score term (zeros when unused), applied
-    to mask-valid rows in-register right after the scoring matmul.
+    to mask-valid rows in-register right after the scoring matmul;
+    min_score — static score floor fused after mask+bias (rows below
+    it surface as -inf; -inf disables the threshold).
 
     Q % blk_q == 0, N % blk_n == 0, D padded to 128 (done by ops.py).
     Returns (vals (Q, k) f32, idx (Q, k) i32).
@@ -102,7 +112,8 @@ def router_topk_pallas(qn: jnp.ndarray, embn: jnp.ndarray, mask: jnp.ndarray,
     assert bias.shape == (1, N), (bias.shape, N)
     grid = (Q // blk_q, N // blk_n)
 
-    kernel = functools.partial(_router_topk_kernel, k=k, blk_n=blk_n)
+    kernel = functools.partial(_router_topk_kernel, k=k, blk_n=blk_n,
+                               min_score=min_score)
     vals, idx = pl.pallas_call(
         kernel,
         grid=grid,

@@ -18,6 +18,16 @@ request) and enforces per-request latency SLOs: a request carrying
 deadline is rerouted to its best-scoring candidate that fits, or shed
 outright when none can make it (``Response.admission`` records the
 outcome; counts land in ``Telemetry.admission_funnel``).
+
+When a ``SemanticCache`` is attached (``cache=`` or via the router),
+``submit`` consults it FIRST: each request's (preference axes + text
+sketch) key is looked up in one fused batched pass, and a hit
+short-circuits the entire analyze -> route -> admit -> generate path —
+no decode slot is taken, no admission is planned, and the stored
+response comes back with ``Response.cache_hit`` set (counts land in
+``Telemetry.cache_funnel``).  Misses proceed normally, carrying their
+cache key on the routed query so ``observe`` can write the validated
+response back.
 """
 from __future__ import annotations
 
@@ -56,6 +66,7 @@ class Response:
     rq: Any = None                    # RoutedQuery (adaptive loop handle)
     admission: str = "admitted"       # admitted | rerouted | shed
     est_latency_s: float = 0.0        # admission-time wait+service estimate
+    cache_hit: bool = False           # served from the semantic cache
 
     @property
     def shed(self) -> bool:
@@ -65,12 +76,25 @@ class Response:
 class ServingEngine:
     def __init__(self, router: OptiRoute, *, prompt_len: int = 32,
                  vocab_hash: int = 4096,
-                 load: Optional[LoadTracker] = None):
+                 load: Optional[LoadTracker] = None, cache=None):
         self.router = router
         self.tok = HashTokenizer(vocab_hash)
         self.prompt_len = prompt_len
         self.load = load if load is not None \
             else getattr(router.engine, "load", None)
+        self.cache = cache if cache is not None \
+            else getattr(router, "cache", None)
+        router_cache = getattr(router, "cache", None)
+        if cache is not None and router_cache is None:
+            # the write-back lives in OptiRoute.observe — an
+            # engine-attached cache must be visible there too, or every
+            # lookup misses forever (keys stamped, nothing ever stored)
+            router.cache = cache
+        elif cache is not None and router_cache is not cache:
+            # two different stores would split lookup (engine) from
+            # write-back (router) into a permanent 0% hit rate
+            raise ValueError("ServingEngine(cache=...) conflicts with "
+                             "the router's own cache — attach ONE store")
         self.log: List[Response] = []
 
     def _tokens(self, texts: Sequence[str], vocab_size: int) -> np.ndarray:
@@ -85,11 +109,64 @@ class ServingEngine:
             return []
         if mode == "batch":
             return self._submit_batch(requests)
-        # interactive: ONE vectorized routing pass over all requests,
-        # then deadline-aware admission against the live load state,
-        # then group identical (model, max_new) for batched generation
+        # interactive: the semantic cache answers repeats FIRST (one
+        # fused batched lookup; a hit skips analyze/route/admit/
+        # generate and takes no slot), then the misses flow through
+        # one vectorized routing pass + deadline-aware admission +
+        # grouped batched generation
+        reqs = list(requests)
+        out: List[Optional[Response]] = [None] * len(reqs)
+        keys = fps = None
+        miss = list(range(len(reqs)))
+        tel = self.router.telemetry
+        if self.cache is not None:
+            keys = self.cache.keys_for([r.prefs for r in reqs],
+                                       [r.text for r in reqs])
+            # the decoding budget joins the exact-match gate: a 4-token
+            # answer must never serve a 256-token request
+            fps = self.cache.fingerprints([r.prefs for r in reqs],
+                                          extras=[r.max_new for r in reqs])
+            # entries materialize under the store's lock: a concurrent
+            # eviction can never invalidate a hit between lookup and use
+            hit, entries, _ = self.cache.lookup_entries(keys, fps)
+            if tel is not None:
+                for kind, n in self.cache.drain_events().items():
+                    tel.record_cache(kind, n)
+            miss = []
+            for i, r in enumerate(reqs):
+                if tel is not None:
+                    tel.record_cache("hit" if hit[i] else "miss")
+                if hit[i]:
+                    e = entries[i]
+                    out[i] = Response(
+                        request=r, model=e.model, sig=e.sig,
+                        tokens=e.response, sim_latency_s=0.0,
+                        route_s=0.0, analyzer_s=0.0, cache_hit=True)
+                else:
+                    miss.append(i)
+        if miss:
+            served = self._route_and_serve(
+                [reqs[i] for i in miss],
+                None if keys is None else keys[miss],
+                None if fps is None else fps[miss])
+            for j, i in enumerate(miss):
+                out[i] = served[j]
+        self.log.extend(out)            # type: ignore[arg-type]
+        return out                      # type: ignore[return-value]
+
+    def _route_and_serve(self, requests: Sequence[Request],
+                         cache_keys, cache_fps) -> List[Response]:
+        """Route -> admit -> generate for the cache-miss rows (or the
+        whole batch when no cache is attached)."""
         routed_q = self.router.route_all([r.text for r in requests],
                                          [r.prefs for r in requests])
+        if cache_keys is not None:
+            # stamp each routed query with its write-back key: when the
+            # outcome later validates well, observe() turns this miss
+            # into the entry answering the next near-duplicate
+            for j, rq in enumerate(routed_q):
+                rq.cache_key = np.asarray(cache_keys[j])
+                rq.cache_fp = int(cache_fps[j])
         routed = list(zip(requests, routed_q))
         col: Dict[str, int] = {}
         if self.load is not None:
@@ -163,7 +240,6 @@ class ServingEngine:
                     analyzer_s=rq.analyzer_s,
                     fallback=rq.decision.fallback_kind, rq=None,
                     admission="shed", est_latency_s=plans[i][2])
-        self.log.extend(out)            # type: ignore[arg-type]
         return out                      # type: ignore[return-value]
 
     def _submit_batch(self, requests: Sequence[Request]) -> List[Response]:
@@ -204,8 +280,15 @@ class ServingEngine:
             raise ValueError(f"{len(responses)} responses but "
                              f"{len(qualities)} qualities — observations "
                              "must align one-to-one")
-        pairs = [(r.rq, q) for r, q in zip(responses, qualities)
-                 if r.rq is not None]
+        pairs = []
+        for r, q in zip(responses, qualities):
+            if r.rq is None:
+                continue
+            # hand the generated payload to the routed query so the
+            # router's observe() can write it into the semantic cache
+            if r.rq.response is None:
+                r.rq.response = r.tokens
+            pairs.append((r.rq, q))
         if not pairs:
             return None
         return self.router.observe([p[0] for p in pairs],
@@ -217,7 +300,11 @@ class ServingEngine:
         by_model: Dict[str, int] = defaultdict(int)
         lat: Dict[str, List[float]] = defaultdict(list)
         admissions: Dict[str, int] = defaultdict(int)
+        cache_hits = 0
         for r in self.log:
+            if r.cache_hit:   # answered from the cache: no admission
+                cache_hits += 1    # outcome, no slot, no model latency
+                continue
             admissions[r.admission] += 1
             if r.shed:        # a shed request was served by NO model —
                 continue      # it only shows up in the admission counts
@@ -238,4 +325,5 @@ class ServingEngine:
             "models": dict(by_model),
             "latency": latency,
             "admissions": dict(admissions),
+            "cache_hits": cache_hits,
         }

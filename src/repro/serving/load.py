@@ -21,8 +21,10 @@ gather.  The canonical lifecycle per request is
 Two derived views feed the router:
 
 * ``estimated_wait_s`` — expected queueing delay before a new arrival
-  starts executing: ``(queue + inflight) / capacity * ewma_s`` (the
-  work ahead of it, drained at ``capacity`` requests per service time);
+  starts executing: zero while a free slot exists
+  (``queue + inflight < capacity``), else the completions that must
+  land before it starts (``queue + inflight - capacity + 1``) drained
+  at ``capacity`` requests per service time;
 * ``penalty`` — the wait estimate squashed through ``w / (w + tau)``
   into [0, 1), so it joins the O(1)-scale score blend at the
   ``load_weight`` knob without a saturated model driving scores to
@@ -64,14 +66,27 @@ class LoadTracker:
     def ensure(self, n_models: int,
                capacity: Optional[Sequence[float]] = None) -> None:
         """Grow to ``n_models`` arms (catalog growth, e.g. merging).
-        ``capacity`` optionally sets the NEW arms' slot counts."""
+
+        ``capacity`` optionally sets the NEW arms' slot counts — either
+        a new-arms-only ``(grow,)`` vector or a full-length
+        ``(n_models,)`` vector (callers naturally hold the whole
+        catalog's capacities; the tail covers the new arms and existing
+        arms keep theirs).  A no-op when already at ``n_models``."""
         with self._lock:
             if n_models <= self.n_models:
                 return
             grow = n_models - self.n_models
-            cap = (np.full(grow, self._default_capacity, np.float32)
-                   if capacity is None
-                   else np.asarray(capacity, np.float32).reshape(grow))
+            if capacity is None:
+                cap = np.full(grow, self._default_capacity, np.float32)
+            else:
+                cap = np.asarray(capacity, np.float32).reshape(-1)
+                if cap.size == n_models:
+                    cap = cap[self.n_models:]
+                elif cap.size != grow:
+                    raise ValueError(
+                        f"capacity must have {grow} (new arms) or "
+                        f"{n_models} (full catalog) entries, got "
+                        f"{cap.size}")
             assert (cap > 0).all(), cap
             self.queue = np.concatenate([self.queue,
                                          np.zeros(grow, np.int64)])
@@ -131,14 +146,23 @@ class LoadTracker:
             return (self.queue.copy(), self.inflight.copy(),
                     self.capacity.copy(), self.ewma_s.copy())
 
+    @staticmethod
+    def _wait_of(ahead: np.ndarray, c: np.ndarray, s: np.ndarray
+                 ) -> np.ndarray:
+        """Expected start delay given ``ahead`` outstanding requests on
+        ``c`` slots at EWMA service time ``s``: zero while a free slot
+        exists (``ahead < c``); otherwise ``ahead - c + 1`` completions
+        must land first, draining at ``c`` per service time."""
+        return np.maximum(ahead - c + 1.0, 0.0) / c * s
+
     def estimated_wait_s(self, cols: Optional[np.ndarray] = None
                          ) -> np.ndarray:
-        """(C,) expected queueing delay before a NEW arrival starts:
-        the outstanding work ahead of it drains at ``capacity`` requests
-        per EWMA service time."""
+        """(C,) expected queueing delay before a NEW arrival starts.
+        Zero until ``queue + inflight >= capacity`` — idle slots mean
+        immediate start, so a single in-flight request on a multi-slot
+        model is never penalized over an idle one."""
         q, f, c, s = self.snapshot()
-        wait = (q + f) / c * s
-        w = wait.astype(np.float32)
+        w = self._wait_of(q + f, c, s).astype(np.float32)
         return w if cols is None else w[np.asarray(cols)]
 
     def estimated_latency_s(self, cols: Optional[np.ndarray] = None,
@@ -153,7 +177,7 @@ class LoadTracker:
         frozen pre-batch snapshot."""
         q, f, c, s = self.snapshot()
         ahead = q + f if extra is None else q + f + np.asarray(extra)
-        lat = (ahead / c * s + s).astype(np.float32)
+        lat = (self._wait_of(ahead, c, s) + s).astype(np.float32)
         return lat if cols is None else lat[np.asarray(cols)]
 
     def penalty(self, cols: Optional[np.ndarray] = None) -> np.ndarray:
@@ -162,6 +186,33 @@ class LoadTracker:
         ``RoutingEngine`` blends at ``load_weight``."""
         w = self.estimated_wait_s(cols)
         return (w / (w + self.tau_s)).astype(np.float32)
+
+    # ---------------- persistence (RouterState) ----------------
+    def state(self) -> dict:
+        """Packed-array snapshot for ``repro.checkpoint.RouterState``:
+        one consistent copy of every per-arm array under the lock."""
+        with self._lock:
+            return {"queue": self.queue.copy(),
+                    "inflight": self.inflight.copy(),
+                    "capacity": self.capacity.copy(),
+                    "ewma_s": self.ewma_s.copy()}
+
+    def load_state(self, state: dict) -> None:
+        """Restore a ``state()`` snapshot, REPLACING live counters.
+
+        Restores every array bit-exactly (so penalties — and therefore
+        routing — resume where the snapshot left off).  A restarted
+        process whose in-flight work died with it can follow up with
+        ``reset()`` to zero the transient queue/inflight counters while
+        keeping the learned EWMAs and capacities."""
+        cap = np.asarray(state["capacity"], np.float32)
+        assert (cap > 0).all(), cap
+        with self._lock:
+            self.queue = np.asarray(state["queue"], np.int64).copy()
+            self.inflight = np.asarray(state["inflight"], np.int64).copy()
+            self.capacity = cap.copy()
+            self.ewma_s = np.asarray(state["ewma_s"], np.float32).copy()
+            self.n_models = int(self.queue.shape[0])
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,397 @@
+"""Semantic response cache: packed-array store semantics (threshold,
+fingerprint gate, TTL, LRU, quality bar, kernel parity, state
+round-trip), the Zipf replay workload, and the serving-engine
+integration (hit short-circuit, funnel accounting, observe
+write-back)."""
+import numpy as np
+import pytest
+
+from repro.cache import (CACHE_KINDS, SemanticCache, prefs_fingerprint,
+                         text_sketch)
+from repro.core.orchestrator import OptiRoute
+from repro.core.preferences import TaskSignature
+from repro.core.telemetry import Telemetry
+from repro.data.workload import ZipfReplayScenario, zipf_replay
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.load import LoadTracker
+from tests.test_routing_batch import StubAnalyzer, random_catalog
+
+BAL = "balanced"
+
+
+def _cache(**kw):
+    kw.setdefault("capacity", 16)
+    kw.setdefault("threshold", 0.95)
+    kw.setdefault("min_quality", 0.5)
+    kw.setdefault("sketch_dims", 16)
+    return SemanticCache(**kw)
+
+
+# ----------------------------------------------------------------------
+# keys & fingerprints
+# ----------------------------------------------------------------------
+
+def test_text_sketch_deterministic_and_normalized():
+    s1 = text_sketch(["hello world foo", "bar baz"], dims=16)
+    s2 = text_sketch(["hello world foo", "bar baz"], dims=16)
+    np.testing.assert_array_equal(s1, s2)
+    np.testing.assert_allclose(np.linalg.norm(s1, axis=1), 1.0, atol=1e-5)
+    # identical texts sketch identically; disjoint texts do not
+    assert float(s1[0] @ s1[0]) == pytest.approx(1.0)
+    assert float(s1[0] @ s1[1]) < 0.99
+
+
+def test_prefs_fingerprint_gates_exactly():
+    assert prefs_fingerprint(BAL) == prefs_fingerprint(BAL)
+    assert prefs_fingerprint(BAL) != prefs_fingerprint("accuracy-first")
+    # dict and profile resolving to the same weights share a fingerprint
+    from repro.core.preferences import PROFILES
+    assert prefs_fingerprint(dict(PROFILES[BAL].weights)) == \
+        prefs_fingerprint(BAL)
+
+
+def test_keys_for_shapes_and_exact_repeat():
+    c = _cache()
+    keys = c.keys_for([BAL, BAL], ["same text here", "same text here"])
+    assert keys.shape == (2, c.dim)
+    np.testing.assert_array_equal(keys[0], keys[1])
+    with pytest.raises(ValueError):
+        c.keys_for([BAL], ["a", "b"])
+
+
+# ----------------------------------------------------------------------
+# store semantics
+# ----------------------------------------------------------------------
+
+def test_lookup_hit_miss_threshold_and_fingerprint():
+    c = _cache()
+    keys = c.keys_for([BAL, BAL], ["alpha beta gamma", "delta epsilon zeta"])
+    fps = c.fingerprints([BAL, BAL])
+    hit, slot, sim = c.lookup(keys, fps)
+    assert not hit.any() and (slot == -1).all()
+    assert c.put(keys[0], int(fps[0]), "m0", np.arange(4), 0.9,
+                 sig=TaskSignature()) == "stored"
+    hit, slot, sim = c.lookup(keys, fps)
+    assert hit[0] and not hit[1]
+    assert sim[0] >= c.threshold and np.isneginf(sim[1])
+    e = c.get(int(slot[0]))
+    assert e.model == "m0" and e.quality == pytest.approx(0.9)
+    np.testing.assert_array_equal(e.response, np.arange(4))
+    # same key, different prefs fingerprint -> miss
+    other = c.fingerprints(["accuracy-first"])
+    assert not c.lookup(keys[:1], other)[0][0]
+
+
+def test_put_rejects_below_quality_bar():
+    c = _cache(min_quality=0.6)
+    k = c.keys_for([BAL], ["q text"])
+    assert c.put(k[0], 1, "m", None, 0.59) == "rejected"
+    assert len(c) == 0 and c.stats()["rejected"] == 1
+
+
+def test_put_dedups_semantic_duplicates():
+    c = _cache(min_quality=0.0)
+    k = c.keys_for([BAL, BAL], ["query one two", "query one two"])
+    c.put(k[0], 5, "m0", np.array([1]), 0.7)
+    c.put(k[1], 5, "m1", np.array([2]), 0.9)     # better -> replaces
+    assert len(c) == 1
+    hit, slot, _ = c.lookup(k[:1], np.array([5]))
+    e = c.get(int(slot[0]))
+    assert e.model == "m1" and e.quality == pytest.approx(0.9)
+    # a WORSE duplicate refreshes recency but keeps the stronger answer
+    c.put(k[0], 5, "m2", np.array([3]), 0.2)
+    assert len(c) == 1
+    assert c.get(int(slot[0])).model == "m1"
+
+
+def test_lru_eviction_keeps_arrays_bounded():
+    c = _cache(capacity=2, threshold=0.999, min_quality=0.0)
+    texts = ["aa bb cc", "dd ee ff", "gg hh ii"]
+    keys = c.keys_for([BAL] * 3, texts)
+    c.put(keys[0], 1, "m0", None, 1.0)
+    c.put(keys[1], 1, "m1", None, 1.0)
+    c.lookup(keys[:1], np.array([1]))            # touch entry 0 (MRU)
+    c.put(keys[2], 1, "m2", None, 1.0)           # evicts entry 1 (LRU)
+    assert len(c) == 2 and c.stats()["evicted"] == 1
+    hit, _, _ = c.lookup(keys, np.array([1, 1, 1]))
+    assert hit.tolist() == [True, False, True]
+
+
+def test_ttl_expiry():
+    now = [0.0]
+    c = _cache(ttl_s=10.0, min_quality=0.0, time_fn=lambda: now[0])
+    k = c.keys_for([BAL], ["some text"])
+    c.put(k[0], 1, "m", None, 1.0)
+    assert c.lookup(k, np.array([1]))[0][0]
+    now[0] = 10.1
+    assert not c.lookup(k, np.array([1]))[0][0]
+    assert c.stats()["expired"] == 1 and len(c) == 0
+
+
+def test_kernel_lookup_matches_numpy():
+    rng = np.random.default_rng(3)
+    cn = _cache(capacity=32, min_quality=0.0)
+    ck = _cache(capacity=32, min_quality=0.0, use_kernel=True,
+                kernel_min_n=0)
+    texts = [f"query number {i} about topic {i % 5}" for i in range(12)]
+    keys = cn.keys_for([BAL] * 12, texts)
+    fps = cn.fingerprints([BAL] * 12)
+    for j in rng.choice(12, 7, replace=False):
+        for c in (cn, ck):
+            c.put(keys[j], int(fps[j]), f"m{j}", None, 1.0)
+    hn = cn.lookup(keys, fps)
+    hk = ck.lookup(keys, fps)
+    np.testing.assert_array_equal(hn[0], hk[0])
+    np.testing.assert_array_equal(hn[1], hk[1])
+    np.testing.assert_allclose(hn[2][hn[0]], hk[2][hk[0]], atol=1e-5)
+
+
+def test_state_round_trip_bit_exact():
+    c = _cache(min_quality=0.0)
+    keys = c.keys_for([BAL] * 3, ["a b", "c d", "e f"])
+    fps = c.fingerprints([BAL] * 3)
+    c.put(keys[0], int(fps[0]), "m0", np.arange(3), 0.8,
+          sig=TaskSignature(task_type="code", domain="software"))
+    c.put(keys[1], int(fps[1]), "m1", None, 0.6)
+    c2 = _cache()
+    c2.load_state(c.state())
+    np.testing.assert_array_equal(c.vecs, c2.vecs)
+    np.testing.assert_array_equal(c.valid, c2.valid)
+    h1 = c.lookup(keys, fps)
+    h2 = c2.lookup(keys, fps)
+    np.testing.assert_array_equal(h1[0], h2[0])
+    np.testing.assert_array_equal(h1[1], h2[1])
+    e = c2.get(int(h2[1][0]))
+    assert e.model == "m0" and e.sig.task_type == "code"
+    with pytest.raises(ValueError, match="dim"):
+        _cache(sketch_dims=8).load_state(c.state())
+
+
+# ----------------------------------------------------------------------
+# Zipf replay workload
+# ----------------------------------------------------------------------
+
+def test_zipf_replay_deterministic_and_repeat_heavy():
+    sc = ZipfReplayScenario(n_unique=32, n_requests=256, zipf_a=1.1,
+                            seed=3)
+    pool1, order1 = zipf_replay(sc)
+    pool2, order2 = zipf_replay(sc)
+    assert [q.text for q in pool1] == [q.text for q in pool2]
+    np.testing.assert_array_equal(order1, order2)
+    assert len(pool1) == 32 and order1.shape == (256,)
+    assert order1.min() >= 0 and order1.max() < 32
+    # repeat-heavy: the steady-state repeat fraction clears the 50%
+    # hit-rate bar the cache benchmark asserts
+    repeats = 256 - len(np.unique(order1))
+    assert repeats / 256 >= 0.5
+    # the head dominates: rank-0 traffic far above uniform
+    assert (order1 == order1[np.argmax(np.bincount(order1))]).mean() \
+        > 3.0 / 32
+    np.testing.assert_allclose(sc.rank_probs.sum(), 1.0)
+    with pytest.raises(AssertionError):
+        ZipfReplayScenario(n_unique=0).validate()
+
+
+# ----------------------------------------------------------------------
+# serving-engine integration
+# ----------------------------------------------------------------------
+
+def _serving(cache=None, load=None, load_weight=0.0):
+    m = random_catalog(10, seed=6)
+    router = OptiRoute(m, StubAnalyzer(), telemetry=Telemetry(),
+                       cache=cache, load=load, load_weight=load_weight)
+    return ServingEngine(router), router
+
+
+def test_engine_hit_short_circuits_and_funnels():
+    cache = _cache(capacity=64, min_quality=0.3)
+    engine, router = _serving(cache)
+    reqs = [Request(text=f"question {i % 3} here", prefs=BAL, id=i)
+            for i in range(6)]
+    out1 = engine.submit(reqs)
+    assert not any(r.cache_hit for r in out1)
+    engine.observe(out1, [0.9] * 6)              # validate -> write back
+    out2 = engine.submit(reqs)
+    assert all(r.cache_hit for r in out2)
+    for a, b in zip(out1, out2):
+        assert b.model == a.model                # replays the stored model
+        assert b.rq is None                      # no bandit/write-back handle
+        assert b.sim_latency_s == 0.0
+    funnel = router.telemetry.cache_funnel()
+    assert funnel["hit"] == 6 and funnel["miss"] == 6
+    assert funnel["stored"] == 6
+    # hits take no admission outcome and no per-model latency row
+    s = engine.summary()
+    assert s["cache_hits"] == 6
+    assert sum(s["models"].values()) == 6        # only the miss pass
+    # telemetry routing events: only misses were routed
+    assert len(router.telemetry._events) == 6
+
+
+def test_engine_hit_takes_no_load_slot():
+    cache = _cache(capacity=64, min_quality=0.0)
+    lt = LoadTracker(10, capacity=2.0)
+    engine, router = _serving(cache, load=lt, load_weight=1.0)
+    reqs = [Request(text="same question", prefs=BAL, id=i,
+                    deadline_ms=60_000.0) for i in range(4)]
+    out1 = engine.submit(reqs)
+    engine.observe(out1, [1.0] * 4)
+    before = lt.snapshot()
+    out2 = engine.submit(reqs)
+    assert all(r.cache_hit for r in out2)
+    after = lt.snapshot()
+    for a, b in zip(before, after):              # no admit/start/finish
+        np.testing.assert_array_equal(a, b)
+    # no admission outcomes recorded for hits
+    assert router.telemetry.admission_funnel() == \
+        {"admitted": 4}                          # first pass only
+
+
+def test_low_quality_responses_never_cached():
+    cache = _cache(capacity=64, min_quality=0.5)
+    engine, router = _serving(cache)
+    reqs = [Request(text="q text", prefs=BAL, id=0)]
+    out = engine.submit(reqs)
+    engine.observe(out, [0.2])
+    assert router.telemetry.cache_funnel()["rejected"] == 1
+    assert not engine.submit(reqs)[0].cache_hit
+
+
+def test_observe_writes_back_once():
+    cache = _cache(capacity=64, min_quality=0.0)
+    engine, router = _serving(cache)
+    out = engine.submit([Request(text="q", prefs=BAL, id=0)])
+    engine.observe(out, [0.9])
+    engine.observe(out, [0.9])                   # observed-once guard
+    assert router.telemetry.cache_funnel()["stored"] == 1
+
+
+def test_cache_write_back_without_bandit():
+    """observe() must write back even when no adaptive bandit is
+    attached — the cache is its own consumer of validated outcomes."""
+    cache = _cache(capacity=64, min_quality=0.0)
+    engine, router = _serving(cache)
+    assert router.adaptive is None
+    out = engine.submit([Request(text="q", prefs=BAL, id=0)])
+    assert engine.observe(out, [0.9]) is None    # no rewards (no bandit)
+    assert len(cache) == 1
+    assert engine.submit([Request(text="q", prefs=BAL, id=1)])[0].cache_hit
+
+
+def test_different_prefs_never_share_entries():
+    cache = _cache(capacity=64, min_quality=0.0)
+    engine, _ = _serving(cache)
+    out = engine.submit([Request(text="same text", prefs=BAL, id=0)])
+    engine.observe(out, [1.0])
+    r = engine.submit([Request(text="same text", prefs="accuracy-first",
+                               id=1)])[0]
+    assert not r.cache_hit
+
+
+def test_write_back_with_auto_observing_reward_fn():
+    """Regression: with adaptive + reward_fn + cache all attached,
+    route_all's auto-observe consumes bandit freshness BEFORE the
+    engine stamps cache keys — the post-generation observe() must
+    still write the cache (cache_written is tracked separately from
+    observed)."""
+    from repro.adaptive import LinearBandit
+    cache = _cache(capacity=64, min_quality=0.0)
+    m = random_catalog(10, seed=6)
+    router = OptiRoute(m, StubAnalyzer(), telemetry=Telemetry(),
+                       cache=cache, adaptive=LinearBandit(10),
+                       adaptive_weight=0.5, reward_fn=lambda rq: 0.7)
+    engine = ServingEngine(router)
+    out = engine.submit([Request(text="q text here", prefs=BAL, id=0)])
+    assert out[0].rq.observed          # auto-observed inside route_all
+    engine.observe(out, [0.9])         # post-generation ground truth
+    assert len(cache) == 1             # ...still written back
+    assert cache.get(int(np.flatnonzero(cache.valid)[0])).quality == \
+        pytest.approx(0.9)             # the REAL quality, not reward_fn's
+    assert engine.submit([Request(text="q text here", prefs=BAL,
+                                  id=1)])[0].cache_hit
+    # and never written twice
+    engine.observe(out, [0.9])
+    assert router.telemetry.cache_funnel()["stored"] == 1
+
+
+def test_engine_attached_cache_reaches_write_back():
+    """Regression: a cache attached via ServingEngine(cache=...) on a
+    cache-less router must still be written by the router's observe()
+    (the engine shares it onto the router)."""
+    cache = _cache(capacity=64, min_quality=0.0)
+    m = random_catalog(10, seed=6)
+    router = OptiRoute(m, StubAnalyzer(), telemetry=Telemetry())
+    engine = ServingEngine(router, cache=cache)
+    assert router.cache is cache
+    out = engine.submit([Request(text="q", prefs=BAL, id=0)])
+    engine.observe(out, [0.9])
+    assert len(cache) == 1
+    assert engine.submit([Request(text="q", prefs=BAL, id=1)])[0].cache_hit
+
+
+def test_max_new_joins_the_fingerprint_gate():
+    """A response generated under max_new=4 must never answer a
+    max_new=256 request: the decoding budget is part of the exact-match
+    gate."""
+    cache = _cache(capacity=64, min_quality=0.0)
+    engine, _ = _serving(cache)
+    out = engine.submit([Request(text="same text", prefs=BAL, id=0,
+                                 max_new=4)])
+    engine.observe(out, [1.0])
+    assert engine.submit([Request(text="same text", prefs=BAL, id=1,
+                                  max_new=4)])[0].cache_hit
+    assert not engine.submit([Request(text="same text", prefs=BAL, id=2,
+                                      max_new=256)])[0].cache_hit
+
+
+def test_conflicting_engine_and_router_caches_raise():
+    m = random_catalog(6, seed=1)
+    router = OptiRoute(m, StubAnalyzer(), cache=_cache())
+    with pytest.raises(ValueError, match="ONE store"):
+        ServingEngine(router, cache=_cache())
+    # same store twice is fine
+    ServingEngine(router, cache=router.cache)
+
+
+def test_eviction_and_expiry_reach_the_funnel():
+    """cache_funnel's evicted/expired keys must reflect internal churn
+    (put-time LRU evictions, lookup-time TTL purges), not stay zero."""
+    now = [0.0]
+    cache = _cache(capacity=2, threshold=0.999, min_quality=0.0,
+                   ttl_s=50.0, time_fn=lambda: now[0])
+    engine, router = _serving(cache)
+    for i, text in enumerate(["aa bb", "cc dd", "ee ff"]):
+        out = engine.submit([Request(text=text, prefs=BAL, id=i)])
+        engine.observe(out, [1.0])
+    funnel = router.telemetry.cache_funnel()
+    assert funnel["evicted"] == 1                # 3 inserts, 2 slots
+    now[0] = 60.0
+    engine.submit([Request(text="aa bb", prefs=BAL, id=9)])
+    assert router.telemetry.cache_funnel()["expired"] == 2
+
+
+def test_load_state_preserves_configured_capacity():
+    """Restoring an old (smaller) snapshot must not shrink a cache
+    that was reconfigured larger — live entries compact in."""
+    small = _cache(capacity=4, min_quality=0.0)
+    keys = small.keys_for([BAL] * 3, ["a b", "c d", "e f"])
+    fps = small.fingerprints([BAL] * 3)
+    for k, f, m in zip(keys, fps, ("m0", "m1", "m2")):
+        small.put(k, int(f), m, None, 1.0)
+    big = _cache(capacity=64, min_quality=0.0)
+    big.load_state(small.state())
+    assert big.capacity == 64 and len(big) == 3
+    hit, _, _ = big.lookup(keys, fps)
+    assert hit.all()
+    # ...and a snapshot with more live entries than capacity refuses
+    tiny = _cache(capacity=2, min_quality=0.0)
+    with pytest.raises(ValueError, match="live"):
+        tiny.load_state(small.state())
+
+
+def test_no_cache_engine_unchanged():
+    engine, router = _serving(None)
+    out = engine.submit([Request(text="q", prefs=BAL, id=0)])
+    assert not out[0].cache_hit
+    assert router.telemetry.cache_funnel() == {k: 0 for k in CACHE_KINDS}
+    assert engine.observe(out, [0.9]) is None

@@ -50,6 +50,36 @@ def test_router_topk_mask_and_weights(frac_masked):
     assert mask[i1[finite]].all()
 
 
+@pytest.mark.parametrize("min_score", [-0.5, 0.1, 0.35, 2.0])
+def test_router_topk_min_score_matches_ref(min_score):
+    """The fused score floor (the semantic cache's similarity
+    threshold) prunes identically on kernel and oracle."""
+    N, D, Q, k = 384, 16, 6, 8
+    emb = RNG.standard_normal((N, D)).astype(np.float32)
+    q = RNG.standard_normal((Q, D)).astype(np.float32)
+    mask = RNG.random((Q, N)) < 0.8
+    bias = (RNG.random(N) * 0.1).astype(np.float32)
+    v1, i1 = K.router_topk(emb, q, k, mask=mask, row_bias=bias,
+                           min_score=min_score)
+    v2, i2 = R.router_topk(jnp.asarray(emb), jnp.asarray(q), k,
+                           mask=jnp.asarray(mask),
+                           row_bias=jnp.asarray(bias),
+                           min_score=min_score)
+    v1 = np.asarray(v1)
+    np.testing.assert_allclose(v1, np.asarray(v2), rtol=1e-5, atol=1e-6)
+    finite = np.isfinite(v1)
+    assert (v1[finite] >= min_score - 1e-6).all()
+    # sub-threshold and masked rows surface exactly as -inf, and an
+    # impossible floor empties the result entirely
+    if min_score >= 2.0:
+        assert not finite.any()
+    # disabled floor == no floor
+    v3, _ = K.router_topk(emb, q, k, mask=mask, row_bias=bias,
+                          min_score=None)
+    v4, _ = K.router_topk(emb, q, k, mask=mask, row_bias=bias)
+    np.testing.assert_array_equal(np.asarray(v3), np.asarray(v4))
+
+
 def test_router_topk_all_masked():
     N, D = 256, 8
     emb = RNG.random((N, D)).astype(np.float32)

@@ -55,11 +55,12 @@ def test_tracker_lifecycle_counts():
 def test_tracker_ewma_and_wait_estimates():
     lt = LoadTracker(2, capacity=2.0, ewma_alpha=0.5,
                      default_service_s=0.1)
-    # 4 outstanding on capacity 2 at 0.1s each -> 0.2s expected wait
+    # 4 outstanding on capacity 2 at 0.1s each: 3 completions must land
+    # before a new arrival starts, draining 2 per 0.1s -> 0.15s wait
     lt.admit(0, count=4)
-    np.testing.assert_allclose(lt.estimated_wait_s(), [0.2, 0.0],
+    np.testing.assert_allclose(lt.estimated_wait_s(), [0.15, 0.0],
                                atol=1e-6)
-    np.testing.assert_allclose(lt.estimated_latency_s([0]), [0.3],
+    np.testing.assert_allclose(lt.estimated_latency_s([0]), [0.25],
                                atol=1e-6)
     # EWMA folds realized service times
     lt.start(0)
@@ -85,6 +86,39 @@ def test_tracker_ensure_growth_and_capacity():
     assert lt.n_models == 5
     lt.set_capacity(0, 16.0)
     assert lt.snapshot()[2][0] == 16.0
+
+
+def test_idle_capacity_has_zero_wait():
+    """Regression: one in-flight request on a 4-slot model must not be
+    penalized over an idle one — expected wait stays 0 until
+    queue + inflight >= capacity (the old (q+f)/c*s estimate reported
+    nonzero wait for a model with free slots)."""
+    lt = LoadTracker(2, capacity=4.0, default_service_s=0.1)
+    lt.admit(0)
+    lt.start(0)                          # 1 in flight, 3 slots free
+    q, f, c, _ = lt.snapshot()
+    assert q[0] == 0 and f[0] == 1 and c[0] == 4.0
+    np.testing.assert_allclose(lt.estimated_wait_s(), [0.0, 0.0])
+    np.testing.assert_allclose(lt.penalty(), [0.0, 0.0])
+    # the estimate turns on exactly at saturation
+    lt.admit(0, count=3)                 # q+f == capacity
+    assert lt.estimated_wait_s()[0] > 0.0
+    assert lt.estimated_wait_s()[1] == 0.0
+
+
+def test_ensure_accepts_full_length_capacity():
+    """Regression: ensure() used to reshape(grow) the capacity input
+    and crash on a full-length (n_models,) vector."""
+    lt = LoadTracker(2, capacity=4.0)
+    full = np.array([9.0, 9.0, 1.0, 2.0, 8.0], np.float32)
+    lt.ensure(5, capacity=full)          # full catalog vector: tail
+    assert lt.snapshot()[2].tolist() == [4.0, 4.0, 1.0, 2.0, 8.0]
+    lt.ensure(6, capacity=[16.0])        # new-arms-only still works
+    assert lt.snapshot()[2].tolist() == [4.0, 4.0, 1.0, 2.0, 8.0, 16.0]
+    with pytest.raises(ValueError, match="capacity"):
+        lt.ensure(8, capacity=[1.0, 2.0, 3.0])   # neither 2 nor 8
+    lt.ensure(3, capacity=np.ones(3))    # no growth -> no-op
+    assert lt.n_models == 6
 
 
 def test_tracker_thread_safety():
@@ -183,6 +217,66 @@ def test_load_route_single_matches_batch():
         d_1 = eng.route(p, s)
         assert d_b.model == d_1.model
         assert d_b.score == pytest.approx(d_1.score, abs=1e-6)
+
+
+def test_load_penalty_counted_once_fused_vs_unfused():
+    """Regression: the load penalty must affect the final score exactly
+    once, at the candidate-column scoring blend.  The old path ALSO
+    fused -penalty into the kNN similarity search, where it crowded a
+    loaded model out of the candidate set entirely (an unbounded second
+    application) — with knn_k < n the loaded-but-still-best model lost
+    to a strictly worse alternate."""
+    m = _flat_catalog(6)
+    lt = LoadTracker(6, capacity=2.0)
+    lt.admit(0, count=5)                 # modest load on the leader
+    lt.admit(1, count=2)
+    eng = RoutingEngine(m, knn_k=4, load=lt, load_weight=1.0)
+    d = eng.route_many(["accuracy-first"], [SIG])[0]
+    emb, names, *_ = m.snapshot()
+    from repro.core.preferences import resolve
+    W = resolve("accuracy-first").vector()
+    lpen = 1.0 * lt.penalty()
+    # brute-force reference: blend over the FULL catalog, penalty once
+    ref = emb @ W - lpen
+    assert d.model == names[int(np.argmax(ref))]
+    assert d.score == pytest.approx(float(ref.max()), abs=1e-5)
+    # every surfaced candidate's score carries the penalty exactly once
+    for nm, s in d.candidates:
+        j = names.index(nm)
+        assert s == pytest.approx(float(ref[j]), abs=1e-5)
+    # parity pin: an explicitly unfused kNN (bias stripped) must be
+    # decision- and score-identical to the engine's own path
+    eng2 = RoutingEngine(m, knn_k=4, load=lt, load_weight=1.0)
+    orig = eng2._knn_batch
+    eng2._knn_batch = \
+        lambda T, k, ti, di, snap, bias=None: orig(T, k, ti, di, snap,
+                                                   bias=None)
+    d2 = eng2.route_many(["accuracy-first"], [SIG])[0]
+    assert (d.model, d.fallback_kind) == (d2.model, d2.fallback_kind)
+    assert d.score == pytest.approx(d2.score, abs=1e-6)
+    assert d.candidates == d2.candidates
+
+
+def test_fallback_scorer_penalty_counted_once():
+    """The fallback ladder's dense scorer applies the same
+    penalty-exactly-once blend as the primary path."""
+    m = MRES()
+    m.register(make_entry("gen-a", accuracy=0.9, task_types=("chat",),
+                          generalist=True))
+    m.register(make_entry("gen-b", accuracy=0.8, task_types=("chat",),
+                          generalist=True))
+    lt = LoadTracker(2, capacity=1.0)
+    lt.admit(0, count=10)
+    eng = RoutingEngine(m, load=lt, load_weight=2.0)
+    sig = TaskSignature(task_type="vqa", domain="healthcare")
+    d = eng.route("accuracy-first", sig)
+    assert d.used_fallback
+    emb, names, *_ = m.snapshot()
+    from repro.core.preferences import resolve
+    W = resolve("accuracy-first").vector()
+    ref = emb @ W - 2.0 * lt.penalty()
+    for nm, s in d.candidates:
+        assert s == pytest.approx(float(ref[names.index(nm)]), abs=1e-5)
 
 
 # ----------------------------------------------------------------------
@@ -318,7 +412,7 @@ def test_simulator_parallel_servers_and_shed():
 
 
 def test_simulator_mirrors_tracker_state():
-    lt = LoadTracker(1, default_service_s=9.9)
+    lt = LoadTracker(1, capacity=1.0, default_service_s=9.9)
     sim = ServingSimulator([0.5], [1], tracker=lt)
     seen = []
 
@@ -361,10 +455,10 @@ def test_plan_admission_sees_pending_batch_placements():
 def test_serving_engine_intra_batch_admission():
     from repro.serving.engine import Request
     engine, lt, _ = _serving_setup()
-    # capacity 2, service estimate 0.05s -> ~0.175s budget fits the
+    # capacity 2, service estimate 0.05s -> a 0.125s budget fits the
     # first few placements per model, then the batch must spill/shed
     reqs = [Request(text=f"q{i}", prefs="accuracy-first", id=i,
-                    deadline_ms=175.0) for i in range(40)]
+                    deadline_ms=125.0) for i in range(40)]
     out = engine.submit(reqs)
     kinds = {r.admission for r in out}
     assert "shed" in kinds, [r.admission for r in out]
@@ -422,7 +516,7 @@ def test_rerouted_and_shed_responses_carry_no_bandit_handle():
     from repro.serving.engine import Request
     engine, lt, _ = _serving_setup()
     reqs = [Request(text=f"q{i}", prefs="accuracy-first", id=i,
-                    deadline_ms=175.0) for i in range(40)]
+                    deadline_ms=125.0) for i in range(40)]
     out = engine.submit(reqs)
     kinds = {r.admission for r in out}
     assert kinds >= {"admitted", "shed"}

@@ -1,0 +1,155 @@
+"""Durable router state: atomic versioned snapshots of bandit
+statistics, feedback biases, load EWMAs, and cache contents — restored
+bit-exactly into a fresh engine (identical route_many output)."""
+import numpy as np
+import pytest
+
+from repro.adaptive import LinearBandit
+from repro.cache import SemanticCache
+from repro.checkpoint import (RouterState, load_router_state,
+                              save_router_state)
+from repro.core.feedback import FeedbackStore
+from repro.core.orchestrator import OptiRoute
+from repro.core.preferences import TaskSignature
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.load import LoadTracker
+from tests.test_routing_batch import (StubAnalyzer, random_catalog,
+                                      random_queries)
+
+N = 12
+
+
+def _build(with_all=True):
+    m = random_catalog(N, seed=4)
+    kw = {}
+    if with_all:
+        kw = dict(adaptive=LinearBandit(N, seed=1), adaptive_weight=0.7,
+                  load=LoadTracker(N, capacity=2.0), load_weight=0.8,
+                  cache=SemanticCache(capacity=32, sketch_dims=16,
+                                      min_quality=0.2))
+    return OptiRoute(m, StubAnalyzer(), feedback=FeedbackStore(), **kw)
+
+
+def _warm(router):
+    """Accumulate non-trivial learned state in every component."""
+    eng = ServingEngine(router)
+    reqs = [Request(text=f"q {i % 4} words here", prefs="balanced", id=i)
+            for i in range(8)]
+    out = eng.submit(reqs)
+    eng.observe(out, list(np.linspace(0.3, 0.9, 8)))
+    router.give_feedback(out[0].rq, True)
+    router.give_feedback(out[1].rq, False)
+    if router.load is not None:
+        router.load.admit_many(np.array([0, 0, 3, 5]))
+        router.load.start(0)
+        router.load.finish(0, 0.123)
+    return out
+
+
+def test_round_trip_bit_exact_routing(tmp_path):
+    r1 = _build()
+    _warm(r1)
+    prefs, sigs = random_queries(6, seed=7)
+    before = r1.engine.route_many(prefs, sigs)
+
+    state = RouterState(str(tmp_path))
+    state.save(r1, step=5)
+    r2 = _build()
+    assert state.restore(r2) == 5
+
+    # every component restored bit-exactly
+    np.testing.assert_array_equal(r1.adaptive.A, r2.adaptive.A)
+    np.testing.assert_array_equal(r1.adaptive.b, r2.adaptive.b)
+    np.testing.assert_array_equal(r1.adaptive.counts, r2.adaptive.counts)
+    assert r1.feedback.state() == r2.feedback.state()
+    for a, b in zip(r1.load.state().values(), r2.load.state().values()):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(r1.cache.vecs, r2.cache.vecs)
+    np.testing.assert_array_equal(r1.cache.valid, r2.cache.valid)
+
+    # the acceptance criterion: identical route_many output
+    after = r2.engine.route_many(prefs, sigs)
+    for a, b in zip(before, after):
+        assert a.model == b.model
+        assert a.score == b.score                # bit-exact, no approx
+        assert a.candidates == b.candidates
+        assert a.fallback_kind == b.fallback_kind
+
+
+def test_restored_cache_answers_warm(tmp_path):
+    r1 = _build()
+    out = _warm(r1)
+    state = RouterState(str(tmp_path))
+    state.save(r1, step=1)
+    r2 = _build()
+    state.restore(r2)
+    eng2 = ServingEngine(r2)
+    reqs = [Request(text=f"q {i % 4} words here", prefs="balanced", id=i)
+            for i in range(8)]
+    out2 = eng2.submit(reqs)
+    hits = [r for r in out2 if r.cache_hit]
+    assert hits, "restored cache must answer the replayed head"
+    stored_models = {e for e, ok in zip(r1.cache.models, r1.cache.valid)
+                     if ok}
+    assert {r.model for r in hits} <= stored_models
+
+
+def test_single_file_variant(tmp_path):
+    r1 = _build()
+    _warm(r1)
+    path = str(tmp_path / "router.npz")
+    save_router_state(path, r1)
+    r2 = _build()
+    meta = load_router_state(path, r2)
+    assert meta["router_state_version"] == 1
+    assert sorted(meta["components"]) == ["bandit", "cache", "feedback",
+                                          "load"]
+    prefs, sigs = random_queries(4, seed=2)
+    for a, b in zip(r1.engine.route_many(prefs, sigs),
+                    r2.engine.route_many(prefs, sigs)):
+        assert a.model == b.model and a.score == b.score
+
+
+def test_cold_start_and_retention(tmp_path):
+    state = RouterState(str(tmp_path / "empty"))
+    assert state.restore(_build()) is None       # cold start: no-op
+    r = _build()
+    _warm(r)
+    state2 = RouterState(str(tmp_path / "steps"), keep=2)
+    for step in (1, 2, 3, 4):
+        state2.save(r, step=step)
+    assert state2.mgr.steps() == [3, 4]          # retention pruned 1, 2
+    assert state2.restore(_build()) == 4
+
+
+def test_feedback_only_router_round_trips(tmp_path):
+    """Components the router does not carry are skipped cleanly."""
+    r1 = _build(with_all=False)
+    r1.feedback.record(TaskSignature(), "m3", True)
+    path = str(tmp_path / "fb.npz")
+    save_router_state(path, r1)
+    r2 = _build(with_all=False)
+    meta = load_router_state(path, r2)
+    assert meta["components"] == ["feedback"]
+    assert r1.feedback.state() == r2.feedback.state()
+
+
+def test_restore_into_missing_component_raises(tmp_path):
+    r1 = _build()
+    _warm(r1)
+    path = str(tmp_path / "full.npz")
+    save_router_state(path, r1)
+    r2 = _build(with_all=False)                  # no bandit/load/cache
+    with pytest.raises(ValueError, match="no such component"):
+        load_router_state(path, r2)
+
+
+def test_empty_feedback_round_trips(tmp_path):
+    """Zero-entry components must not corrupt the npz round-trip."""
+    r1 = _build()
+    path = str(tmp_path / "empty.npz")
+    save_router_state(path, r1)                  # nothing learned yet
+    r2 = _build()
+    load_router_state(path, r2)
+    assert r2.feedback.state() == []
+    assert len(r2.cache) == 0

@@ -106,6 +106,60 @@ def test_admission_funnel():
     assert tel.summary()["admission_funnel"]["shed"] == 2
 
 
+def test_percentiles_zero_and_one_sample_edges():
+    """Percentile views on empty / single-sample ledgers: no NaNs, no
+    crashes, p50 == p99 on one sample."""
+    tel = Telemetry()
+    assert tel.per_model() == {}                 # 0 events: empty, no error
+    assert tel.latency_percentiles() == {"p50": 0.0, "p90": 0.0,
+                                         "p99": 0.0}
+    tel.record(_ev(1.0, "solo", route_s=0.07, analyzer_s=0.03))
+    agg = tel.per_model()                        # 1 sample: collapse
+    assert agg["solo"]["latency_p50_s"] == pytest.approx(0.1)
+    assert agg["solo"]["latency_p99_s"] == pytest.approx(0.1)
+    p = tel.latency_percentiles()
+    assert p["p50"] == p["p99"] == pytest.approx(0.1)
+
+
+def test_engine_summary_percentile_edges():
+    """ServingEngine.summary per-model p50/p99 with 0 and 1 served
+    requests (0 -> {} summary; 1 -> collapsed percentiles)."""
+    from repro.core.orchestrator import OptiRoute
+    from repro.serving.engine import Request, ServingEngine
+    from tests.test_routing_batch import StubAnalyzer, random_catalog
+    eng = ServingEngine(OptiRoute(random_catalog(6, seed=2),
+                                  StubAnalyzer(), telemetry=Telemetry()))
+    assert eng.summary() == {}                   # empty engine
+    out = eng.submit([Request(text="q", prefs="balanced", id=0)])
+    s = eng.summary()
+    stats = s["latency"][out[0].model]
+    assert stats["p50_s"] == stats["p99_s"]      # one sample collapses
+    assert s["cache_hits"] == 0
+
+
+def test_funnel_key_stability_across_empty_engines():
+    """Funnels on empty/fresh engines: admission_funnel is {} until an
+    outcome lands (and only ever grows ADMISSION_KINDS keys);
+    cache_funnel ALWAYS exposes the full stable CACHE_KINDS key set,
+    zeroed, so dashboards can key in without existence checks."""
+    from repro.cache import CACHE_KINDS
+    from repro.serving.load import ADMISSION_KINDS
+    for tel in (Telemetry(), Telemetry()):       # any fresh instance
+        assert tel.admission_funnel() == {}
+        assert list(tel.cache_funnel()) == list(CACHE_KINDS)
+        assert all(v == 0 for v in tel.cache_funnel().values())
+        s = tel.summary()
+        assert list(s["cache_funnel"]) == list(CACHE_KINDS)
+        assert s["admission_funnel"] == {}
+    tel = Telemetry()
+    tel.record_admission("shed")
+    tel.record_cache("hit", count=3)
+    assert set(tel.admission_funnel()) <= set(ADMISSION_KINDS)
+    funnel = tel.cache_funnel()
+    assert list(funnel) == list(CACHE_KINDS)     # keys stable after writes
+    assert funnel["hit"] == 3 and funnel["miss"] == 0
+
+
 def test_latency_percentiles():
     tel = Telemetry()
     for i in range(100):
