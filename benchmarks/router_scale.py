@@ -13,7 +13,17 @@ Two sections:
    ``route`` calls on a >=4096-entry catalog at B=256.  This is the
    serving engine's hot path; the batched path must win by >=5x.
 
-``--smoke`` runs a seconds-scale version of both for CI.
+3. Fused single-dispatch route step — ``route_many_batch`` (ONE jitted
+   device program per batch behind recompile-free shape buckets,
+   array-first ``RoutingBatch`` output) vs the staged numpy reference
+   path at B=256 / N=4096, reporting per-query latency, device
+   dispatches per batch, and recompiles across a mixed-batch-size
+   replay after warmup.  Asserted: exactly one dispatch per batch,
+   zero steady-state recompiles, and a backend-dependent latency
+   floor — >=2x on accelerators, no material regression on CPU (see
+   ``bench_fused_vs_staged``).
+
+``--smoke`` runs a seconds-scale version of all three for CI.
 """
 from __future__ import annotations
 
@@ -110,6 +120,98 @@ def bench_batched_vs_loop(catalog_n: int = 4096, b: int = 256,
             "batched_us": t_batch, "speedup": speedup}
 
 
+def _sustained_median(fn, seconds: float) -> float:
+    """Run ``fn`` continuously for ``seconds`` and return the median
+    per-call wall time of the SECOND half of the calls — the sustained
+    steady-state cost, robust to burst/throttle swings that make
+    min-of-trials microbenchmarks lie on shared CI machines."""
+    ts = []
+    end = time.perf_counter() + seconds
+    while time.perf_counter() < end:
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    half = sorted(ts[len(ts) // 2:])
+    return half[len(half) // 2]
+
+
+def bench_fused_vs_staged(catalog_n: int = 4096, b: int = 256,
+                          rounds: int = 3, seconds: float = 1.0,
+                          verbose: bool = True):
+    """Fused single-dispatch ``route_many_batch`` vs the staged numpy
+    reference path, plus dispatch/recompile accounting.
+
+    Latency is measured as interleaved sustained-median rounds (both
+    paths sample the same machine states) and the speedup floor is
+    backend-dependent: on an accelerator the fused path must win >=2x
+    (one executable vs several dispatches + a host blend); on CPU —
+    where XLA's top-k emitter and numpy's chunked argmax are the same
+    order and the staged path is already vectorized — the fused path
+    must simply not regress materially, and the STRUCTURAL claims are
+    asserted exactly: one device dispatch per routed batch and zero
+    recompiles across mixed batch sizes after warmup.
+    """
+    from repro.kernels import ops as K
+    mres = _synthetic_catalog(catalog_n)
+    mres.embeddings()
+    eng = RoutingEngine(mres, knn_k=8, use_kernel=False)
+    prefs, sigs = _random_queries(b)
+
+    # parity gate before timing anything: the fused path must pick the
+    # same models (score ties aside) as the staged reference
+    fused = eng.route_many_batch(prefs, sigs)
+    staged = eng.route_many_staged(prefs, sigs)
+    agree = sum(f == s.model for f, s in zip(fused.models(), staged))
+    assert agree >= int(0.99 * b), f"fused/staged diverge: {agree}/{b}"
+
+    t_staged = []
+    t_fused = []
+    for _ in range(rounds):
+        t_staged.append(_sustained_median(
+            lambda: eng.route_many_staged(prefs, sigs), seconds))
+        t_fused.append(_sustained_median(
+            lambda: eng.route_many_batch(prefs, sigs), seconds))
+    staged_us = sorted(t_staged)[rounds // 2] / b * 1e6
+    fused_us = sorted(t_fused)[rounds // 2] / b * 1e6
+
+    # steady-state serving: replay mixed batch sizes after warming the
+    # power-of-two buckets — zero recompiles, one dispatch per batch
+    for wb in (1, 9, 17, 33, 65, b):
+        p2, s2 = _random_queries(wb, seed=wb)
+        eng.route_many_batch(p2, s2)
+    warm = K.route_step_stats()
+    replay = (3, 17, b, 40, 1, 100, 8, b // 2)
+    for i, rb in enumerate(replay):
+        p2, s2 = _random_queries(rb, seed=1000 + i)
+        eng.route_many_batch(p2, s2)
+    stats = K.route_step_stats()
+    # "dispatches" counts fused-op invocations (each issues exactly
+    # one jitted call): the ==1/batch assert guards the CALL structure
+    # — route_many_batch must never reintroduce host-side retry loops
+    # or split the batch across multiple op calls.  The recompile
+    # counter (jit-cache growth) is the device-side guarantee.
+    dispatches = stats["route_step_dispatches"] \
+        - warm["route_step_dispatches"]
+    recompiles = stats["route_step_compiles"] \
+        - warm["route_step_compiles"]
+
+    backend = jax.default_backend()
+    speedup = staged_us / fused_us
+    floor = 2.0 if backend in ("tpu", "gpu") else 0.7
+    if verbose:
+        print(f"  fused route step N={catalog_n:,} B={b} "
+              f"[{backend}]: staged={staged_us:8.1f}us/q  "
+              f"fused={fused_us:8.1f}us/q  speedup={speedup:5.2f}x  "
+              f"dispatches/batch={dispatches / len(replay):.2f}  "
+              f"recompiles={recompiles}")
+    return {"catalog": catalog_n, "batch": b, "backend": backend,
+            "staged_us": staged_us, "fused_us": fused_us,
+            "speedup": speedup, "speedup_floor": floor,
+            "dispatches_per_batch": dispatches / len(replay),
+            "replay_batches": len(replay),
+            "recompiles_after_warmup": recompiles}
+
+
 def run(sizes=(1_000, 10_000, 100_000), q_batch: int = 8, k: int = 8,
         d: int = 8, repeats: int = 20, decision_catalog: int = 4096,
         decision_batch: int = 256, verbose: bool = True):
@@ -149,16 +251,30 @@ def run(sizes=(1_000, 10_000, 100_000), q_batch: int = 8, k: int = 8,
 
     decisions = bench_batched_vs_loop(decision_catalog, decision_batch,
                                       verbose=verbose)
-    save_result("router_scale", {"rows": rows, "decisions": decisions})
+    fused = bench_fused_vs_staged(decision_catalog, decision_batch,
+                                  verbose=verbose)
+    save_result("router_scale", {"rows": rows, "decisions": decisions,
+                                 "fused": fused})
     biggest = rows[-1]
     # real-time claim: even at 100k the fused path is sub-millisecond
     assert biggest["xla_fused_us"] < 10_000
     # batched array-first routing must beat the per-query loop >=5x
     assert decisions["speedup"] >= 5.0, decisions
+    # the fused single-dispatch step: >=2x on accelerator backends
+    # (dispatch overhead + kernel fusion are the point), no material
+    # regression on CPU — and the structural claims exactly: one
+    # device dispatch per batch, zero recompiles across mixed batch
+    # sizes after warmup
+    assert fused["speedup"] >= fused["speedup_floor"], fused
+    assert fused["dispatches_per_batch"] == 1.0, fused
+    assert fused["recompiles_after_warmup"] == 0, fused
     return ("router_scale", biggest["xla_fused_us"],
             f"100k-catalog {biggest['xla_fused_us']:.0f}us/query "
             f"(tpu roofline {biggest['tpu_roofline_us']:.1f}us); "
-            f"batched routing {decisions['speedup']:.1f}x vs loop "
+            f"batched routing {decisions['speedup']:.1f}x vs loop, "
+            f"fused route step {fused['speedup']:.1f}x vs staged "
+            f"({fused['fused_us']:.0f}us/q, "
+            f"{fused['recompiles_after_warmup']} recompiles) "
             f"@B={decisions['batch']}/N={decisions['catalog']}")
 
 

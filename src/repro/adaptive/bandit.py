@@ -106,6 +106,12 @@ class LinearBandit:
         """(N, D) current per-model reward estimates."""
         return self._refresh()[0]
 
+    def posterior(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(theta (N, D), Ainv (N, D, D)) under the current posterior —
+        the arrays the fused ``route_step`` program scores LinUCB
+        against on device."""
+        return self._refresh()
+
     def predict(self, X: np.ndarray) -> np.ndarray:
         """(B, N) posterior-mean reward estimates (no exploration)."""
         theta, _ = self._refresh()

@@ -194,9 +194,15 @@ class SemanticCache:
             slot = np.full(B, -1, np.int64)
             hit = np.zeros(B, bool)
         elif self.use_kernel and self.capacity >= self._kernel_min_n:
+            # bucketed dispatch (the routing hot path's shape policy):
+            # the store's capacity axis is already static, and padding
+            # the query axis to its power-of-two bucket means a stream
+            # of varying batch sizes replays ONE cached executable per
+            # bucket instead of recompiling per batch size
             from repro.kernels import ops as K
-            vals, idx = K.router_topk(self.vecs, vecs, 1, mask=mask,
-                                      min_score=self.threshold)
+            vals, idx = K.router_topk_bucketed(self.vecs, vecs, 1,
+                                               mask=mask,
+                                               min_score=self.threshold)
             sim = np.asarray(vals)[:, 0]
             slot = np.asarray(idx)[:, 0].astype(np.int64)
             hit = np.isfinite(sim)

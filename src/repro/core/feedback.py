@@ -57,6 +57,13 @@ class FeedbackStore:
             self._log.append(FeedbackEvent(c, model, thumbs_up))
             return self._bias[key]
 
+    def has_bias(self) -> bool:
+        """True when ANY (cluster, model) bias is recorded — the fused
+        routing path skips shipping a (B, N) zero matrix to the device
+        while the store is empty (the common cold-start state)."""
+        with self._lock:
+            return bool(self._bias)
+
     def bias(self, sig: TaskSignature, models: Sequence[str]) -> np.ndarray:
         c = cluster_of(sig)
         with self._lock:

@@ -15,10 +15,8 @@ feedback loop.  Three operating modes:
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from collections import Counter
-from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -32,25 +30,73 @@ from repro.core.preferences import (TaskSignature, UserPreferences, resolve,
 from repro.core.routing import RoutingDecision, RoutingEngine
 
 
-@dataclass
 class RoutedQuery:
-    text: str
-    sig: TaskSignature
-    decision: RoutingDecision
-    analyzer_s: float
-    route_s: float
-    response: Any = None
-    observed: bool = False            # reward already fed to the bandit
-    # semantic-cache write-back key, stamped by the serving engine at
-    # submit time (a cache MISS that later validates well becomes the
-    # entry that answers the next near-duplicate).  ``cache_written``
-    # tracks write-back separately from ``observed``: an auto-observing
-    # reward_fn marks queries observed BEFORE the engine stamps keys,
-    # and that must not starve the cache of the post-generation
-    # write-back
-    cache_key: Optional[np.ndarray] = None
-    cache_fp: int = 0
-    cache_written: bool = False
+    """One routed query (text, signature, decision, timings).
+
+    The decision is either eager (single-query ``route``) or LAZY: a
+    query routed through the array-first ``route_many_batch`` path
+    carries only a (RoutingBatch, row) handle, and the full
+    ``RoutingDecision`` object (candidate tuple list, stage_sizes
+    dict) materializes on first ``.decision`` access.  The hot-path
+    facts — ``model``, ``fallback_kind``, ``task_vector`` — read the
+    batch arrays directly, so serving/telemetry/observe never pay the
+    Python object loop for queries nobody inspects in depth.
+
+    ``cache_key``/``cache_fp`` are the semantic-cache write-back key,
+    stamped by the serving engine at submit time (a cache MISS that
+    later validates well becomes the entry that answers the next
+    near-duplicate).  ``cache_written`` tracks write-back separately
+    from ``observed``: an auto-observing reward_fn marks queries
+    observed BEFORE the engine stamps keys, and that must not starve
+    the cache of the post-generation write-back.
+    """
+    __slots__ = ("text", "sig", "analyzer_s", "route_s", "response",
+                 "observed", "cache_key", "cache_fp", "cache_written",
+                 "_decision", "_batch", "_bidx")
+
+    def __init__(self, text: str, sig: TaskSignature,
+                 decision: Optional[RoutingDecision] = None,
+                 analyzer_s: float = 0.0, route_s: float = 0.0,
+                 response: Any = None, batch=None, batch_idx: int = -1):
+        assert decision is not None or batch is not None
+        self.text = text
+        self.sig = sig
+        self.analyzer_s = analyzer_s
+        self.route_s = route_s
+        self.response = response
+        self.observed = False         # reward already fed to the bandit
+        self.cache_key: Optional[np.ndarray] = None
+        self.cache_fp = 0
+        self.cache_written = False
+        self._decision = decision
+        self._batch = batch
+        self._bidx = batch_idx
+
+    @property
+    def decision(self) -> RoutingDecision:
+        """Full decision object (materialized lazily, memoized)."""
+        if self._decision is None:
+            self._decision = self._batch.decision(self._bidx)
+        return self._decision
+
+    @property
+    def model(self) -> str:
+        """Chosen model name without materializing the decision."""
+        if self._decision is not None:
+            return self._decision.model
+        return self._batch.model(self._bidx)
+
+    @property
+    def fallback_kind(self) -> str:
+        if self._decision is not None:
+            return self._decision.fallback_kind
+        return self._batch.fallback_kind(self._bidx)
+
+    @property
+    def task_vector(self) -> np.ndarray:
+        if self._decision is not None:
+            return self._decision.task_vector
+        return self._batch.task_vectors[self._bidx]
 
 
 class OptiRoute:
@@ -74,7 +120,8 @@ class OptiRoute:
                                     feedback_weight=feedback_weight,
                                     adaptive=adaptive,
                                     adaptive_weight=adaptive_weight,
-                                    load=load, load_weight=load_weight)
+                                    load=load, load_weight=load_weight,
+                                    telemetry=telemetry)
         self.merger = (ModelMerger(mres, merge_threshold)
                        if merge_threshold is not None else None)
         self.batch_sample_frac = batch_sample_frac
@@ -113,7 +160,7 @@ class OptiRoute:
 
     def _record(self, rq: RoutedQuery) -> None:
         if self.telemetry is not None:
-            entry = self.mres.entry(rq.decision.model)
+            entry = self.mres.entry(rq.model)
             self.telemetry.record_decision(
                 rq, sim_cost=entry.raw_metrics.get("cost_per_mtok", 0.0))
 
@@ -124,8 +171,12 @@ class OptiRoute:
         Unlike ``route_batch`` (sample-and-aggregate, one decision for
         the whole batch), every query gets its own signature and
         decision; the analyzer runs as one batched forward and the
-        Routing Engine as one ``route_many`` call.  ``prefs`` is a
-        single prefs/profile (broadcast) or one per query.  Reported
+        Routing Engine as ONE fused ``route_many_batch`` device
+        dispatch (per-query decisions materialize lazily off the
+        returned ``RoutingBatch``; a merger — which needs eager scores
+        and may grow the catalog mid-pass — or a non-fusable engine
+        config takes the staged object path).  ``prefs`` is a single
+        prefs/profile (broadcast) or one per query.  Reported
         per-query timings are the batch cost amortized over B.
         """
         if len(texts) == 0:
@@ -138,24 +189,35 @@ class OptiRoute:
         t0 = time.time()
         sigs = self.analyzer.analyze_batch(list(texts))
         t1 = time.time()
-        decisions = self.engine.route_many(prefs_list, sigs)
-        if self.merger is not None:
-            low = [i for i, d in enumerate(decisions)
-                   if d.score < self.merger.score_threshold]
-            grew = False
-            for i in low:
-                if self.merger.maybe_merge(prefs_list[i], sigs[i],
-                                           decisions[i].score) is not None:
-                    grew = True
-            if grew:                   # re-route low scorers in one pass
-                redo = self.engine.route_many(
-                    [prefs_list[i] for i in low], [sigs[i] for i in low])
-                for j, i in enumerate(low):
-                    decisions[i] = redo[j]
-        t2 = time.time()
-        out = [RoutedQuery(text=t, sig=s, decision=d,
-                           analyzer_s=(t1 - t0) / B, route_s=(t2 - t1) / B)
-               for t, s, d in zip(texts, sigs, decisions)]
+        if self.merger is None and self.engine._fused_ok():
+            batch = self.engine.route_many_batch(prefs_list, sigs)
+            t2 = time.time()
+            out = [RoutedQuery(text=t, sig=s, batch=batch, batch_idx=i,
+                               analyzer_s=(t1 - t0) / B,
+                               route_s=(t2 - t1) / B)
+                   for i, (t, s) in enumerate(zip(texts, sigs))]
+        else:
+            decisions = self.engine.route_many(prefs_list, sigs)
+            if self.merger is not None:
+                low = [i for i, d in enumerate(decisions)
+                       if d.score < self.merger.score_threshold]
+                grew = False
+                for i in low:
+                    if self.merger.maybe_merge(
+                            prefs_list[i], sigs[i],
+                            decisions[i].score) is not None:
+                        grew = True
+                if grew:               # re-route low scorers in one pass
+                    redo = self.engine.route_many(
+                        [prefs_list[i] for i in low],
+                        [sigs[i] for i in low])
+                    for j, i in enumerate(low):
+                        decisions[i] = redo[j]
+            t2 = time.time()
+            out = [RoutedQuery(text=t, sig=s, decision=d,
+                               analyzer_s=(t1 - t0) / B,
+                               route_s=(t2 - t1) / B)
+                   for t, s, d in zip(texts, sigs, decisions)]
         for rq in out:
             self._record(rq)
         if self.adaptive is not None and self.reward_fn is not None:
@@ -219,7 +281,7 @@ class OptiRoute:
         for i in cacheable:
             rq = rqs[i]
             kind = self.cache.put(rq.cache_key, rq.cache_fp,
-                                  rq.decision.model, rq.response,
+                                  rq.model, rq.response,
                                   qual[i], sig=rq.sig)
             rq.cache_written = True
             if self.telemetry is not None:
@@ -238,8 +300,8 @@ class OptiRoute:
             np.asarray(extra_penalty, np.float32)[fresh]
         names = self.mres.snapshot()[1]
         col = {m: j for j, m in enumerate(names)}
-        midx = np.array([col[rq.decision.model] for rq in sub])
-        X = np.stack([rq.decision.task_vector for rq in sub])
+        midx = np.array([col[rq.model] for rq in sub])
+        X = np.stack([rq.task_vector for rq in sub])
         if self.reward_shaper is not None:
             rewards = self.reward_shaper.shape(sub_q, midx, sub_ep)
         else:
@@ -289,12 +351,12 @@ class OptiRoute:
               max_new: int = 8) -> RoutedQuery:
         """Route + execute on the selected entry's runner."""
         rq = self.route(text, prefs)
-        entry = self.mres.entry(rq.decision.model)
+        entry = self.mres.entry(rq.model)
         if entry.runner is not None:
             rq.response = entry.runner.generate(tokens, max_new=max_new)
         return rq
 
     def give_feedback(self, rq: RoutedQuery, thumbs_up: bool) -> float:
         if self.telemetry is not None:
-            self.telemetry.attach_thumbs(rq.decision.model, thumbs_up)
-        return self.feedback.record(rq.sig, rq.decision.model, thumbs_up)
+            self.telemetry.attach_thumbs(rq.model, thumbs_up)
+        return self.feedback.record(rq.sig, rq.model, thumbs_up)

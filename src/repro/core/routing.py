@@ -79,7 +79,11 @@ def _topk_two_level(ms: np.ndarray, k: int, chunk: int = 128
     extraction rounds only touches (B,) chunk maxima plus one (B, chunk)
     gather — O(B (N + k * chunk)) instead of introselect's per-row
     partition, and measurably faster for small k at serving batch
-    sizes.  MUTATES ``ms``.  Returns (vals, idx) with vals descending.
+    sizes.  Operates on an internal copy: the caller's matrix is never
+    mutated (the extraction rounds pop winners in place, so without
+    the copy the mutation would leak — and only on chunk-aligned N,
+    since the pad branch already copied).  Returns (vals, idx) with
+    vals descending.
     """
     B, n = ms.shape
     C = -(-n // chunk)
@@ -87,6 +91,8 @@ def _topk_two_level(ms: np.ndarray, k: int, chunk: int = 128
         padded = np.full((B, C * chunk), -np.inf, np.float32)
         padded[:, :n] = ms
         ms = padded
+    else:
+        ms = ms.copy()
     m3 = ms.reshape(B, C, chunk)
     mx = m3.max(axis=2)                              # (B, C)
     rows = np.arange(B)
@@ -116,6 +122,89 @@ class RoutingDecision:
     stage_sizes: Dict[str, int] = field(default_factory=dict)
 
 
+@dataclass
+class RoutingBatch:
+    """Struct-of-arrays result of one fused routing step.
+
+    The serving hot path only needs model indices and fallback stages;
+    building B ``RoutingDecision`` objects (candidate tuple lists,
+    stage_sizes dicts) per batch was the single largest cost of the
+    staged path.  ``RoutingBatch`` keeps everything as packed arrays
+    and materializes a ``RoutingDecision`` lazily per row, memoized —
+    callers that never touch ``decision(b)`` never pay the Python
+    object loop.
+
+    ``stage`` indexes ``FALLBACK_LADDER`` (0 = primary fused-kNN hit).
+    ``cand_idx``/``cand_score`` are ranked by blended score, padded
+    with (-1, -inf) beyond each row's live candidates.
+    """
+    names: List[str]                  # catalog names (shared, not copied)
+    model_idx: np.ndarray             # (B,) i32 chosen catalog rows
+    score: np.ndarray                 # (B,) f32 blended winning scores
+    stage: np.ndarray                 # (B,) i32 FALLBACK_LADDER index
+    similarity: np.ndarray            # (B,) f32 winner's cosine similarity
+    task_vectors: np.ndarray          # (B, M) f32
+    cand_idx: np.ndarray              # (B, R) i32 ranked candidates
+    cand_score: np.ndarray            # (B, R) f32 ranked blended scores
+    n_filtered: np.ndarray            # (B,) i32 finite kNN hits (0 = fb)
+    n_candidates: np.ndarray          # (B,) i32 per-row candidate count
+    catalog_n: int
+    knn_k: int
+    r: int                            # max candidates per decision
+    _cache: Optional[List[Optional[RoutingDecision]]] = field(
+        default=None, repr=False, compare=False)
+
+    def __post_init__(self):
+        if self._cache is None:
+            self._cache = [None] * int(self.model_idx.shape[0])
+
+    def __len__(self) -> int:
+        return int(self.model_idx.shape[0])
+
+    def model(self, b: int) -> str:
+        return self.names[int(self.model_idx[b])]
+
+    def models(self) -> List[str]:
+        """Chosen model names, no decision materialization."""
+        return [self.names[j] for j in self.model_idx.tolist()]
+
+    def fallback_kind(self, b: int) -> str:
+        return FALLBACK_LADDER[int(self.stage[b])]
+
+    def decision(self, b: int) -> RoutingDecision:
+        """Materialize (and memoize) row ``b`` as a RoutingDecision."""
+        d = self._cache[b]
+        if d is not None:
+            return d
+        stage = int(self.stage[b])
+        cs = self.cand_score[b]
+        fin = np.isfinite(cs)
+        cand = [(self.names[j], s) for j, s in
+                zip(self.cand_idx[b][fin].tolist(), cs[fin].tolist())]
+        nf = int(self.n_filtered[b])
+        if stage == 0:
+            sizes = {"catalog": self.catalog_n, "knn": self.knn_k,
+                     "filtered": nf, "candidates": nf}
+        else:
+            sizes = {"catalog": self.catalog_n, "knn": self.knn_k,
+                     "filtered": 0,
+                     "candidates": int(self.n_candidates[b])}
+        d = RoutingDecision(
+            model=self.names[int(self.model_idx[b])],
+            score=float(self.score[b]),
+            task_vector=self.task_vectors[b],
+            similarity=float(self.similarity[b]),
+            candidates=cand[:self.r],
+            used_fallback=stage > 0,
+            fallback_kind=FALLBACK_LADDER[stage],
+            stage_sizes=sizes)
+        self._cache[b] = d
+        return d
+
+    def decisions(self) -> List[RoutingDecision]:
+        return [self.decision(b) for b in range(len(self))]
+
+
 class RoutingEngine:
     def __init__(self, mres: MRES, feedback=None, *, knn_k: int = 8,
                  confidence_threshold: float = 0.3,
@@ -123,7 +212,8 @@ class RoutingEngine:
                  use_kernel: bool = False, kernel_min_n: int = 1024,
                  use_complexity: bool = True,
                  adaptive=None, adaptive_weight: float = 0.0,
-                 load=None, load_weight: float = 0.0):
+                 load=None, load_weight: float = 0.0,
+                 fused: bool = True, telemetry=None):
         self.mres = mres
         self.feedback = feedback
         self.knn_k = knn_k
@@ -133,6 +223,13 @@ class RoutingEngine:
         self._kernel_min_n = kernel_min_n
         self._kernel_fn = None
         self.use_complexity = use_complexity   # ablation knob
+        # fused single-dispatch hot path (kernels/route_step): one
+        # jitted device program per routed batch; ``fused=False`` (or a
+        # non-fusable config, e.g. a Thompson-sampling bandit) falls
+        # back to the staged numpy reference path
+        self.fused = fused
+        # dispatch/compile counter sink (Telemetry), set by OptiRoute
+        self.telemetry = telemetry
         # online-learning layer (repro.adaptive): learned per-model
         # reward estimates blended into the static scores at weight
         # ``adaptive_weight`` (the preference knob; 0 = static routing)
@@ -214,15 +311,9 @@ class RoutingEngine:
         return self.route_many([prefs_or_profile], [sig])[0]
 
     # ------------------------------------------------------------------
-    def route_many(self, prefs_batch, sigs: Sequence[TaskSignature]
-                   ) -> List[RoutingDecision]:
-        """Route a batch of queries in one vectorized pass.
-
-        ``prefs_batch`` is either one prefs/profile/dict applied to every
-        query or a sequence of them (one per signature).  Returns one
-        ``RoutingDecision`` per signature, decision-identical to calling
-        ``route`` per query.
-        """
+    def _prepare_batch(self, prefs_batch, sigs: Sequence[TaskSignature]):
+        """Validate + vectorize one batch for either routing backend:
+        (sigs, prefs_list, W (B, M), T (B, M), ti (B,), di (B,))."""
         sigs = [s.validate() for s in sigs]
         B = len(sigs)
         prefs_list = resolve_batch(prefs_batch, B)
@@ -230,27 +321,150 @@ class RoutingEngine:
             raise ValueError(f"prefs batch size {len(prefs_list)} != "
                              f"signature batch size {B}")
         if B == 0:
-            return []
-        snap = self.mres.snapshot()
-        emb, names, tt_matrix, dm_matrix, gmask, _ = snap
-        n = emb.shape[0]
-        if n == 0:
-            raise RuntimeError("empty MRES catalog")
-
+            return sigs, prefs_list, None, None, None, None
         # (B, M) scoring weights and task vectors (one vector() pass)
         W = np.stack([p.vector() for p in prefs_list])
         T = W.copy()
         if getattr(self, "use_complexity", True):
             cx = np.array([s.complexity for s in sigs], np.float32)
             T[:, _ACC] = np.maximum(T[:, _ACC], cx)
-
         # per-query hierarchical filter rows of the cached mask matrices
         # (the all-True row when the analyzer is not confident)
         thr = self.confidence_threshold
         ti = np.array([_TT_IDX[s.task_type] if s.confidence >= thr
-                       else _TT_ANY for s in sigs])
+                       else _TT_ANY for s in sigs], np.int32)
         di = np.array([_DM_IDX[s.domain] if s.confidence >= thr
-                       else _DM_ANY for s in sigs])
+                       else _DM_ANY for s in sigs], np.int32)
+        return sigs, prefs_list, W, T, ti, di
+
+    def _fused_ok(self) -> bool:
+        """Whether the fused single-dispatch path can serve this
+        configuration (a Thompson bandit samples host-side RNG per
+        score, which cannot live inside a cached device program)."""
+        if not getattr(self, "fused", True):
+            return False
+        if self.adaptive is not None and self.adaptive_weight != 0.0:
+            return (getattr(self.adaptive, "policy", "") == "linucb"
+                    and hasattr(self.adaptive, "posterior"))
+        return True
+
+    # ------------------------------------------------------------------
+    def route_many(self, prefs_batch, sigs: Sequence[TaskSignature]
+                   ) -> List[RoutingDecision]:
+        """Route a batch of queries in one vectorized pass.
+
+        ``prefs_batch`` is either one prefs/profile/dict applied to every
+        query or a sequence of them (one per signature).  Returns one
+        ``RoutingDecision`` per signature, decision-identical to calling
+        ``route`` per query.  The hot path is ``route_many_batch`` (one
+        fused device program, array-first); this wrapper materializes
+        its decisions for callers that want the object view.
+        """
+        if not self._fused_ok():
+            return self.route_many_staged(prefs_batch, sigs)
+        return self.route_many_batch(prefs_batch, sigs).decisions()
+
+    # ------------------------------------------------------------------
+    def route_many_batch(self, prefs_batch,
+                         sigs: Sequence[TaskSignature]) -> RoutingBatch:
+        """Array-first batched routing: ONE fused device program.
+
+        The whole per-batch pipeline — mask-fused kNN, feedback bias,
+        bandit LinUCB estimates, load penalty, the final score blend,
+        the candidate argmax, and the staged fallback ladder as masked
+        re-scores — executes as a single jitted ``ops.route_step``
+        dispatch behind recompile-free shape buckets (power-of-two Q,
+        128-aligned catalog).  Returns a ``RoutingBatch`` whose
+        per-query ``RoutingDecision`` objects materialize lazily.
+        """
+        if not self._fused_ok():
+            # fail loud: silently scoring a Thompson-sampling bandit
+            # with the program's deterministic LinUCB formula (or
+            # bypassing an explicit fused=False) would change routing
+            # behavior for direct callers of this method
+            raise ValueError(
+                "engine configuration is not fusable (Thompson-policy "
+                "bandit or fused=False) — use route_many / "
+                "route_many_staged")
+        sigs, prefs_list, W, T, ti, di = self._prepare_batch(
+            prefs_batch, sigs)
+        B = len(sigs)
+        if B == 0:
+            # an empty batch is fine even against an empty catalog —
+            # same contract as the staged path, which returns before
+            # ever snapshotting (nothing to route, nothing to refresh)
+            z = np.zeros(0, np.int32)
+            zf = np.zeros(0, np.float32)
+            return RoutingBatch(
+                names=[], model_idx=z, score=zf, stage=z,
+                similarity=zf, task_vectors=np.zeros((0, len(METRICS)),
+                                                     np.float32),
+                cand_idx=np.zeros((0, 1), np.int32),
+                cand_score=np.zeros((0, 1), np.float32),
+                n_filtered=z, n_candidates=z,
+                catalog_n=0, knn_k=0, r=0)
+        snap = self.mres.snapshot()
+        emb, names, tt_matrix, dm_matrix, gmask, _ = snap
+        n = emb.shape[0]
+        if n == 0:
+            raise RuntimeError("empty MRES catalog")
+        k = min(self.knn_k, n)
+        r = min(max(5, k), n)
+
+        theta = ainv = None
+        alpha = ad_w = 0.0
+        if self.adaptive is not None and self.adaptive_weight != 0.0:
+            self.adaptive.ensure(n)
+            theta, ainv = self.adaptive.posterior()
+            alpha = float(self.adaptive.alpha)
+            ad_w = self.adaptive_weight
+        lpen = None
+        if self.load is not None and self.load_weight != 0.0:
+            self.load.ensure(n)
+            # slice to the catalog: a tracker pre-sized for growth may
+            # carry more arms than this snapshot has rows
+            lpen = self.load_weight * self.load.penalty()[:n]
+        fb = None
+        if self.feedback is not None and self.feedback.has_bias():
+            fb = self.feedback.bias_batch(sigs, names)
+
+        from repro.kernels import ops as K
+        out = K.route_step(
+            emb, tt_matrix, dm_matrix, gmask, T, W, ti, di, k=k, r=r,
+            fb=fb, fb_weight=self.feedback_weight,
+            theta=theta, ainv=ainv, alpha=alpha, ad_weight=ad_w,
+            lpen=lpen,
+            use_pallas=self.use_kernel and n >= self._kernel_min_n,
+            telemetry=self.telemetry)
+        return RoutingBatch(
+            names=names, model_idx=out["model_idx"],
+            score=out["score"], stage=out["stage"],
+            similarity=out["similarity"], task_vectors=T,
+            cand_idx=out["cand_idx"], cand_score=out["cand_score"],
+            n_filtered=out["n_filtered"],
+            n_candidates=out["n_candidates"],
+            catalog_n=n, knn_k=k, r=r)
+
+    # ------------------------------------------------------------------
+    def route_many_staged(self, prefs_batch, sigs: Sequence[TaskSignature]
+                          ) -> List[RoutingDecision]:
+        """Staged numpy reference path (pre-fusion semantics).
+
+        Kept as the semantic oracle the fused ``route_many_batch`` is
+        pinned against (and as the serving path for configurations the
+        fused program cannot express, e.g. Thompson sampling).  Several
+        numpy/device passes per batch + eager decision objects.
+        """
+        sigs, prefs_list, W, T, ti, di = self._prepare_batch(
+            prefs_batch, sigs)
+        B = len(sigs)
+        if B == 0:
+            return []
+        snap = self.mres.snapshot()
+        emb, names, tt_matrix, dm_matrix, gmask, _ = snap
+        n = emb.shape[0]
+        if n == 0:
+            raise RuntimeError("empty MRES catalog")
 
         # adaptive layer: learned reward estimates join the blend below,
         # restricted to the kNN candidate columns (cost ~ k, not N)

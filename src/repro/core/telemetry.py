@@ -35,6 +35,8 @@ class Telemetry:
         self._events: List[RouteEvent] = []
         self._admissions: Dict[str, int] = {}
         self._cache: Dict[str, int] = {}
+        self._route_step: Dict[str, int] = {"dispatches": 0,
+                                            "compiles": 0}
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------
@@ -43,14 +45,35 @@ class Telemetry:
             self._events.append(event)
 
     def record_decision(self, rq, *, sim_cost: float = 0.0) -> None:
-        """Convenience: log an orchestrator RoutedQuery."""
+        """Convenience: log an orchestrator RoutedQuery.
+
+        Reads the cheap array-backed accessors (``rq.model`` /
+        ``rq.fallback_kind``) rather than ``rq.decision`` so logging a
+        lazily-materialized batch row does not force the full decision
+        object into existence."""
         self.record(RouteEvent(
-            ts=time.time(), model=rq.decision.model,
+            ts=time.time(), model=rq.model,
             task_type=rq.sig.task_type, domain=rq.sig.domain,
             complexity=rq.sig.complexity,
-            fallback=rq.decision.fallback_kind,
+            fallback=rq.fallback_kind,
             analyzer_s=rq.analyzer_s, route_s=rq.route_s,
             sim_cost=sim_cost))
+
+    def record_route_step(self, *, dispatches: int = 0,
+                          compiles: int = 0) -> None:
+        """Count fused routing-step device activity: ``dispatches`` is
+        one per routed batch; ``compiles`` counts jit-cache misses of
+        the bucketed executable (see ``kernels/ops.route_step``).  A
+        healthy steady-state serving stream shows dispatches growing
+        linearly and compiles FLAT after the warmup batches."""
+        with self._lock:
+            self._route_step["dispatches"] += int(dispatches)
+            self._route_step["compiles"] += int(compiles)
+
+    def route_step_stats(self) -> Dict[str, int]:
+        """Fused-dispatch counters: {dispatches, compiles}."""
+        with self._lock:
+            return dict(self._route_step)
 
     def record_admission(self, kind: str, count: int = 1) -> None:
         """Count one deadline-admission outcome (``admitted`` /
@@ -158,6 +181,7 @@ class Telemetry:
             "fallback_funnel": self.fallback_funnel(),
             "admission_funnel": self.admission_funnel(),
             "cache_funnel": self.cache_funnel(),
+            "route_step": self.route_step_stats(),
             "latency": self.latency_percentiles(),
             "per_model": self.per_model(),
         }

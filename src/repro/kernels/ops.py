@@ -18,6 +18,7 @@ import numpy as np
 from repro.kernels.bandit_update import bandit_update_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.moe_gating import moe_gating_pallas
+from repro.kernels.route_step import route_step_jit
 from repro.kernels.router_topk import router_topk_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
@@ -42,6 +43,164 @@ def _clamp_blk_n(blk_n: int, n: int) -> int:
     """Shrink a catalog block size toward n (rounded up to a power of
     two, floored at one 128 lane) so tiny catalogs are one block."""
     return min(blk_n, max(1 << max(n - 1, 1).bit_length(), 128))
+
+
+# ----------------------------------------------------------------------
+# shape buckets: recompile-free serving-time dispatch
+# ----------------------------------------------------------------------
+# A jitted program compiles once per input-shape tuple, and a serving
+# stream carries every batch size between 1 and the engine's cap.  The
+# bucket policy trades a bounded amount of padded compute for a
+# bounded, quickly-warmed set of executables:
+#   * query axis  -> power-of-two buckets (floor 8): log2(Bmax) shapes
+#     cover every batch size, and the pad waste is < 2x;
+#   * catalog axis -> the catalog's 128-lane-aligned capacity: batch
+#     size never touches it, so it only recompiles when the catalog
+#     itself grows (model registration / merging).
+# Bucket-padded rows/columns are masked out of every stage, never
+# selected, and sliced off the outputs.
+
+def q_bucket(q: int) -> int:
+    """Power-of-two query-axis bucket (floor 8)."""
+    return max(8, 1 << max(q - 1, 1).bit_length())
+
+
+def n_bucket(n: int) -> int:
+    """128-lane-aligned catalog-axis capacity (floor 128)."""
+    return max(128, -(-n // LANE) * LANE)
+
+
+# dispatch/compile counters for the bucketed serving-path ops —
+# ``route_step`` also reports each call's (1 dispatch, compile delta)
+# straight to an attached Telemetry, so concurrent routing threads
+# never misattribute each other's activity.  A "dispatch" counts one
+# fused-op invocation (each issues exactly one jitted call); the
+# compile counter is the real recompilation guard.
+import threading as _threading
+
+_STATS = {"route_step_dispatches": 0, "route_step_compiles": 0,
+          "topk_dispatches": 0, "topk_compiles": 0}
+_STATS_LOCK = _threading.Lock()
+
+
+def route_step_stats() -> dict:
+    """Copy of the bucketed-dispatch counters."""
+    with _STATS_LOCK:
+        return dict(_STATS)
+
+
+def reset_route_step_stats() -> None:
+    with _STATS_LOCK:
+        for k in _STATS:
+            _STATS[k] = 0
+
+
+def _bump(kind: str, compiles: int) -> None:
+    with _STATS_LOCK:
+        _STATS[f"{kind}_dispatches"] += 1
+        _STATS[f"{kind}_compiles"] += compiles
+
+
+_DUMMIES = None
+
+
+def _dummies():
+    """Cached device-resident placeholders for inactive blend terms
+    ((1, 1) matrix, (1,) vector) — rebuilding + re-transferring them
+    per dispatch is measurable on the serving hot path."""
+    global _DUMMIES
+    if _DUMMIES is None:
+        _DUMMIES = (jnp.zeros((1, 1), jnp.float32),
+                    jnp.zeros((1,), jnp.float32))
+    return _DUMMIES
+
+
+_WARNED_NO_CACHE_SIZE = False
+
+
+def _count_compiles(jit_fn, call):
+    """Run ``call()`` and return (result, new jit-cache entries).
+
+    Compile detection reads the jit function's private ``_cache_size``
+    — on a JAX build without it, warn ONCE that the recompile counters
+    (and every zero-recompile guard built on them) are blind, instead
+    of letting them read as a vacuous flat 0.
+    """
+    global _WARNED_NO_CACHE_SIZE
+    try:
+        before = jit_fn._cache_size()
+    except AttributeError:              # pragma: no cover - older jax
+        before = None
+        if not _WARNED_NO_CACHE_SIZE:
+            _WARNED_NO_CACHE_SIZE = True
+            import warnings
+            warnings.warn(
+                "jit._cache_size() unavailable on this JAX version — "
+                "route_step compile counters (and zero-recompile "
+                "guards) cannot observe recompilation",
+                RuntimeWarning, stacklevel=2)
+    out = call()
+    delta = 0
+    if before is not None:
+        try:
+            delta = max(0, jit_fn._cache_size() - before)
+        except AttributeError:          # pragma: no cover
+            pass
+    return out, delta
+
+
+# the padded catalog constants are identical across every batch routed
+# against one MRES snapshot; cache them keyed on the snapshot's
+# embedding-array identity (holding a reference keeps the id stable)
+_CATALOG_CACHE: "list" = []             # [(key, emb_ref, packed), ...]
+_CATALOG_CACHE_MAX = 4
+
+
+def _catalog_pack(emb: np.ndarray, tt: np.ndarray, dm: np.ndarray,
+                  gmask: np.ndarray, np_pad: int):
+    """Padded device constants for ``route_step``:
+    (e2 ``[embn | emb]``, masks_table, counts_table).
+
+    The hierarchical-filter structure is flattened into ONE stacked
+    boolean table — every task-type x domain combination (the fused
+    kNN masks), then the fallback rungs: the task-type-only rows, the
+    generalist row, and the live-catalog row — plus its per-row
+    population counts, so the device program resolves per-query masks
+    AND every ladder count as O(B) row gathers instead of (B, N)
+    boolean algebra.  Padded catalog columns are False in every row.
+    The catalog block pairs the unit-normalized rows (cosine kNN) with
+    the raw normalized-metric rows (score blend) so the per-batch
+    program does no catalog-side normalization work.
+    """
+    key = (id(emb), np_pad)
+    with _STATS_LOCK:
+        for k2, _, packed in _CATALOG_CACHE:
+            if k2 == key:
+                return packed
+    n = emb.shape[0]
+    pad = np_pad - n
+    ttp = np.pad(np.asarray(tt, bool), ((0, 0), (0, pad)))
+    dmp = np.pad(np.asarray(dm, bool), ((0, 0), (0, pad)))
+    combo = (ttp[:, None, :] & dmp[None, :, :]).reshape(-1, np_pad)
+    live = np.zeros(np_pad, bool)
+    live[:n] = True
+    table = np.vstack([combo, ttp,
+                       np.pad(np.asarray(gmask, bool), (0, pad))[None],
+                       live[None]])
+    embf = emb.astype(np.float32)
+    embn = embf / (np.linalg.norm(embf, axis=1, keepdims=True) + 1e-9)
+    e2 = np.pad(np.concatenate([embn, embf], axis=1),
+                ((0, pad), (0, 0)))
+    packed = (
+        jnp.asarray(e2),
+        jnp.asarray(table),
+        jnp.asarray(table.sum(axis=1).astype(np.int32)),
+    )
+    with _STATS_LOCK:
+        _CATALOG_CACHE.append((key, emb, packed))
+        if len(_CATALOG_CACHE) > _CATALOG_CACHE_MAX:
+            _CATALOG_CACHE.pop(0)
+    return packed
 
 
 # ----------------------------------------------------------------------
@@ -97,6 +256,120 @@ def router_topk(emb, queries, k: int,
         min_score=float("-inf") if min_score is None else float(min_score),
         interpret=interp)
     return vals[:Q], idx[:Q]
+
+
+def router_topk_bucketed(emb, queries, k: int,
+                         mask: Optional[np.ndarray] = None,
+                         min_score: Optional[float] = None, *,
+                         interpret: Optional[bool] = None
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """``router_topk`` behind the serving-time shape buckets.
+
+    Pads the query axis up to its power-of-two bucket (a 2-D mask pads
+    with all-False rows, so bucket rows surface as -inf and are sliced
+    off) before dispatching, so a stream of varying batch sizes against
+    a fixed store (e.g. the semantic cache's packed capacity) re-uses
+    one compiled executable per bucket instead of recompiling per
+    batch size.  Counts land in ``route_step_stats`` under ``topk_*``.
+    """
+    queries = np.asarray(queries, np.float32)
+    Q = queries.shape[0]
+    qp = q_bucket(Q)
+    if qp != Q:
+        queries = np.pad(queries, ((0, qp - Q), (0, 0)))
+        if mask is not None and np.ndim(mask) == 2:
+            mask = np.pad(np.asarray(mask), ((0, qp - Q), (0, 0)))
+    (vals, idx), compiles = _count_compiles(
+        router_topk_pallas,
+        lambda: router_topk(emb, queries, k, mask=mask,
+                            min_score=min_score, interpret=interpret))
+    _bump("topk", compiles)
+    return vals[:Q], idx[:Q]
+
+
+# ----------------------------------------------------------------------
+# route_step: the fused single-dispatch routing hot path
+# ----------------------------------------------------------------------
+
+def route_step(emb, tt_matrix, dm_matrix, gmask, T, W, ti, di, *,
+               k: int, r: int,
+               fb: Optional[np.ndarray] = None, fb_weight: float = 0.0,
+               theta: Optional[np.ndarray] = None,
+               ainv: Optional[np.ndarray] = None, alpha: float = 0.0,
+               ad_weight: float = 0.0,
+               lpen: Optional[np.ndarray] = None,
+               use_pallas: bool = False,
+               interpret: Optional[bool] = None,
+               telemetry=None) -> dict:
+    """One fused routing step per batch (see ``kernels/route_step.py``).
+
+    Pads the batch to its power-of-two Q bucket and the catalog to its
+    128-aligned capacity (``q_bucket``/``n_bucket``), dispatches ONE
+    jitted device program, and slices the (B,)/(B, R) outputs back.
+    ``fb``/``theta``+``ainv``/``lpen`` are optional blend terms —
+    absent terms cost nothing on device (their presence is a static
+    flag, so toggling one recompiles once and then stays cached).
+    Dispatch/compile counts land in ``route_step_stats``; an attached
+    ``telemetry`` additionally receives THIS call's (1 dispatch,
+    compile delta) directly, so concurrent callers never read each
+    other's deltas out of the shared counters.
+    """
+    emb = np.asarray(emb, np.float32)
+    T = np.asarray(T, np.float32)
+    W = np.asarray(W, np.float32)
+    n, m = emb.shape
+    B = T.shape[0]
+    assert 1 <= k <= n and 1 <= r <= n, (k, r, n)
+    qp, np_pad = q_bucket(B), n_bucket(n)
+    interp = default_interpret() if interpret is None else interpret
+    blk_n = 512 if np_pad % 512 == 0 else LANE
+    n_tt = np.asarray(tt_matrix).shape[0]
+    n_dm = np.asarray(dm_matrix).shape[0]
+
+    e2_d, masks_d, counts_d = _catalog_pack(
+        emb, tt_matrix, dm_matrix, gmask, np_pad)
+    qpad, npad = qp - B, np_pad - n
+    ti = np.asarray(ti, np.int32)
+    di = np.asarray(di, np.int32)
+    Tp, Wp, tip, dip = T, W, ti, di
+    if qpad:
+        Tp = np.pad(T, ((0, qpad), (0, 0)))
+        Wp = np.pad(W, ((0, qpad), (0, 0)))
+        # bucket rows get the trailing all-True mask rows: they compute
+        # a harmless top-k over live columns and are sliced off below
+        tip = np.pad(ti, (0, qpad), constant_values=n_tt - 1)
+        dip = np.pad(di, (0, qpad), constant_values=n_dm - 1)
+
+    dummy1 = _dummies()
+    has_fb = fb is not None
+    fbp = np.pad(np.asarray(fb, np.float32),
+                 ((0, qpad), (0, npad))) if has_fb else dummy1[0]
+    has_ad = theta is not None
+    if has_ad:
+        th = np.asarray(theta, np.float32)[:n]
+        ai = np.asarray(ainv, np.float32)[:n].reshape(n, -1)
+        thp = np.pad(th, ((0, npad), (0, 0)))
+        aip = np.pad(ai, ((0, npad), (0, 0)))
+    else:
+        thp = aip = dummy1[0]
+    has_load = lpen is not None
+    lpp = np.pad(np.asarray(lpen, np.float32)[:n], (0, npad)) \
+        if has_load else dummy1[1]
+    params = np.array([fb_weight, ad_weight, alpha], np.float32)
+
+    out, compiles = _count_compiles(
+        route_step_jit,
+        lambda: route_step_jit(
+            e2_d, masks_d, counts_d, Tp, Wp, tip, dip, fbp, thp, aip,
+            lpp, params, k=k, r=r, n_tt=n_tt, n_dm=n_dm,
+            has_fb=has_fb, has_ad=has_ad, has_load=has_load,
+            use_pallas=use_pallas, blk_q=8, blk_n=blk_n,
+            interpret=interp))
+    _bump("route_step", compiles)
+    if telemetry is not None:
+        telemetry.record_route_step(dispatches=1, compiles=compiles)
+    out = jax.device_get(out)           # ONE host transfer for all
+    return {key: v[:B] for key, v in out.items()}
 
 
 # ----------------------------------------------------------------------

@@ -62,6 +62,112 @@ def router_topk(emb: jnp.ndarray, queries: jnp.ndarray, k: int,
 
 
 # ----------------------------------------------------------------------
+# route_step: fused kNN + score blend + candidate argmax + fallback
+# ----------------------------------------------------------------------
+
+def route_step(emb: jnp.ndarray, tt_matrix: jnp.ndarray,
+               dm_matrix: jnp.ndarray, gmask: jnp.ndarray,
+               T: jnp.ndarray, W: jnp.ndarray, ti: jnp.ndarray,
+               di: jnp.ndarray, k: int, r: int, *,
+               fb: Optional[jnp.ndarray] = None,
+               fb_weight: float = 0.0,
+               theta: Optional[jnp.ndarray] = None,
+               ainv: Optional[jnp.ndarray] = None,
+               alpha: float = 0.0, ad_weight: float = 0.0,
+               lpen: Optional[jnp.ndarray] = None) -> dict:
+    """Semantic ground truth of the fused routing step (unpadded).
+
+    emb (N, M) normalized metric embeddings; tt_matrix/dm_matrix
+    (stages, N) stacked boolean filter masks; gmask (N,) generalist
+    mask; T (B, M) kNN task vectors; W (B, M) scoring weights; ti/di
+    (B,) per-query mask-row indices; fb (B, N) feedback bias; theta
+    (N, Dc) / ainv (N, Dc, Dc) LinUCB posterior over contexts
+    [T, 1]; lpen (N,) pre-scaled load penalty.
+
+    The blend is ONE (B, N) score matrix — W @ emb^T + fb_weight * fb
+    + ad_weight * (mean + alpha * sqrt(var)) - lpen — shared by the
+    candidate scoring and every fallback rung.  Stage 0 picks the best
+    blended score among the k mask-fused cosine-kNN candidates; rows
+    whose kNN found nothing walk the ladder widened-kNN ->
+    task-type-only -> generalist -> any as masked re-scores of the
+    same blend.  Returns the dict described in
+    ``kernels/route_step.route_step_jit`` with true (B,)/(B, R)
+    shapes, R = max(k, r).
+    """
+    emb = emb.astype(jnp.float32)
+    T = T.astype(jnp.float32)
+    W = W.astype(jnp.float32)
+    B, N = T.shape[0], emb.shape[0]
+    embn = emb / (jnp.linalg.norm(emb, axis=1, keepdims=True) + 1e-9)
+    qn = T / (jnp.linalg.norm(T, axis=1, keepdims=True) + 1e-9)
+    m_tt = tt_matrix[ti]
+    m1 = m_tt & dm_matrix[di]
+
+    vals, idx = jax.lax.top_k(
+        jnp.where(m1, qn @ embn.T, -jnp.inf), min(k, N))
+    finite = vals > -jnp.inf
+    idx_safe = jnp.where(finite, idx, 0)
+    has_primary = finite.any(axis=1)
+    n_filtered = finite.sum(axis=1).astype(jnp.int32)
+
+    blend = W @ emb.T
+    if fb is not None:
+        blend = blend + fb_weight * fb.astype(jnp.float32)
+    if theta is not None:
+        ctx = jnp.concatenate([T, jnp.ones((B, 1), jnp.float32)], axis=1)
+        var = jnp.einsum("qd,nde,qe->qn", ctx,
+                         ainv.astype(jnp.float32), ctx)
+        ucb = ctx @ theta.astype(jnp.float32).T \
+            + alpha * jnp.sqrt(jnp.maximum(var, 0.0))
+        blend = blend + ad_weight * ucb
+    if lpen is not None:
+        blend = blend - lpen.astype(jnp.float32)[None, :]
+
+    R = min(max(k, r), N)
+    cscore = jnp.where(finite,
+                       jnp.take_along_axis(blend, idx_safe, axis=1),
+                       -jnp.inf)
+    cs, pos = jax.lax.top_k(cscore, cscore.shape[1])
+    cidx = jnp.take_along_axis(idx_safe, pos, axis=1)
+    sim_p = jnp.take_along_axis(vals, pos[:, :1], axis=1)[:, 0]
+    pad = R - cs.shape[1]
+    if pad > 0:
+        cs = jnp.pad(cs, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        cidx = jnp.pad(cidx, ((0, 0), (0, pad)))
+
+    m_gen = jnp.broadcast_to(gmask[None, :], (B, N))
+    m_any = jnp.ones((B, N), bool)
+    counts = jnp.stack([m1.sum(1), m_tt.sum(1), m_gen.sum(1),
+                        m_any.sum(1)], axis=1).astype(jnp.int32)
+    stage_sel = jnp.argmax(counts > 0, axis=1)
+    msel = jnp.where((stage_sel == 0)[:, None], m1,
+                     jnp.where((stage_sel == 1)[:, None], m_tt,
+                               jnp.where((stage_sel == 2)[:, None],
+                                         m_gen, m_any)))
+    fv, fidx = jax.lax.top_k(jnp.where(msel, blend, -jnp.inf), R)
+    sim_f = (qn * embn[fidx[:, 0]]).sum(axis=1)
+    ncand_f = jnp.take_along_axis(counts, stage_sel[:, None], axis=1)[:, 0]
+
+    hp = has_primary[:, None]
+    cand_score = jnp.where(hp, cs[:, :R], fv)
+    cand_idx = jnp.where(hp, cidx[:, :R], fidx).astype(jnp.int32)
+    cand_idx = jnp.where(jnp.isfinite(cand_score), cand_idx, -1)
+    return {
+        "model_idx": cand_idx[:, 0],
+        "score": cand_score[:, 0],
+        "stage": jnp.where(has_primary, 0, stage_sel + 1
+                           ).astype(jnp.int32),
+        "similarity": jnp.where(has_primary, sim_p, sim_f),
+        "cand_idx": cand_idx,
+        "cand_score": cand_score,
+        "n_filtered": jnp.where(has_primary, n_filtered, 0
+                                ).astype(jnp.int32),
+        "n_candidates": jnp.where(has_primary, n_filtered, ncand_f
+                                  ).astype(jnp.int32),
+    }
+
+
+# ----------------------------------------------------------------------
 # bandit_update: batched rank-1 posterior updates + UCB scoring matmul
 # ----------------------------------------------------------------------
 

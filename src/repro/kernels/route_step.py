@@ -1,0 +1,267 @@
+"""Fused single-dispatch routing step: the whole per-batch hot path of
+``RoutingEngine.route_many`` as ONE jitted device program.
+
+The staged path costs several device/numpy passes per batch — kNN
+top-k, candidate gathers, feedback/bandit/load blends, argsort, plus
+host-side per-row fallback retries.  ``route_step`` collapses all of it
+into a single program (one device dispatch per routed batch):
+
+  1. mask lookup        — the catalog's hierarchical-filter structure
+     is pre-flattened by ``ops.py`` into ONE stacked mask table
+     (task-type x domain combinations, then the fallback rungs:
+     task-type-only rows, the generalist row, the live-catalog row)
+     with a per-row population-count table.  Per-query masks and every
+     ladder count are O(B) gathers — no (B, N) boolean reductions;
+  2. score blend        — ONE (B, N) blend of user-weighted metric
+     scores + feedback bias + LinUCB bandit estimates (mean + alpha *
+     sqrt(x^T Ainv x), both as matmuls over the flattened rank-1
+     layout) - load penalty;
+  3. fused top-k        — primary rows rank the mask-fused COSINE
+     similarities (the kNN), rows whose filter count is zero rank the
+     BLEND under their first non-empty fallback rung instead: both
+     live in one per-row-selected matrix, so a single ``top_k`` serves
+     the kNN and the whole fallback ladder (masked re-scores inside
+     the program, not host-side retries);
+  4. candidate argmax   — primary candidates gather their blended
+     scores from (2) and re-rank in-program (``top_k`` over k lanes),
+     so the winner, its score and the ranked candidate list come out
+     as arrays.
+
+On TPU (``use_pallas``) the kNN stage runs the Pallas ``router_topk``
+kernel (blocked MXU matmul + the shared ``block_topk``/``merge_topk``
+carry update) and the fallback re-score is its own ``top_k`` — the
+structure XLA:TPU prefers; the single-matrix form above is the
+XLA:CPU-friendly lowering the test suite exercises.
+
+``jax.lax.optimization_barrier`` pins the big (B, N) intermediates:
+without it XLA:CPU duplicates cheap producers (mask gathers, where
+chains) into every consumer and the program slows ~20x.
+
+All shapes are static per (Q bucket, padded catalog) pair — ``ops.py``
+pads Q up to power-of-two buckets and N to the catalog's 128-aligned
+capacity, so steady-state serving re-dispatches one cached executable
+regardless of batch size.  Padded query rows compute garbage and are
+sliced off; padded catalog columns are False in every mask row.
+
+The pure-jnp semantic ground truth lives in ``kernels/ref.py``
+(``ref.route_step``); parity is pinned by tests against both the
+oracle and the staged numpy path in ``core/routing.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.router_topk import router_topk_pallas
+
+NEG_INF = float("-inf")
+
+
+def _hier_topk(z, kk: int, chunk: int = 32):
+    """Exact top-kk of (B, Np) via chunk-max pruning.
+
+    XLA:CPU's TopK emitter costs ~O(elements) at a poor rate, while a
+    plain max reduction is fast.  So: per-chunk maxima (one cheap
+    reduce), keep the kk chunks with the largest maxima — any true
+    top-kk element must live in one of them, since each excluded
+    chunk's max is dominated by kk other chunks' maxima — gather those
+    chunks, and run the expensive TopK over kk*chunk columns instead
+    of Np.  Values are exact; index tie-breaks can differ from
+    ``lax.top_k`` when equal values straddle chunk boundaries (same
+    contract as the Pallas kernel's block merge).
+    """
+    B, Np = z.shape
+    C = Np // chunk
+    if kk > chunk or C <= kk or Np % chunk:
+        return jax.lax.top_k(z, kk)
+    m3 = z.reshape(B, C, chunk)
+    mx = m3.max(axis=2)                                   # (B, C)
+    _, cj = jax.lax.top_k(mx, kk)                         # (B, kk)
+    sub = m3[jnp.arange(B)[:, None], cj]                  # (B, kk, chunk)
+    v, p = jax.lax.top_k(sub.reshape(B, kk * chunk), kk)
+    gi = jnp.take_along_axis(cj, p // chunk, axis=1) * chunk \
+        + p % chunk
+    return v, gi
+
+
+def _knn_pallas(qn, embn, m1, k, blk_q, blk_n, interpret):
+    """Mask-fused kNN through the Pallas kernel (TPU path).
+
+    Shapes arrive bucket-padded (Q % blk_q == 0, N % blk_n == 0); only
+    the feature axis still needs its 128-lane pad here.
+    """
+    Q, D = qn.shape
+    N = embn.shape[0]
+    dpad = (-D) % 128
+    qnp = jnp.pad(qn, ((0, 0), (0, dpad)))
+    ewp = jnp.pad(embn, ((0, 0), (0, dpad)))
+    bias = jnp.zeros((1, N), jnp.float32)
+    return router_topk_pallas(qnp, ewp, m1.astype(jnp.float32), bias, k,
+                              blk_q=blk_q, blk_n=blk_n,
+                              interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "r", "n_tt", "n_dm", "has_fb",
+                     "has_ad", "has_load", "use_pallas", "blk_q",
+                     "blk_n", "interpret"))
+def route_step_jit(e2, masks_table, counts_table, T, W, ti, di, fb,
+                   theta, ainv_flat, lpen, params, *, k: int, r: int,
+                   n_tt: int, n_dm: int, has_fb: bool,
+                   has_ad: bool, has_load: bool, use_pallas: bool,
+                   blk_q: int, blk_n: int, interpret: bool):
+    """One fused routing step over a bucket-padded batch.
+
+    The live catalog size is deliberately NOT a parameter: liveness is
+    fully encoded in the mask table (padded columns are False in every
+    row, including the live-catalog rung) and the zeroed e2 pad rows,
+    so catalog growth within one 128-padded capacity bucket reuses the
+    cached executable without recompiling.
+
+    e2 (Np, 2M) catalog block ``[embn | emb]`` — unit-normalized rows
+    for the cosine kNN next to the raw normalized-metric rows for the
+    score blend, precomputed once per catalog by ``ops.py`` (zero rows
+    beyond the live count); masks_table (n_tt*n_dm + n_tt + 2, Np) stacked
+    boolean mask rows — every task-type x domain combination, then the
+    fallback rungs (task-type-only rows, the generalist row, the
+    live-catalog row); counts_table (rows,) i32 per-row population
+    counts; T (Qp, M) kNN task vectors; W (Qp, M) scoring weights;
+    ti/di (Qp,) per-query filter row indices; fb (Qp, Np) feedback
+    bias (dummy when ``has_fb`` False); theta (Np, Dc) / ainv_flat
+    (Np, Dc*Dc) bandit posterior (LinUCB; dummies when ``has_ad``
+    False); lpen (Np,) pre-scaled load penalty (dummy when
+    ``has_load`` False); params (3,) f32 traced scalars
+    [feedback_weight, adaptive_weight, alpha].
+
+    Returns a dict of (Qp,)/(Qp, R) arrays with R = max(k, r):
+    ``model_idx``, ``score``, ``stage`` (0 = primary, 1.. = fallback
+    ladder rung), ``similarity``, ``cand_idx``/``cand_score`` (ranked,
+    -1/-inf padded), ``n_filtered``, ``n_candidates``.
+    """
+    bar = jax.lax.optimization_barrier
+    Np, M2 = e2.shape
+    M = M2 // 2
+    embn = e2[:, :M]
+    emb = e2[:, M:]
+    B = T.shape[0]
+    n_combo = n_tt * n_dm
+    R = max(k, r)
+
+    qn = T / (jnp.linalg.norm(T, axis=1, keepdims=True) + 1e-9)
+
+    # per-query mask rows and ladder counts: O(B) table gathers
+    ci = ti * n_dm + di                                   # combined row
+    c_wide = counts_table[ci]
+    has_primary = c_wide > 0
+    c_tt = counts_table[n_combo + ti]
+    c_gen = counts_table[n_combo + n_tt]
+    # first non-empty fallback rung (widened-kNN == the fused mask, so
+    # it is empty for every fallback row by construction): task-type-
+    # only -> generalist -> any(live)
+    fi = jnp.where(c_tt > 0, n_combo + ti,
+                   jnp.where(c_gen > 0, n_combo + n_tt,
+                             n_combo + n_tt + 1))
+    stage_f = jnp.where(c_tt > 0, 2,
+                        jnp.where(c_gen > 0, 3, 4)).astype(jnp.int32)
+
+    # ---- extra blend terms (feedback / bandit / load), one (B, N)
+    # matrix when any is active; None costs nothing ----
+    extras = None
+    if has_fb:
+        extras = params[0] * fb
+    if has_ad:
+        ctx = jnp.concatenate(
+            [T, jnp.ones((B, 1), jnp.float32)], axis=1)   # (B, Dc)
+        mean = ctx @ theta.T                              # (B, Np)
+        xx = (ctx[:, :, None] * ctx[:, None, :]).reshape(B, -1)
+        var = xx @ ainv_flat.T                            # (B, Np)
+        ucb = params[1] * (
+            mean + params[2] * jnp.sqrt(jnp.maximum(var, 0.0)))
+        extras = ucb if extras is None else extras + ucb
+    if has_load:
+        lrow = jnp.broadcast_to(-lpen[None, :], (B, Np))
+        extras = lrow if extras is None else extras - lpen[None, :]
+    if extras is not None:
+        extras = bar(extras)
+
+    hp = has_primary[:, None]
+    kmask = (jnp.arange(R) < k)[None, :]
+    if use_pallas:
+        # TPU structure: Pallas kernel for the kNN, one jnp top_k for
+        # the fallback re-score (primary rows masked out of it)
+        m1 = bar(masks_table[ci])
+        vals, idx = _knn_pallas(qn, embn, m1, k, blk_q, blk_n,
+                                interpret)
+        finite = vals > NEG_INF
+        idx_safe = jnp.where(finite, idx, 0)
+        cscore = jnp.einsum("bm,brm->br", W, emb[idx_safe])
+        if extras is not None:
+            cscore = cscore + jnp.take_along_axis(extras, idx_safe,
+                                                  axis=1)
+        cscore = jnp.where(finite, cscore, NEG_INF)
+        cs, pos = jax.lax.top_k(cscore, k)
+        cidx = jnp.take_along_axis(idx_safe, pos, axis=1)
+        sim_p = jnp.take_along_axis(vals, pos[:, :1], axis=1)[:, 0]
+        if R > k:
+            cs = jnp.pad(cs, ((0, 0), (0, R - k)),
+                         constant_values=NEG_INF)
+            cidx = jnp.pad(cidx, ((0, 0), (0, R - k)))
+        msel = masks_table[fi]
+        blend_f = W @ emb.T
+        if extras is not None:
+            blend_f = blend_f + extras
+        zf = jnp.where(hp, NEG_INF,
+                       jnp.where(msel, blend_f, NEG_INF))
+        fv, fidx = jax.lax.top_k(zf, R)
+        fidx_safe = jnp.where(fv > NEG_INF, fidx, 0)
+        sim_f = (qn * embn[fidx_safe[:, 0]]).sum(axis=1)
+        cand_score = jnp.where(hp, cs, fv)
+        cand_idx = jnp.where(hp, cidx, fidx_safe).astype(jnp.int32)
+    else:
+        # XLA:CPU structure: primary rows rank masked COSINE (the
+        # kNN), fallback rows rank their rung-masked BLEND — the two
+        # matrices are disjoint per row, so ONE block-diagonal matmul
+        # ([qn | 0] or [0 | W] against [embn | emb]) and ONE top_k
+        # serve the kNN and the whole fallback ladder together
+        zi = jnp.where(has_primary, ci, fi)
+        zmask = bar(masks_table[zi])                      # (B, Np)
+        xsel = jnp.concatenate(
+            [jnp.where(hp, qn, 0.0), jnp.where(hp, 0.0, W)], axis=1)
+        zsrc = xsel @ e2.T                                # (B, Np)
+        if extras is not None:      # blend terms join fallback rows
+            zsrc = zsrc + jnp.where(hp, 0.0, 1.0) * extras
+        z = bar(jnp.where(zmask, zsrc, NEG_INF))
+        vals, idx = bar(_hier_topk(z, R))
+        finite = vals > NEG_INF
+        idx_safe = jnp.where(finite, idx, 0)
+        # primary candidates = the first k cosine-ranked positions;
+        # their blended scores (computed at the k columns only, like
+        # the staged gather) re-rank them in-program
+        cscore = jnp.einsum("bm,brm->br", W, emb[idx_safe])
+        if extras is not None:
+            cscore = cscore + jnp.take_along_axis(extras, idx_safe,
+                                                  axis=1)
+        cscore = jnp.where(finite & kmask, cscore, NEG_INF)
+        cs, pos = jax.lax.top_k(cscore, R)
+        cidx = jnp.take_along_axis(idx_safe, pos, axis=1)
+        sim_p = jnp.take_along_axis(vals, pos[:, :1], axis=1)[:, 0]
+        sim_f = (qn * embn[idx_safe[:, 0]]).sum(axis=1)
+        cand_score = jnp.where(hp, cs, vals)
+        cand_idx = jnp.where(hp, cidx, idx_safe).astype(jnp.int32)
+
+    cand_idx = jnp.where(jnp.isfinite(cand_score), cand_idx, -1)
+    nf = jnp.minimum(c_wide, k).astype(jnp.int32)
+    return {
+        "model_idx": cand_idx[:, 0],
+        "score": cand_score[:, 0],
+        "stage": jnp.where(has_primary, 0, stage_f).astype(jnp.int32),
+        "similarity": jnp.where(has_primary, sim_p, sim_f),
+        "cand_idx": cand_idx,
+        "cand_score": cand_score,
+        "n_filtered": jnp.where(has_primary, nf, 0).astype(jnp.int32),
+        "n_candidates": jnp.where(has_primary, nf,
+                                  counts_table[fi]).astype(jnp.int32),
+    }

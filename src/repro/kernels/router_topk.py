@@ -8,7 +8,15 @@ in VMEM scratch across catalog blocks:
   grid = (Q/BLK_Q, N/BLK_N), catalog axis innermost (sequential)
   per step:  scores = q_blk @ emb_blk^T            (MXU, 128-aligned)
              scores = where(mask_blk, scores, -inf) (VPU)
-             merge into running (vals, idx) top-k   (k-pass argmax)
+             block top-k, then a sorted pairwise merge with the
+             running (vals, idx) carry
+
+The carry update is a per-block ``jax.lax.top_k`` followed by a
+bitonic merge of two sorted (Q, k) carries — O(k log k) per grid step
+on top of the block top-k, replacing the earlier k-pass argmax +
+one-hot scatter over a concatenated (Q, k + BLK_N) buffer
+(O(k * (k + BLK_N)) per step).  ``merge_topk``/``block_topk`` are
+shared with the fused ``route_step`` kernel.
 
 Dense blocked scan beats ANN graph traversal on TPU because pointer
 chasing is hostile to the systolic pipeline while a 100k x 128 catalog
@@ -32,18 +40,64 @@ from repro.kernels.compat import CompilerParams
 NEG_INF = float("-inf")
 
 
-def _select_topk(vals, idx, k):
-    """k-pass argmax top-k along axis 1. vals (Q, M) f32, idx (Q, M) i32."""
-    out_v = []
-    out_i = []
-    for _ in range(k):
-        am = jnp.argmax(vals, axis=1)                       # (Q,)
-        rows = jnp.arange(vals.shape[0])
-        out_v.append(vals[rows, am])
-        out_i.append(idx[rows, am])
-        onehot = jax.nn.one_hot(am, vals.shape[1], dtype=jnp.bool_)
-        vals = jnp.where(onehot, NEG_INF, vals)
-    return jnp.stack(out_v, axis=1), jnp.stack(out_i, axis=1)
+def _pow2_ge(x: int) -> int:
+    """Smallest power of two >= x (x >= 1)."""
+    return 1 << max(x - 1, 1).bit_length() if x > 1 else 1
+
+
+def block_topk(scores, col_idx, k: int):
+    """Top-k of one (Q, M) score block, descending, padded out to k.
+
+    ``col_idx`` (Q, M) carries the global catalog column of each score.
+    When the block is narrower than k (k > BLK_N) the tail pads with
+    (-inf, -1).  Returns (vals (Q, k), idx (Q, k)) sorted descending.
+    """
+    m = scores.shape[1]
+    kk = min(k, m)
+    v, p = jax.lax.top_k(scores, kk)
+    i = jnp.take_along_axis(col_idx, p, axis=1)
+    if kk < k:
+        v = jnp.pad(v, ((0, 0), (0, k - kk)), constant_values=NEG_INF)
+        i = jnp.pad(i, ((0, 0), (0, k - kk)), constant_values=-1)
+    return v, i
+
+
+def merge_topk(av, ai, bv, bi):
+    """Top-k of the union of two sorted-descending (Q, k) carries.
+
+    One bitonic compare-exchange of ``a`` against ``b`` reversed keeps
+    the k largest of the 2k (a bitonic sequence), then log2(k) merge
+    stages sort it descending — O(k log k) total, vs O(k^2 + k*BLK_N)
+    for re-running a k-pass argmax over the concatenation.  Indices
+    ride along through every exchange; ties keep the ``a`` (carry)
+    element, and within the sort both sides of an equal pair keep
+    their own payload, so no element is ever duplicated or dropped.
+    Inputs need not be power-of-two wide (padded internally).
+    """
+    k = av.shape[1]
+    kp = _pow2_ge(k)
+    if kp != k:
+        pad = ((0, 0), (0, kp - k))
+        av = jnp.pad(av, pad, constant_values=NEG_INF)
+        ai = jnp.pad(ai, pad, constant_values=-1)
+        bv = jnp.pad(bv, pad, constant_values=NEG_INF)
+        bi = jnp.pad(bi, pad, constant_values=-1)
+    rv, ri = bv[:, ::-1], bi[:, ::-1]
+    keep_a = av >= rv
+    v = jnp.where(keep_a, av, rv)
+    i = jnp.where(keep_a, ai, ri)
+    # v is bitonic; sort descending with a standard bitonic merger
+    s = kp // 2
+    while s >= 1:
+        pos = jnp.arange(kp)
+        pv = v[:, pos ^ s]
+        pi = i[:, pos ^ s]
+        first = ((pos & s) == 0)[None, :]       # lower index of each pair
+        keep = jnp.where(first, v >= pv, v <= pv)
+        v = jnp.where(keep, v, pv)
+        i = jnp.where(keep, i, pi)
+        s //= 2
+    return v[:, :k], i[:, :k]
 
 
 def _router_topk_kernel(q_ref, emb_ref, mask_ref, bias_ref, vals_ref,
@@ -76,9 +130,8 @@ def _router_topk_kernel(q_ref, emb_ref, mask_ref, bias_ref, vals_ref,
     col0 = jn * blk_n
     col_idx = col0 + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
 
-    comb_v = jnp.concatenate([sv_ref[...], scores], axis=1)
-    comb_i = jnp.concatenate([si_ref[...], col_idx], axis=1)
-    new_v, new_i = _select_topk(comb_v, comb_i, k)
+    bv, bi = block_topk(scores, col_idx, k)
+    new_v, new_i = merge_topk(sv_ref[...], si_ref[...], bv, bi)
     sv_ref[...] = new_v
     si_ref[...] = new_i
 

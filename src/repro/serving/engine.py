@@ -39,7 +39,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.orchestrator import OptiRoute
-from repro.core.preferences import TaskSignature
+from repro.core.preferences import TaskSignature, resolve_batch
 from repro.data.tokenizer import HashTokenizer
 from repro.serving.load import LoadTracker, plan_admission
 
@@ -119,12 +119,19 @@ class ServingEngine:
         keys = fps = None
         miss = list(range(len(reqs)))
         tel = self.router.telemetry
+        # featurize each request's preferences EXACTLY once: the
+        # resolved UserPreferences instances (with their memoized
+        # weight vectors) feed the cache key vectors, the fingerprint
+        # gates, AND — threaded through to route_all — the routing
+        # task vectors, instead of re-resolving (and for dict prefs,
+        # re-vectorizing) per consumer
+        prefs_res = resolve_batch([r.prefs for r in reqs], len(reqs))
         if self.cache is not None:
-            keys = self.cache.keys_for([r.prefs for r in reqs],
+            keys = self.cache.keys_for(prefs_res,
                                        [r.text for r in reqs])
             # the decoding budget joins the exact-match gate: a 4-token
             # answer must never serve a 256-token request
-            fps = self.cache.fingerprints([r.prefs for r in reqs],
+            fps = self.cache.fingerprints(prefs_res,
                                           extras=[r.max_new for r in reqs])
             # entries materialize under the store's lock: a concurrent
             # eviction can never invalidate a hit between lookup and use
@@ -147,6 +154,7 @@ class ServingEngine:
         if miss:
             served = self._route_and_serve(
                 [reqs[i] for i in miss],
+                [prefs_res[i] for i in miss],
                 None if keys is None else keys[miss],
                 None if fps is None else fps[miss])
             for j, i in enumerate(miss):
@@ -154,12 +162,14 @@ class ServingEngine:
         self.log.extend(out)            # type: ignore[arg-type]
         return out                      # type: ignore[return-value]
 
-    def _route_and_serve(self, requests: Sequence[Request],
+    def _route_and_serve(self, requests: Sequence[Request], prefs_res,
                          cache_keys, cache_fps) -> List[Response]:
         """Route -> admit -> generate for the cache-miss rows (or the
-        whole batch when no cache is attached)."""
+        whole batch when no cache is attached).  ``prefs_res`` carries
+        the already-resolved per-request preferences so routing reuses
+        the submit-time featurization."""
         routed_q = self.router.route_all([r.text for r in requests],
-                                         [r.prefs for r in requests])
+                                         prefs_res)
         if cache_keys is not None:
             # stamp each routed query with its write-back key: when the
             # outcome later validates well, observe() turns this miss
@@ -183,15 +193,25 @@ class ServingEngine:
         pending = np.zeros(self.load.n_models, np.int64) \
             if self.load is not None else None
         for r, rq in routed:
-            model, kind, est = plan_admission(rq.decision, self.load, col,
-                                              r.deadline_ms,
-                                              pending=pending)
+            if self.load is None:
+                plans.append((rq.model, "admitted", 0.0))
+                continue
+            if r.deadline_ms is None:
+                # no SLO: admitted as routed, but the placement still
+                # counts toward what LATER requests in this batch see.
+                # rq.model reads the batch arrays — the full decision
+                # object only materializes for deadline-carrying
+                # requests, whose candidate lists admission ranks over
+                model, kind, est = rq.model, "admitted", 0.0
+            else:
+                model, kind, est = plan_admission(rq.decision, self.load,
+                                                  col, r.deadline_ms,
+                                                  pending=pending)
+                if tel is not None:
+                    tel.record_admission(kind)
             plans.append((model, kind, est))
             if pending is not None and kind != "shed":
                 pending[col[model]] += 1
-            if tel is not None and r.deadline_ms is not None \
-                    and self.load is not None:
-                tel.record_admission(kind)
         groups: Dict[Tuple[str, int], List[int]] = defaultdict(list)
         for i, (r, _) in enumerate(routed):
             model, kind, _ = plans[i]
@@ -229,7 +249,7 @@ class ServingEngine:
                     tokens=None if gen is None else gen.tokens[j],
                     sim_latency_s=0.0 if gen is None else per_req_s,
                     route_s=rq.route_s, analyzer_s=rq.analyzer_s,
-                    fallback=rq.decision.fallback_kind,
+                    fallback=rq.fallback_kind,
                     rq=rq if plans[i][1] == "admitted" else None,
                     admission=plans[i][1], est_latency_s=plans[i][2])
         for i, (r, rq) in enumerate(routed):   # shed: fail fast, no slot
@@ -238,7 +258,7 @@ class ServingEngine:
                     request=r, model=plans[i][0], sig=rq.sig, tokens=None,
                     sim_latency_s=0.0, route_s=rq.route_s,
                     analyzer_s=rq.analyzer_s,
-                    fallback=rq.decision.fallback_kind, rq=None,
+                    fallback=rq.fallback_kind, rq=None,
                     admission="shed", est_latency_s=plans[i][2])
         return out                      # type: ignore[return-value]
 

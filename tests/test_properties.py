@@ -203,3 +203,96 @@ def test_route_many_equals_single_route(mres, batch):
         assert d_b.score == pytest.approx(d_1.score, abs=1e-5)
         assert [n for n, _ in d_b.candidates] == \
             [n for n, _ in d_1.candidates]
+
+
+# ----------------------------------------------------------------------
+# fused single-dispatch route step vs the staged reference path
+# ----------------------------------------------------------------------
+
+@st.composite
+def blend_layers(draw, n_models):
+    """Optional feedback / bandit / load layers with random state and
+    weights (None = layer off)."""
+    from repro.adaptive.bandit import LinearBandit
+    from repro.serving.load import LoadTracker
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    fb = None
+    if draw(st.booleans()):
+        fb = FeedbackStore()
+        for _ in range(draw(st.integers(1, 25))):
+            fb.record(TaskSignature(
+                task_type=str(rng.choice(TASK_TYPES)),
+                domain=str(rng.choice(DOMAINS)),
+                complexity=float(rng.random())),
+                f"m{int(rng.integers(n_models))}",
+                bool(rng.random() < 0.5))
+    ad = None
+    ad_w = 0.0
+    if draw(st.booleans()):
+        ad = LinearBandit(n_models, seed=int(rng.integers(2**31)))
+        X = rng.random((12, len(METRICS))).astype(np.float32)
+        ad.update(X, rng.integers(0, n_models, 12),
+                  rng.random(12).astype(np.float32))
+        ad_w = draw(st.floats(0.1, 2.0))
+    load = None
+    load_w = 0.0
+    if draw(st.booleans()):
+        load = LoadTracker(n_models)
+        for j in rng.integers(0, n_models, 4 * n_models):
+            load.admit(int(j))
+        load_w = draw(st.floats(0.1, 2.0))
+    return fb, ad, ad_w, load, load_w
+
+
+def _knn_is_tie_free(mres, eng, sig, tvec, tol=1e-5) -> bool:
+    """True when the query's mask-fused cosine values are pairwise
+    distinct by > tol — only then is the kNN candidate SET uniquely
+    determined, and the fused/staged backends comparable strictly.
+    (With exact ties — e.g. duplicate catalog rows — the candidate
+    choice is legitimately backend-defined.)"""
+    from repro.core.routing import cosine_sim
+    emb = mres.embeddings()
+    conf = sig.confidence >= eng.confidence_threshold
+    ttm, dmm = mres.masks(sig.task_type if conf else None,
+                          sig.domain if conf else None)
+    vals = np.sort(cosine_sim(emb, tvec)[ttm & dmm])
+    return vals.size < 2 or np.min(np.diff(vals)) > tol
+
+
+@FAST
+@given(catalogs(max_n=14), query_batches(max_b=6),
+       st.data())
+def test_fused_route_step_equals_staged_path(mres, batch, data):
+    """(viii) fused-vs-staged differential: the single-dispatch fused
+    ``route_many_batch`` (one jitted device program: kNN + feedback +
+    bandit + load blend + candidate argmax + in-program fallback
+    ladder) matches the staged numpy reference on model choice,
+    fallback stage, stage sizes and (to fp tolerance) scores — across
+    random catalogs, masks, blend weights, and B=1 vs batched."""
+    prefs, sigs = batch
+    fb, ad, ad_w, load, load_w = data.draw(
+        blend_layers(len(mres.entries)))
+    eng = RoutingEngine(mres, fb, knn_k=4,
+                        adaptive=ad, adaptive_weight=ad_w,
+                        load=load, load_weight=load_w)
+    fused = eng.route_many_batch(prefs, sigs).decisions()
+    staged = eng.route_many_staged(prefs, sigs)
+    b1 = [eng.route_many_batch([p], [s]).decision(0)
+          for p, s in zip(prefs, sigs)]
+    for a, b, c, sig in zip(fused, staged, b1, sigs):
+        # structural facts are backend-independent, ties or not
+        assert a.fallback_kind == b.fallback_kind == c.fallback_kind
+        assert a.stage_sizes == b.stage_sizes == c.stage_sizes
+        assert len(a.candidates) == len(b.candidates)
+        if not _knn_is_tie_free(mres, eng, sig, b.task_vector):
+            continue        # candidate set not uniquely determined
+        assert a.score == pytest.approx(b.score, abs=1e-4)
+        assert c.score == pytest.approx(b.score, abs=1e-4)
+        if a.model != b.model or c.model != b.model:
+            # fp tie at the top of the blend: both picks must score
+            # within tolerance of the staged best
+            a_in_b = dict(b.candidates).get(a.model)
+            assert a_in_b is not None
+            assert a_in_b == pytest.approx(b.score, abs=1e-4)
+        for (_, sa), (_, sb) in zip(a.candidates, b.candidates):
+            assert sa == pytest.approx(sb, abs=1e-4)

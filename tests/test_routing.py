@@ -47,8 +47,14 @@ def test_update_metrics_refreshes_all_caches(small_mres):
     sig = TaskSignature(task_type="chat", domain="general", complexity=0.3)
     d1 = eng.route("accuracy-first", sig)
     assert d1.model == "big-accurate"
-    # tank the old winner's accuracy; the cheap model becomes the leader
-    small_mres.update_metrics("big-accurate", accuracy=0.01)
+    # tank the old winner's accuracy AND helpfulness; the cheap model
+    # becomes the leader.  (With accuracy alone the two blended scores
+    # land on an EXACT real-arithmetic tie — 1.0+0.2+0.1+0.3+0.3 vs
+    # 0.7+0.6+0.3+0.3 — whose winner would be decided by f32 rounding
+    # order, i.e. by the scoring backend, not by the catalog refresh
+    # this test is about.)
+    small_mres.update_metrics("big-accurate", accuracy=0.01,
+                              helpfulness=0.4)
     small_mres.update_metrics("tiny-fast", accuracy=0.99)
     snap2 = small_mres.snapshot()
     assert snap2[0] is not snap1[0]           # embeddings rebuilt
