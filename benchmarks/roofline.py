@@ -105,6 +105,93 @@ def markdown_table(rows: List[Dict]) -> str:
     return hdr + "\n".join(lines) + "\n"
 
 
+# ----------------------------------------------------------------------
+# mega-catalog route-step projection (kernels/route_step.py)
+# ----------------------------------------------------------------------
+#
+# Analytic bytes-moved / FLOP model of the fused routing step at
+# 100k-1M catalog entries, independent of the dry-run artifacts above.
+# The catalog block e2 is (N, 2*N_METRICS): fp32 streams 64 B/row,
+# the int8 path 16 B/row + an (N, 2) f32 scale pair, and each row
+# carries one fused-mask byte.  Distinct IVF cells touched across a
+# batch are streamed from HBM once (queries probing the same cell hit
+# cache), so the pruned path's bytes scale with expected cell
+# coverage, not raw rows-scanned.  These projections GATE the 100k+
+# catalog sweep in benchmarks/router_scale.py: the sweep only runs if
+# the model predicts >=2x for int8 on an accelerator and >=3x for
+# int8+IVF at N=1M.
+
+ROUTE_F = 16                 # e2 cols: 2 * N_METRICS (embn | emb halves)
+ROUTE_SCALE_BYTES = 8        # e2s: (N, 2) f32 per-row scales (int8 path)
+ROUTE_CARRY = 32             # per-shard sorted carry lanes in the merge
+
+
+def route_step_projection(n: int, *, batch: int = 64, quant: bool = False,
+                          nprobe: int = 0, n_cells: int = 0,
+                          devices: int = 1) -> Dict:
+    """Roofline terms (seconds) for ONE fused route-step dispatch.
+
+    ``nprobe > 0`` selects the two-level IVF pruned path
+    (``n_cells`` defaults to ~sqrt(N), matching
+    ``mres.default_n_cells``); ``devices > 1`` shards the catalog axis
+    and adds the cross-shard top-k merge-tree all-gather.
+    """
+    import math
+    elem = 1 if quant else 4
+    row_bytes = ROUTE_F * elem + (ROUTE_SCALE_BYTES if quant else 0) + 1
+    if nprobe:
+        c = n_cells or max(1, round(math.sqrt(n)))
+        cap = -(-n // c)
+        scanned = min(n, nprobe * cap)              # rows per query
+        frac = 1.0 - (1.0 - min(1.0, nprobe / c)) ** batch
+        bytes_hbm = frac * n * row_bytes + c * ROUTE_F * elem
+        flops = 2.0 * batch * (scanned + c) * ROUTE_F
+    else:
+        scanned = n
+        bytes_hbm = float(n) * row_bytes
+        flops = 2.0 * batch * n * ROUTE_F
+    t_c = flops / PEAK_FLOPS / devices
+    t_m = bytes_hbm / HBM_BW / devices
+    t_x = (devices * batch * ROUTE_CARRY * 4 * 4) / LINK_BW \
+        if devices > 1 else 0.0
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    return {"n": n, "batch": batch, "quant": quant, "nprobe": nprobe,
+            "devices": devices, "scanned_rows_per_query": int(scanned),
+            "bytes_hbm": bytes_hbm, "flops": flops,
+            "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "dominant": max(terms, key=terms.get),
+            "step_s": max(terms.values())}
+
+
+def mega_projection(sizes=(100_000, 1_000_000), *, batch: int = 64,
+                    devices: int = 1) -> List[Dict]:
+    """Speedup table for the mega-catalog serving modes, with the two
+    headline claims asserted: int8 cuts the memory-bound scan >=2x on
+    an accelerator at every size, and int8+IVF cuts projected scan
+    time >=3x at N=1M.  ``benchmarks/router_scale.py`` calls this
+    before its 100k+ sweep — a model change that breaks either claim
+    fails the sweep before any catalog is built."""
+    rows = []
+    for n in sizes:
+        fp32 = route_step_projection(n, batch=batch, devices=devices)
+        q8 = route_step_projection(n, batch=batch, quant=True,
+                                   devices=devices)
+        ivf = route_step_projection(n, batch=batch, quant=True, nprobe=8,
+                                    devices=devices)
+        rows.append({
+            "n": n, "batch": batch, "devices": devices,
+            "fp32_step_s": fp32["step_s"], "int8_step_s": q8["step_s"],
+            "int8_ivf_step_s": ivf["step_s"],
+            "dominant": fp32["dominant"],
+            "int8_speedup": fp32["step_s"] / q8["step_s"],
+            "int8_ivf_speedup": fp32["step_s"] / ivf["step_s"],
+        })
+    assert all(r["int8_speedup"] >= 2.0 for r in rows), rows
+    big = [r for r in rows if r["n"] >= 1_000_000]
+    assert all(r["int8_ivf_speedup"] >= 3.0 for r in big), rows
+    return rows
+
+
 def run(verbose: bool = True):
     rows = load_all("pod1")
     ok = [r for r in rows if r["dominant"] != "n/a"]

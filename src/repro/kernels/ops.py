@@ -18,8 +18,10 @@ import numpy as np
 from repro.kernels.bandit_update import bandit_update_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.moe_gating import moe_gating_pallas
-from repro.kernels.route_step import route_step_jit
-from repro.kernels.router_topk import router_topk_pallas
+from repro.kernels.route_step import (route_step_ivf_jit, route_step_jit,
+                                      route_step_sharded_jit)
+from repro.kernels.router_topk import (router_topk_pallas,
+                                       router_topk_q8_pallas)
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 LANE = 128
@@ -68,6 +70,14 @@ def q_bucket(q: int) -> int:
 def n_bucket(n: int) -> int:
     """128-lane-aligned catalog-axis capacity (floor 128)."""
     return max(128, -(-n // LANE) * LANE)
+
+
+def n_bucket_sharded(n: int, ndev: int) -> int:
+    """Catalog capacity for the mesh-sharded path: every shard gets an
+    equal 128-lane-aligned slice, so the bucket is the next multiple
+    of ``ndev * 128``."""
+    step = ndev * LANE
+    return max(step, -(-n // step) * step)
 
 
 # dispatch/compile counters for the bucketed serving-path ops —
@@ -151,55 +161,193 @@ def _count_compiles(jit_fn, call):
 
 # the padded catalog constants are identical across every batch routed
 # against one MRES snapshot; cache them keyed on the snapshot's
-# embedding-array identity (holding a reference keeps the id stable)
-_CATALOG_CACHE: "list" = []             # [(key, emb_ref, packed), ...]
+# embedding-array identity.  Entries hold the source array by WEAK
+# reference: when the catalog grows, MRES rebuilds its embedding
+# matrix, the old one dies, and the stale multi-MB padded copies are
+# evicted on the next pack call instead of pinning one near-identical
+# padded bucket per historical catalog size (at 1M entries each copy
+# is ~GB).  The weakref also makes id-reuse safe: a dead entry whose
+# id() is recycled by a NEW array can never be returned, because its
+# referent is gone before the id can repeat.
+import weakref as _weakref
+
+_CATALOG_CACHE: "list" = []             # [(key, weakref(emb), packed)]
 _CATALOG_CACHE_MAX = 4
 
 
-def _catalog_pack(emb: np.ndarray, tt: np.ndarray, dm: np.ndarray,
-                  gmask: np.ndarray, np_pad: int):
-    """Padded device constants for ``route_step``:
-    (e2 ``[embn | emb]``, masks_table, counts_table).
-
-    The hierarchical-filter structure is flattened into ONE stacked
-    boolean table — every task-type x domain combination (the fused
-    kNN masks), then the fallback rungs: the task-type-only rows, the
-    generalist row, and the live-catalog row — plus its per-row
-    population counts, so the device program resolves per-query masks
-    AND every ladder count as O(B) row gathers instead of (B, N)
-    boolean algebra.  Padded catalog columns are False in every row.
-    The catalog block pairs the unit-normalized rows (cosine kNN) with
-    the raw normalized-metric rows (score blend) so the per-batch
-    program does no catalog-side normalization work.
-    """
-    key = (id(emb), np_pad)
+def catalog_cache_info() -> dict:
+    """Live-entry view of the padded-constant cache (tests/debug):
+    ``entries`` live packs, ``keys`` their (id, variant...) keys."""
     with _STATS_LOCK:
+        live = [(k2, wr) for (k2, wr, _) in _CATALOG_CACHE
+                if wr() is not None]
+    return {"entries": len(live), "keys": [k2 for k2, _ in live]}
+
+
+def reset_catalog_cache() -> None:
+    with _STATS_LOCK:
+        _CATALOG_CACHE.clear()
+
+
+def _cache_lookup(key):
+    """Return the cached pack for ``key`` (and drop dead entries)."""
+    with _STATS_LOCK:
+        _CATALOG_CACHE[:] = [e for e in _CATALOG_CACHE
+                             if e[1]() is not None]
         for k2, _, packed in _CATALOG_CACHE:
             if k2 == key:
                 return packed
-    n = emb.shape[0]
+    return None
+
+
+def _cache_put(key, emb, packed):
+    with _STATS_LOCK:
+        _CATALOG_CACHE.append((key, _weakref.ref(emb), packed))
+        while len(_CATALOG_CACHE) > _CATALOG_CACHE_MAX:
+            _CATALOG_CACHE.pop(0)
+
+
+def _quantize_rows_np(x: np.ndarray):
+    """numpy twin of ``ref.quantize_rows`` (same per-row symmetric
+    int8 contract, round-half-even): q int8, s (rows, 1) f32 with
+    x ~= q * s.  Bitwise-identical to the jnp version on equal f32
+    input — both divide by the same f32 scale and round half-even —
+    so host-packed catalogs and in-program query quantization agree.
+    """
+    x = np.asarray(x, np.float32)
+    amax = np.max(np.abs(x), axis=1, keepdims=True)
+    s = np.where(amax > 0, amax / np.float32(127.0),
+                 np.float32(1.0)).astype(np.float32)
+    q = np.clip(np.rint(x / s), -127, 127).astype(np.int8)
+    return q, s
+
+
+def _mask_table(tt, dm, gmask, n: int, np_pad: int):
+    """The stacked hierarchical-filter table at width ``np_pad``:
+    task-type x domain combinations, task-type-only rows, generalist
+    row, live-catalog row.  Padded columns are False in every row."""
     pad = np_pad - n
     ttp = np.pad(np.asarray(tt, bool), ((0, 0), (0, pad)))
     dmp = np.pad(np.asarray(dm, bool), ((0, 0), (0, pad)))
     combo = (ttp[:, None, :] & dmp[None, :, :]).reshape(-1, np_pad)
     live = np.zeros(np_pad, bool)
     live[:n] = True
-    table = np.vstack([combo, ttp,
-                       np.pad(np.asarray(gmask, bool), (0, pad))[None],
-                       live[None]])
+    return np.vstack([combo, ttp,
+                      np.pad(np.asarray(gmask, bool), (0, pad))[None],
+                      live[None]])
+
+
+def _catalog_blocks(emb: np.ndarray, np_pad: int, quant: bool):
+    """(e2, e2s) numpy blocks: ``[embn | emb]`` f32, or the int8
+    row-quantized pair when ``quant`` (e2s (Np, 2) per-row scales,
+    col 0 = unit half, col 1 = raw half; dummy (1, 2) otherwise)."""
+    n = emb.shape[0]
+    pad = np_pad - n
     embf = emb.astype(np.float32)
     embn = embf / (np.linalg.norm(embf, axis=1, keepdims=True) + 1e-9)
-    e2 = np.pad(np.concatenate([embn, embf], axis=1),
-                ((0, pad), (0, 0)))
-    packed = (
-        jnp.asarray(e2),
-        jnp.asarray(table),
-        jnp.asarray(table.sum(axis=1).astype(np.int32)),
-    )
-    with _STATS_LOCK:
-        _CATALOG_CACHE.append((key, emb, packed))
-        if len(_CATALOG_CACHE) > _CATALOG_CACHE_MAX:
-            _CATALOG_CACHE.pop(0)
+    if not quant:
+        e2 = np.pad(np.concatenate([embn, embf], axis=1),
+                    ((0, pad), (0, 0)))
+        return e2, np.zeros((1, 2), np.float32)
+    q8n, sn = _quantize_rows_np(embn)
+    q8e, se = _quantize_rows_np(embf)
+    e2 = np.pad(np.concatenate([q8n, q8e], axis=1), ((0, pad), (0, 0)))
+    e2s = np.pad(np.concatenate([sn, se], axis=1), ((0, pad), (0, 0)))
+    return e2, e2s
+
+
+def _catalog_pack(emb: np.ndarray, tt: np.ndarray, dm: np.ndarray,
+                  gmask: np.ndarray, np_pad: int, *,
+                  quant: bool = False, mesh=None, axis: str = ""):
+    """Padded device constants for ``route_step``:
+    (e2, e2s, masks_table, counts_table).
+
+    The hierarchical-filter structure is flattened into ONE stacked
+    boolean table plus per-row population counts, so the device
+    program resolves per-query masks AND every ladder count as O(B)
+    row gathers instead of (B, N) boolean algebra (see
+    ``_mask_table``).  The catalog block pairs the unit-normalized
+    rows (cosine kNN) with the raw normalized-metric rows (score
+    blend) so the per-batch program does no catalog-side
+    normalization work; with ``quant`` both halves are int8
+    row-quantized with their scales in e2s.  With ``mesh`` the
+    catalog-axis operands are device_put under their PartitionSpecs
+    (e2/e2s row-sharded, mask table column-sharded) so the sharded
+    program never re-lays them out per batch.
+    """
+    key = (id(emb), np_pad, bool(quant),
+           id(mesh) if mesh is not None else None)
+    packed = _cache_lookup(key)
+    if packed is not None:
+        return packed
+    n = emb.shape[0]
+    table = _mask_table(tt, dm, gmask, n, np_pad)
+    e2, e2s = _catalog_blocks(emb, np_pad, quant)
+    counts = table.sum(axis=1).astype(np.int32)
+    if mesh is None:
+        packed = (jnp.asarray(e2), jnp.asarray(e2s),
+                  jnp.asarray(table), jnp.asarray(counts))
+    else:
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as _P
+        from repro.sharding.rules import route_step_specs
+        specs = route_step_specs(mesh)
+        put = jax.device_put
+        packed = (
+            put(e2, NamedSharding(mesh, specs["e2"])),
+            put(e2s, NamedSharding(mesh, specs["e2s"] if quant
+                                   else _P(None, None))),
+            put(table, NamedSharding(mesh, specs["masks_table"])),
+            put(counts, NamedSharding(mesh, specs["counts_table"])),
+        )
+    _cache_put(key, emb, packed)
+    return packed
+
+
+def _catalog_pack_ivf(emb: np.ndarray, tt: np.ndarray, dm: np.ndarray,
+                      gmask: np.ndarray, cent: np.ndarray,
+                      cell_of: np.ndarray, *, quant: bool = False):
+    """Cell-packed catalog constants for ``route_step_ivf_jit``:
+    (e2, e2s, masks_table, counts_table, orig, cent_d, orig_np, cap).
+
+    Permutes the catalog into contiguous equal-capacity cell blocks
+    (``cap`` = max cell size rounded up to 8 slots; dead slots carry
+    ``orig == -1``, zero embedding rows, and all-False mask columns)
+    so the device program turns "scan the top-nprobe cells" into ONE
+    contiguous-stride gather of ``nprobe * cap`` slots.  The counts
+    table keeps the TRUE full-catalog populations — ladder semantics
+    must not see packing artifacts.
+    """
+    key = (id(emb), "ivf", id(cent), bool(quant))
+    packed = _cache_lookup(key)
+    if packed is not None:
+        return packed
+    n, m = emb.shape
+    C = cent.shape[0]
+    cell_of = np.asarray(cell_of, np.int64)
+    sizes = np.bincount(cell_of, minlength=C)
+    cap = max(8, int(-(-int(sizes.max()) // 8) * 8))
+    npk = C * cap
+    order = np.argsort(cell_of, kind="stable")
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    pos_in_cell = np.arange(n) - starts[cell_of[order]]
+    orig = np.full(npk, -1, np.int64)
+    orig[cell_of[order] * cap + pos_in_cell] = order
+    valid = orig >= 0
+    osafe = np.where(valid, orig, 0)
+
+    table = _mask_table(tt, dm, gmask, n, n)
+    counts = table.sum(axis=1).astype(np.int32)
+    tablepk = table[:, osafe] & valid[None, :]
+    e2, e2s = _catalog_blocks(emb, n, quant)
+    e2pk = e2[osafe] * valid[:, None].astype(e2.dtype)
+    e2spk = e2s[osafe] * valid[:, None] if quant else e2s
+    packed = (jnp.asarray(e2pk), jnp.asarray(e2spk),
+              jnp.asarray(tablepk), jnp.asarray(counts),
+              jnp.asarray(orig.astype(np.int32)),
+              jnp.asarray(np.asarray(cent, np.float32)),
+              orig.astype(np.int32), cap)
+    _cache_put(key, emb, packed)
     return packed
 
 
@@ -213,6 +361,7 @@ def router_topk(emb, queries, k: int,
                 row_bias: Optional[jnp.ndarray] = None,
                 min_score: Optional[float] = None, *,
                 blk_q: int = 8, blk_n: int = 512,
+                quant: bool = False,
                 interpret: Optional[bool] = None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Weighted-cosine top-k over the catalog (see kernels/ref.py).
@@ -224,6 +373,10 @@ def router_topk(emb, queries, k: int,
     the scoring matmul, applied to mask-valid rows only; min_score —
     static score floor fused after mask + bias (the semantic cache's
     similarity threshold): rows below it surface as -inf.
+    ``quant`` routes through the int8 kernel: catalog and query rows
+    are symmetrically row-quantized (``ref.quantize_rows``) and the
+    scoring matmul accumulates int8 x int8 in int32, rescaling to
+    fp32 once at the top-k boundary — 4x fewer catalog bytes moved.
     Returns (vals (Q, k) f32, idx (Q, k) i32).  Masked / padded /
     sub-threshold rows surface as vals == -inf, as does the tail when
     k > N.
@@ -246,21 +399,35 @@ def router_topk(emb, queries, k: int,
     maskf = jnp.broadcast_to(maskf, (Q, N)) if maskf.ndim == 1 else maskf
     biasf = (jnp.asarray(row_bias, jnp.float32)[None, :]
              if row_bias is not None else jnp.zeros((1, N), jnp.float32))
-    ewp = _pad_to(_pad_to(ew, LANE, 1), blk_n, 0)
-    qnp = _pad_to(_pad_to(qn, LANE, 1), blk_q, 0)
     maskp = _pad_to(_pad_to(maskf, blk_n, 1), blk_q, 0)      # pad -> 0 -> -inf
     biasp = _pad_to(biasf, blk_n, 1)
+    ms = float("-inf") if min_score is None else float(min_score)
 
+    if quant:
+        from repro.kernels.ref import quantize_rows
+        e8, es = quantize_rows(ew)
+        q8, qs = quantize_rows(qn)
+        e8p = _pad_to(_pad_to(e8, LANE, 1), blk_n, 0)
+        q8p = _pad_to(_pad_to(q8, LANE, 1), blk_q, 0)
+        esp = _pad_to(es, blk_n, 0).T                        # (1, Np)
+        qsp = _pad_to(qs, blk_q, 0)                          # (Qp, 1)
+        vals, idx = router_topk_q8_pallas(
+            q8p, e8p, qsp, esp, maskp, biasp, k, blk_q=blk_q,
+            blk_n=blk_n, min_score=ms, interpret=interp)
+        return vals[:Q], idx[:Q]
+
+    ewp = _pad_to(_pad_to(ew, LANE, 1), blk_n, 0)
+    qnp = _pad_to(_pad_to(qn, LANE, 1), blk_q, 0)
     vals, idx = router_topk_pallas(
         qnp, ewp, maskp, biasp, k, blk_q=blk_q, blk_n=blk_n,
-        min_score=float("-inf") if min_score is None else float(min_score),
-        interpret=interp)
+        min_score=ms, interpret=interp)
     return vals[:Q], idx[:Q]
 
 
 def router_topk_bucketed(emb, queries, k: int,
                          mask: Optional[np.ndarray] = None,
                          min_score: Optional[float] = None, *,
+                         quant: bool = False,
                          interpret: Optional[bool] = None
                          ) -> Tuple[np.ndarray, np.ndarray]:
     """``router_topk`` behind the serving-time shape buckets.
@@ -279,10 +446,12 @@ def router_topk_bucketed(emb, queries, k: int,
         queries = np.pad(queries, ((0, qp - Q), (0, 0)))
         if mask is not None and np.ndim(mask) == 2:
             mask = np.pad(np.asarray(mask), ((0, qp - Q), (0, 0)))
+    jit_fn = router_topk_q8_pallas if quant else router_topk_pallas
     (vals, idx), compiles = _count_compiles(
-        router_topk_pallas,
+        jit_fn,
         lambda: router_topk(emb, queries, k, mask=mask,
-                            min_score=min_score, interpret=interpret))
+                            min_score=min_score, quant=quant,
+                            interpret=interpret))
     _bump("topk", compiles)
     return vals[:Q], idx[:Q]
 
@@ -300,6 +469,8 @@ def route_step(emb, tt_matrix, dm_matrix, gmask, T, W, ti, di, *,
                lpen: Optional[np.ndarray] = None,
                use_pallas: bool = False,
                interpret: Optional[bool] = None,
+               quant: bool = False, mesh=None,
+               ivf=None, nprobe: int = 8,
                telemetry=None) -> dict:
     """One fused routing step per batch (see ``kernels/route_step.py``).
 
@@ -313,6 +484,20 @@ def route_step(emb, tt_matrix, dm_matrix, gmask, T, W, ti, di, *,
     ``telemetry`` additionally receives THIS call's (1 dispatch,
     compile delta) directly, so concurrent callers never read each
     other's deltas out of the shared counters.
+
+    Mega-catalog knobs (all still ONE dispatch per batch):
+
+    * ``quant``  — serve from the int8 row-quantized catalog block
+      (int32 accumulate, one fp32 rescale at the top-k boundary).
+    * ``mesh``   — a 1-D device mesh with a ``catalog`` axis
+      (``launch.make_routing_mesh``): the catalog axis of every (.., N)
+      operand is sharded across it and the cross-shard top-k merge
+      tree runs inside the program.  fp32 results are bit-identical to
+      the single-device program.
+    * ``ivf``    — ``(centroids, cell_of)`` from ``MRES.ivf_index()``:
+      two-level pruned search scanning only the top-``nprobe`` cells
+      per query (recall@k knob; ``nprobe >= n_cells`` is exhaustive).
+      Not yet composed with ``mesh``.
     """
     emb = np.asarray(emb, np.float32)
     T = np.asarray(T, np.float32)
@@ -320,15 +505,12 @@ def route_step(emb, tt_matrix, dm_matrix, gmask, T, W, ti, di, *,
     n, m = emb.shape
     B = T.shape[0]
     assert 1 <= k <= n and 1 <= r <= n, (k, r, n)
-    qp, np_pad = q_bucket(B), n_bucket(n)
+    qp = q_bucket(B)
     interp = default_interpret() if interpret is None else interpret
-    blk_n = 512 if np_pad % 512 == 0 else LANE
     n_tt = np.asarray(tt_matrix).shape[0]
     n_dm = np.asarray(dm_matrix).shape[0]
 
-    e2_d, masks_d, counts_d = _catalog_pack(
-        emb, tt_matrix, dm_matrix, gmask, np_pad)
-    qpad, npad = qp - B, np_pad - n
+    qpad = qp - B
     ti = np.asarray(ti, np.int32)
     di = np.asarray(di, np.int32)
     Tp, Wp, tip, dip = T, W, ti, di
@@ -342,29 +524,88 @@ def route_step(emb, tt_matrix, dm_matrix, gmask, T, W, ti, di, *,
 
     dummy1 = _dummies()
     has_fb = fb is not None
-    fbp = np.pad(np.asarray(fb, np.float32),
-                 ((0, qpad), (0, npad))) if has_fb else dummy1[0]
     has_ad = theta is not None
+    has_load = lpen is not None
     if has_ad:
         th = np.asarray(theta, np.float32)[:n]
         ai = np.asarray(ainv, np.float32)[:n].reshape(n, -1)
-        thp = np.pad(th, ((0, npad), (0, 0)))
-        aip = np.pad(ai, ((0, npad), (0, 0)))
-    else:
-        thp = aip = dummy1[0]
-    has_load = lpen is not None
-    lpp = np.pad(np.asarray(lpen, np.float32)[:n], (0, npad)) \
-        if has_load else dummy1[1]
     params = np.array([fb_weight, ad_weight, alpha], np.float32)
 
-    out, compiles = _count_compiles(
-        route_step_jit,
-        lambda: route_step_jit(
-            e2_d, masks_d, counts_d, Tp, Wp, tip, dip, fbp, thp, aip,
-            lpp, params, k=k, r=r, n_tt=n_tt, n_dm=n_dm,
-            has_fb=has_fb, has_ad=has_ad, has_load=has_load,
-            use_pallas=use_pallas, blk_q=8, blk_n=blk_n,
-            interpret=interp))
+    if ivf is not None:
+        assert mesh is None, "IVF + mesh sharding is not composed yet"
+        cent, cell_of = ivf
+        (e2_d, e2s_d, masks_d, counts_d, orig_d, cent_d, orig_np,
+         cap) = _catalog_pack_ivf(
+            emb, tt_matrix, dm_matrix, gmask,
+            np.asarray(cent, np.float32), cell_of, quant=quant)
+        valid = orig_np >= 0
+        osafe = np.where(valid, orig_np, 0)
+        if has_fb:
+            fbp = np.asarray(fb, np.float32)[:, osafe] * valid[None, :]
+            if qpad:
+                fbp = np.pad(fbp, ((0, qpad), (0, 0)))
+        else:
+            fbp = dummy1[0]
+        thp = th[osafe] * valid[:, None] if has_ad else dummy1[0]
+        aip = ai[osafe] * valid[:, None] if has_ad else dummy1[0]
+        lpp = (np.asarray(lpen, np.float32)[:n][osafe] * valid) \
+            if has_load else dummy1[1]
+        out, compiles = _count_compiles(
+            route_step_ivf_jit,
+            lambda: route_step_ivf_jit(
+                e2_d, e2s_d, masks_d, counts_d, orig_d, cent_d,
+                Tp, Wp, tip, dip, fbp, thp, aip, lpp, params,
+                k=k, r=r, n_tt=n_tt, n_dm=n_dm, nprobe=int(nprobe),
+                cap=cap, has_fb=has_fb, has_ad=has_ad,
+                has_load=has_load, quant=quant))
+    elif mesh is not None:
+        from repro.sharding.rules import CATALOG_AXIS
+        ndev = mesh.shape[CATALOG_AXIS]
+        np_pad = n_bucket_sharded(n, ndev)
+        npad = np_pad - n
+        e2_d, e2s_d, masks_d, counts_d = _catalog_pack(
+            emb, tt_matrix, dm_matrix, gmask, np_pad, quant=quant,
+            mesh=mesh, axis=CATALOG_AXIS)
+        fbp = np.pad(np.asarray(fb, np.float32),
+                     ((0, qpad), (0, npad))) if has_fb else dummy1[0]
+        if has_ad:
+            thp = np.pad(th, ((0, npad), (0, 0)))
+            aip = np.pad(ai, ((0, npad), (0, 0)))
+        else:
+            thp = aip = dummy1[0]
+        lpp = np.pad(np.asarray(lpen, np.float32)[:n], (0, npad)) \
+            if has_load else dummy1[1]
+        out, compiles = _count_compiles(
+            route_step_sharded_jit,
+            lambda: route_step_sharded_jit(
+                e2_d, e2s_d, masks_d, counts_d, Tp, Wp, tip, dip,
+                fbp, thp, aip, lpp, params, mesh=mesh,
+                axis=CATALOG_AXIS, k=k, r=r, n_tt=n_tt, n_dm=n_dm,
+                has_fb=has_fb, has_ad=has_ad, has_load=has_load,
+                quant=quant))
+    else:
+        np_pad = n_bucket(n)
+        npad = np_pad - n
+        blk_n = 512 if np_pad % 512 == 0 else LANE
+        e2_d, e2s_d, masks_d, counts_d = _catalog_pack(
+            emb, tt_matrix, dm_matrix, gmask, np_pad, quant=quant)
+        fbp = np.pad(np.asarray(fb, np.float32),
+                     ((0, qpad), (0, npad))) if has_fb else dummy1[0]
+        if has_ad:
+            thp = np.pad(th, ((0, npad), (0, 0)))
+            aip = np.pad(ai, ((0, npad), (0, 0)))
+        else:
+            thp = aip = dummy1[0]
+        lpp = np.pad(np.asarray(lpen, np.float32)[:n], (0, npad)) \
+            if has_load else dummy1[1]
+        out, compiles = _count_compiles(
+            route_step_jit,
+            lambda: route_step_jit(
+                e2_d, e2s_d, masks_d, counts_d, Tp, Wp, tip, dip, fbp,
+                thp, aip, lpp, params, k=k, r=r, n_tt=n_tt, n_dm=n_dm,
+                has_fb=has_fb, has_ad=has_ad, has_load=has_load,
+                use_pallas=use_pallas, blk_q=8, blk_n=blk_n,
+                interpret=interp, quant=quant))
     _bump("route_step", compiles)
     if telemetry is not None:
         telemetry.record_route_step(dispatches=1, compiles=compiles)

@@ -13,6 +13,39 @@ import jax.numpy as jnp
 
 
 # ----------------------------------------------------------------------
+# int8 row quantization (shared contract of every quantized path)
+# ----------------------------------------------------------------------
+
+def quantize_rows(x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row symmetric int8 quantization.
+
+    ``q = clip(round(x / s), -127, 127)`` with ``s = max|row| / 127``
+    (all-zero rows take s = 1 so they quantize to zeros, not NaNs).
+    Returns (q (N, D) int8, s (N, 1) f32).  The fp32 score of two
+    quantized rows is ``(q_a . q_b) * s_a * s_b`` with the dot
+    accumulated in int32 — EXACT integer arithmetic, so every path
+    using this helper (Pallas kernel, fused jnp program, oracle)
+    produces bitwise-identical scores.  ``ops._quantize_rows_np`` is
+    the numpy twin with the same rounding (round-half-even).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    s = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def _q8_matmul(a8: jnp.ndarray, b8: jnp.ndarray, a_s: jnp.ndarray,
+               b_s: jnp.ndarray) -> jnp.ndarray:
+    """fp32 scores of quantized rows: int32-accumulated a8 @ b8^T,
+    rescaled once at the boundary. a_s (Qa, 1); b_s (Nb, 1)."""
+    acc = jax.lax.dot_general(
+        a8, b8, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * (a_s * b_s[:, 0][None, :])
+
+
+# ----------------------------------------------------------------------
 # router_topk: fused weighted-cosine scoring + filter mask + top-k
 # ----------------------------------------------------------------------
 
@@ -20,7 +53,8 @@ def router_topk(emb: jnp.ndarray, queries: jnp.ndarray, k: int,
                 mask: Optional[jnp.ndarray] = None,
                 weights: Optional[jnp.ndarray] = None,
                 row_bias: Optional[jnp.ndarray] = None,
-                min_score: Optional[float] = None
+                min_score: Optional[float] = None, *,
+                quant: bool = False
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Top-k catalog rows by (optionally weighted) cosine similarity.
 
@@ -37,6 +71,10 @@ def router_topk(emb: jnp.ndarray, queries: jnp.ndarray, k: int,
     min_score: score floor applied AFTER mask + bias (the semantic
               cache's similarity threshold): rows scoring below it
               surface as -inf, exactly like masked rows.
+    quant:    int8 path — the weight-folded, norm-scaled catalog rows
+              and the unit queries are row-quantized (``quantize_rows``)
+              and scored via the int32-accumulate matmul; mask / bias /
+              min_score semantics are unchanged.
     Returns (vals (Q, k) f32 descending, idx (Q, k) int32).
     k > N is allowed: the tail beyond the catalog surfaces as -inf.
     """
@@ -46,7 +84,12 @@ def router_topk(emb: jnp.ndarray, queries: jnp.ndarray, k: int,
     en = jnp.linalg.norm(emb, axis=1, keepdims=True) + 1e-9
     qn = jnp.linalg.norm(q, axis=1, keepdims=True) + 1e-9
     ew = emb * (weights.astype(jnp.float32)[None, :] if weights is not None else 1.0)
-    scores = (q / qn) @ (ew / en).T                      # (Q, N)
+    if quant:
+        e8, es = quantize_rows(ew / en)
+        q8, qs = quantize_rows(q / qn)
+        scores = _q8_matmul(q8, e8, qs, es)              # (Q, N)
+    else:
+        scores = (q / qn) @ (ew / en).T                  # (Q, N)
     if row_bias is not None:
         scores = scores + row_bias.astype(jnp.float32)[None, :]
     if mask is not None:
@@ -74,7 +117,9 @@ def route_step(emb: jnp.ndarray, tt_matrix: jnp.ndarray,
                theta: Optional[jnp.ndarray] = None,
                ainv: Optional[jnp.ndarray] = None,
                alpha: float = 0.0, ad_weight: float = 0.0,
-               lpen: Optional[jnp.ndarray] = None) -> dict:
+               lpen: Optional[jnp.ndarray] = None,
+               quant: bool = False,
+               allowed: Optional[jnp.ndarray] = None) -> dict:
     """Semantic ground truth of the fused routing step (unpadded).
 
     emb (N, M) normalized metric embeddings; tt_matrix/dm_matrix
@@ -93,6 +138,18 @@ def route_step(emb: jnp.ndarray, tt_matrix: jnp.ndarray,
     same blend.  Returns the dict described in
     ``kernels/route_step.route_step_jit`` with true (B,)/(B, R)
     shapes, R = max(k, r).
+
+    ``quant``: score both matrices on int8 row-quantized operands
+    (``quantize_rows``; int32 accumulate, fp32 rescale) — the ground
+    truth of every int8 path, bitwise-reproducible because the dot
+    products are exact integer sums.
+
+    ``allowed`` (B, N) bool: pruned-search visibility (the IVF oracle
+    passes the union of each query's probed cells).  The kNN only
+    sees ``m1 & allowed``; a row whose full filter mask is non-empty
+    but whose probed cells miss every match falls back to stage 1
+    (widened-kNN = the exact full-mask blend scan) — the recall
+    escape hatch of the pruned path.
     """
     emb = emb.astype(jnp.float32)
     T = T.astype(jnp.float32)
@@ -102,15 +159,24 @@ def route_step(emb: jnp.ndarray, tt_matrix: jnp.ndarray,
     qn = T / (jnp.linalg.norm(T, axis=1, keepdims=True) + 1e-9)
     m_tt = tt_matrix[ti]
     m1 = m_tt & dm_matrix[di]
+    if quant:
+        e8n, esn = quantize_rows(embn)
+        e8e, ese = quantize_rows(emb)
+        q8, qs = quantize_rows(qn)
+        w8, ws = quantize_rows(W)
+        sim_full = _q8_matmul(q8, e8n, qs, esn)
+    else:
+        sim_full = qn @ embn.T
+    m_knn = m1 if allowed is None else (m1 & allowed)
 
     vals, idx = jax.lax.top_k(
-        jnp.where(m1, qn @ embn.T, -jnp.inf), min(k, N))
+        jnp.where(m_knn, sim_full, -jnp.inf), min(k, N))
     finite = vals > -jnp.inf
     idx_safe = jnp.where(finite, idx, 0)
     has_primary = finite.any(axis=1)
     n_filtered = finite.sum(axis=1).astype(jnp.int32)
 
-    blend = W @ emb.T
+    blend = _q8_matmul(w8, e8e, ws, ese) if quant else W @ emb.T
     if fb is not None:
         blend = blend + fb_weight * fb.astype(jnp.float32)
     if theta is not None:
@@ -145,7 +211,12 @@ def route_step(emb: jnp.ndarray, tt_matrix: jnp.ndarray,
                                jnp.where((stage_sel == 2)[:, None],
                                          m_gen, m_any)))
     fv, fidx = jax.lax.top_k(jnp.where(msel, blend, -jnp.inf), R)
-    sim_f = (qn * embn[fidx[:, 0]]).sum(axis=1)
+    if quant:
+        f0 = fidx[:, 0]
+        sim_f = (qn * e8n[f0].astype(jnp.float32)).sum(axis=1) \
+            * esn[f0, 0]
+    else:
+        sim_f = (qn * embn[fidx[:, 0]]).sum(axis=1)
     ncand_f = jnp.take_along_axis(counts, stage_sel[:, None], axis=1)[:, 0]
 
     hp = has_primary[:, None]
@@ -165,6 +236,43 @@ def route_step(emb: jnp.ndarray, tt_matrix: jnp.ndarray,
         "n_candidates": jnp.where(has_primary, n_filtered, ncand_f
                                   ).astype(jnp.int32),
     }
+
+
+# ----------------------------------------------------------------------
+# IVF-pruned route_step: coarse centroid probe -> visibility mask
+# ----------------------------------------------------------------------
+
+def ivf_allowed(T: jnp.ndarray, centroids: jnp.ndarray,
+                cell_of: jnp.ndarray, nprobe: int) -> jnp.ndarray:
+    """(B, N) bool: catalog rows whose cell is among each query's
+    top-``nprobe`` centroid cells by cosine against the UNIT task
+    vector — the visibility set of the two-level IVF search.
+    ``nprobe >= n_cells`` makes every row visible (exact search).
+    """
+    T = T.astype(jnp.float32)
+    qn = T / (jnp.linalg.norm(T, axis=1, keepdims=True) + 1e-9)
+    cent = centroids.astype(jnp.float32)
+    C = cent.shape[0]
+    P = min(int(nprobe), C)
+    _, cells = jax.lax.top_k(qn @ cent.T, P)            # (B, P)
+    hit = jnp.zeros((T.shape[0], C), bool)
+    hit = hit.at[jnp.arange(T.shape[0])[:, None], cells].set(True)
+    return hit[:, cell_of]                              # (B, N)
+
+
+def route_step_ivf(emb, tt_matrix, dm_matrix, gmask, T, W, ti, di,
+                   k: int, r: int, centroids, cell_of, nprobe: int,
+                   **kwargs) -> dict:
+    """Ground truth of the IVF-pruned fused step: ``route_step`` with
+    the kNN restricted to the probed cells' rows.  All blend kwargs
+    (fb / theta / lpen / quant) pass through; recall versus the
+    exhaustive ``route_step`` is the ``nprobe`` knob's contract,
+    and ``nprobe >= n_cells`` is exhaustive by construction.
+    """
+    return route_step(emb, tt_matrix, dm_matrix, gmask, T, W, ti, di,
+                      k, r,
+                      allowed=ivf_allowed(T, centroids, cell_of, nprobe),
+                      **kwargs)
 
 
 # ----------------------------------------------------------------------

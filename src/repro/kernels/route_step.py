@@ -43,9 +43,33 @@ capacity, so steady-state serving re-dispatches one cached executable
 regardless of batch size.  Padded query rows compute garbage and are
 sliced off; padded catalog columns are False in every mask row.
 
+Mega-catalog extensions (100k–1M entries, same single dispatch):
+
+  * ``quant=True``    — the catalog block arrives int8 row-quantized
+    (per-row scales in ``e2s``); the O(N) scan matmul accumulates in
+    int32 on the int8 operands and rescales to fp32 ONCE at the top-k
+    boundary.  4x fewer catalog bytes; on a memory-bandwidth-bound
+    scan that is the speedup (benchmarks/roofline.py).  All integer
+    dots are exact, so quantized results are bitwise-reproducible
+    across the jnp, Pallas and oracle paths.
+  * ``route_step_ivf_jit``     — two-level IVF-pruned search over a
+    cell-packed catalog layout: coarse centroid scores select the
+    top-``nprobe`` cells per query IN-PROGRAM, only those cells'
+    blocks are gathered and scanned (O(nprobe * cell) instead of
+    O(N)), and rows whose probed cells miss every filter match escape
+    to the exact widened-kNN rung via ``lax.cond``.
+  * ``route_step_sharded_jit`` — ``shard_map`` over a 1-D device mesh
+    with the catalog axis sharded: each shard runs the SAME fused
+    local scan + top-R, emits a sorted (B, R) carry with global
+    indices and per-lane blend/cosine payloads, and an allreduce-style
+    pairwise tree of the bitonic ``merge_topk`` (``tree_merge_topk``)
+    reduces the carries — ties fold toward the lowest shard, so the
+    result is bit-identical to the single-device program.
+
 The pure-jnp semantic ground truth lives in ``kernels/ref.py``
-(``ref.route_step``); parity is pinned by tests against both the
-oracle and the staged numpy path in ``core/routing.py``.
+(``ref.route_step`` incl. ``quant``/``allowed``, ``ref.route_step_ivf``);
+parity is pinned by tests against both the oracle and the staged
+numpy path in ``core/routing.py``.
 """
 from __future__ import annotations
 
@@ -53,8 +77,13 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
-from repro.kernels.router_topk import router_topk_pallas
+from repro.kernels.ref import quantize_rows
+from repro.kernels.router_topk import (router_topk_pallas,
+                                       router_topk_q8_pallas,
+                                       tree_merge_topk)
 
 NEG_INF = float("-inf")
 
@@ -103,16 +132,110 @@ def _knn_pallas(qn, embn, m1, k, blk_q, blk_n, interpret):
                               interpret=interpret)
 
 
+def _knn_pallas_q8(q8, qs, e8, es, m1, k, blk_q, blk_n, interpret):
+    """int8 mask-fused kNN through the quantized Pallas kernel.
+
+    Zero-padding the int8 feature axis is exact (zero columns add
+    nothing to the int32 dot), so the scales pass through unchanged.
+    """
+    Q, D = q8.shape
+    N = e8.shape[0]
+    dpad = (-D) % 128
+    q8p = jnp.pad(q8, ((0, 0), (0, dpad)))
+    e8p = jnp.pad(e8, ((0, 0), (0, dpad)))
+    bias = jnp.zeros((1, N), jnp.float32)
+    return router_topk_q8_pallas(q8p, e8p, qs, es[None, :], m1.astype(
+        jnp.float32), bias, k, blk_q=blk_q, blk_n=blk_n,
+        interpret=interpret)
+
+
+# ----------------------------------------------------------------------
+# shared program pieces (dense / IVF / sharded variants)
+# ----------------------------------------------------------------------
+
+def _ladder(counts_table, ti, di, n_tt: int, n_dm: int):
+    """Per-query mask rows and ladder counts: O(B) table gathers.
+
+    Returns (ci combined-mask row, c_wide, has_primary, fi first
+    non-empty fallback row, stage_f its FALLBACK_LADDER stage).
+    """
+    n_combo = n_tt * n_dm
+    ci = ti * n_dm + di                                   # combined row
+    c_wide = counts_table[ci]
+    has_primary = c_wide > 0
+    c_tt = counts_table[n_combo + ti]
+    c_gen = counts_table[n_combo + n_tt]
+    # first non-empty fallback rung (widened-kNN == the fused mask, so
+    # it is empty for every fallback row by construction): task-type-
+    # only -> generalist -> any(live)
+    fi = jnp.where(c_tt > 0, n_combo + ti,
+                   jnp.where(c_gen > 0, n_combo + n_tt,
+                             n_combo + n_tt + 1))
+    stage_f = jnp.where(c_tt > 0, 2,
+                        jnp.where(c_gen > 0, 3, 4)).astype(jnp.int32)
+    return ci, c_wide, has_primary, fi, stage_f
+
+
+def _extras_matrix(T, fb, theta, ainv_flat, lpen, params, B, Np, *,
+                   has_fb: bool, has_ad: bool, has_load: bool):
+    """(B, Np) extra blend terms (feedback / bandit / load), or None.
+
+    One matrix when any term is active; None costs nothing.  The same
+    per-element formulas serve the dense program over the full
+    catalog, the sharded program over each shard's local columns, and
+    the IVF fallback branch over the packed layout.
+    """
+    extras = None
+    if has_fb:
+        extras = params[0] * fb
+    if has_ad:
+        ctx = jnp.concatenate(
+            [T, jnp.ones((B, 1), jnp.float32)], axis=1)   # (B, Dc)
+        mean = ctx @ theta.T                              # (B, Np)
+        xx = (ctx[:, :, None] * ctx[:, None, :]).reshape(B, -1)
+        var = xx @ ainv_flat.T                            # (B, Np)
+        ucb = params[1] * (
+            mean + params[2] * jnp.sqrt(jnp.maximum(var, 0.0)))
+        extras = ucb if extras is None else extras + ucb
+    if has_load:
+        lrow = jnp.broadcast_to(-lpen[None, :], (B, Np))
+        extras = lrow if extras is None else extras - lpen[None, :]
+    if extras is not None:
+        extras = jax.lax.optimization_barrier(extras)
+    return extras
+
+
+def _q8_cscore(w8, ws, e8e_rows, ese_rows):
+    """Per-candidate quantized blend scores: exact int32 einsum at the
+    <=R gathered columns, fp32 rescale — bitwise equal to gathering
+    from the full quantized blend matrix."""
+    acc = jnp.einsum("bm,brm->br", w8.astype(jnp.int32),
+                     e8e_rows.astype(jnp.int32))
+    return acc.astype(jnp.float32) * (ws * ese_rows)
+
+
+def _quant_operands(e2, e2s, M: int):
+    """Split the packed quantized catalog block into halves:
+    (e8n, esn) unit-row half for the kNN, (e8e, ese) raw-metric half
+    for the blend — scales as (Np,) columns of ``e2s``."""
+    return (e2[:, :M], e2s[:, 0], e2[:, M:], e2s[:, 1])
+
+
+# ----------------------------------------------------------------------
+# dense single-device program
+# ----------------------------------------------------------------------
+
 @functools.partial(
     jax.jit,
     static_argnames=("k", "r", "n_tt", "n_dm", "has_fb",
                      "has_ad", "has_load", "use_pallas", "blk_q",
-                     "blk_n", "interpret"))
-def route_step_jit(e2, masks_table, counts_table, T, W, ti, di, fb,
+                     "blk_n", "interpret", "quant"))
+def route_step_jit(e2, e2s, masks_table, counts_table, T, W, ti, di, fb,
                    theta, ainv_flat, lpen, params, *, k: int, r: int,
                    n_tt: int, n_dm: int, has_fb: bool,
                    has_ad: bool, has_load: bool, use_pallas: bool,
-                   blk_q: int, blk_n: int, interpret: bool):
+                   blk_q: int, blk_n: int, interpret: bool,
+                   quant: bool = False):
     """One fused routing step over a bucket-padded batch.
 
     The live catalog size is deliberately NOT a parameter: liveness is
@@ -124,7 +247,12 @@ def route_step_jit(e2, masks_table, counts_table, T, W, ti, di, fb,
     e2 (Np, 2M) catalog block ``[embn | emb]`` — unit-normalized rows
     for the cosine kNN next to the raw normalized-metric rows for the
     score blend, precomputed once per catalog by ``ops.py`` (zero rows
-    beyond the live count); masks_table (n_tt*n_dm + n_tt + 2, Np) stacked
+    beyond the live count).  With ``quant=True`` e2 is the int8
+    row-quantized block and e2s (Np, 2) carries the per-row scales
+    (col 0 = unit half, col 1 = raw half); the scan matmul then runs
+    dequant-free on int8 with an int32 accumulator and ONE fp32
+    rescale at the top-k boundary (e2s is a (1, 2) dummy otherwise).
+    masks_table (n_tt*n_dm + n_tt + 2, Np) stacked
     boolean mask rows — every task-type x domain combination, then the
     fallback rungs (task-type-only rows, the generalist row, the
     live-catalog row); counts_table (rows,) i32 per-row population
@@ -144,48 +272,22 @@ def route_step_jit(e2, masks_table, counts_table, T, W, ti, di, fb,
     bar = jax.lax.optimization_barrier
     Np, M2 = e2.shape
     M = M2 // 2
-    embn = e2[:, :M]
-    emb = e2[:, M:]
     B = T.shape[0]
-    n_combo = n_tt * n_dm
     R = max(k, r)
 
     qn = T / (jnp.linalg.norm(T, axis=1, keepdims=True) + 1e-9)
-
-    # per-query mask rows and ladder counts: O(B) table gathers
-    ci = ti * n_dm + di                                   # combined row
-    c_wide = counts_table[ci]
-    has_primary = c_wide > 0
-    c_tt = counts_table[n_combo + ti]
-    c_gen = counts_table[n_combo + n_tt]
-    # first non-empty fallback rung (widened-kNN == the fused mask, so
-    # it is empty for every fallback row by construction): task-type-
-    # only -> generalist -> any(live)
-    fi = jnp.where(c_tt > 0, n_combo + ti,
-                   jnp.where(c_gen > 0, n_combo + n_tt,
-                             n_combo + n_tt + 1))
-    stage_f = jnp.where(c_tt > 0, 2,
-                        jnp.where(c_gen > 0, 3, 4)).astype(jnp.int32)
-
-    # ---- extra blend terms (feedback / bandit / load), one (B, N)
-    # matrix when any is active; None costs nothing ----
-    extras = None
-    if has_fb:
-        extras = params[0] * fb
-    if has_ad:
-        ctx = jnp.concatenate(
-            [T, jnp.ones((B, 1), jnp.float32)], axis=1)   # (B, Dc)
-        mean = ctx @ theta.T                              # (B, Np)
-        xx = (ctx[:, :, None] * ctx[:, None, :]).reshape(B, -1)
-        var = xx @ ainv_flat.T                            # (B, Np)
-        ucb = params[1] * (
-            mean + params[2] * jnp.sqrt(jnp.maximum(var, 0.0)))
-        extras = ucb if extras is None else extras + ucb
-    if has_load:
-        lrow = jnp.broadcast_to(-lpen[None, :], (B, Np))
-        extras = lrow if extras is None else extras - lpen[None, :]
-    if extras is not None:
-        extras = bar(extras)
+    ci, c_wide, has_primary, fi, stage_f = _ladder(
+        counts_table, ti, di, n_tt, n_dm)
+    extras = _extras_matrix(T, fb, theta, ainv_flat, lpen, params, B,
+                            Np, has_fb=has_fb, has_ad=has_ad,
+                            has_load=has_load)
+    if quant:
+        e8n, esn, e8e, ese = _quant_operands(e2, e2s, M)
+        q8, qs = quantize_rows(qn)
+        w8, ws = quantize_rows(W)
+    else:
+        embn = e2[:, :M]
+        emb = e2[:, M:]
 
     hp = has_primary[:, None]
     kmask = (jnp.arange(R) < k)[None, :]
@@ -193,11 +295,18 @@ def route_step_jit(e2, masks_table, counts_table, T, W, ti, di, fb,
         # TPU structure: Pallas kernel for the kNN, one jnp top_k for
         # the fallback re-score (primary rows masked out of it)
         m1 = bar(masks_table[ci])
-        vals, idx = _knn_pallas(qn, embn, m1, k, blk_q, blk_n,
-                                interpret)
+        if quant:
+            vals, idx = _knn_pallas_q8(q8, qs, e8n, esn, m1, k, blk_q,
+                                       blk_n, interpret)
+        else:
+            vals, idx = _knn_pallas(qn, embn, m1, k, blk_q, blk_n,
+                                    interpret)
         finite = vals > NEG_INF
         idx_safe = jnp.where(finite, idx, 0)
-        cscore = jnp.einsum("bm,brm->br", W, emb[idx_safe])
+        if quant:
+            cscore = _q8_cscore(w8, ws, e8e[idx_safe], ese[idx_safe])
+        else:
+            cscore = jnp.einsum("bm,brm->br", W, emb[idx_safe])
         if extras is not None:
             cscore = cscore + jnp.take_along_axis(extras, idx_safe,
                                                   axis=1)
@@ -210,14 +319,25 @@ def route_step_jit(e2, masks_table, counts_table, T, W, ti, di, fb,
                          constant_values=NEG_INF)
             cidx = jnp.pad(cidx, ((0, 0), (0, R - k)))
         msel = masks_table[fi]
-        blend_f = W @ emb.T
+        if quant:
+            acc_f = jax.lax.dot_general(
+                w8, e8e, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            blend_f = acc_f.astype(jnp.float32) * (ws * ese[None, :])
+        else:
+            blend_f = W @ emb.T
         if extras is not None:
             blend_f = blend_f + extras
         zf = jnp.where(hp, NEG_INF,
                        jnp.where(msel, blend_f, NEG_INF))
         fv, fidx = jax.lax.top_k(zf, R)
         fidx_safe = jnp.where(fv > NEG_INF, fidx, 0)
-        sim_f = (qn * embn[fidx_safe[:, 0]]).sum(axis=1)
+        if quant:
+            f0 = fidx_safe[:, 0]
+            sim_f = (qn * e8n[f0].astype(jnp.float32)).sum(axis=1) \
+                * esn[f0]
+        else:
+            sim_f = (qn * embn[fidx_safe[:, 0]]).sum(axis=1)
         cand_score = jnp.where(hp, cs, fv)
         cand_idx = jnp.where(hp, cidx, fidx_safe).astype(jnp.int32)
     else:
@@ -228,9 +348,19 @@ def route_step_jit(e2, masks_table, counts_table, T, W, ti, di, fb,
         # serve the kNN and the whole fallback ladder together
         zi = jnp.where(has_primary, ci, fi)
         zmask = bar(masks_table[zi])                      # (B, Np)
-        xsel = jnp.concatenate(
-            [jnp.where(hp, qn, 0.0), jnp.where(hp, 0.0, W)], axis=1)
-        zsrc = xsel @ e2.T                                # (B, Np)
+        if quant:
+            xsel = jnp.concatenate(
+                [jnp.where(hp, q8, 0), jnp.where(hp, 0, w8)], axis=1)
+            acc = jax.lax.dot_general(
+                xsel, e2, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32)         # (B, Np)
+            rscale = jnp.where(hp, qs, ws)                # (B, 1)
+            cscale = jnp.where(hp, esn[None, :], ese[None, :])
+            zsrc = acc.astype(jnp.float32) * (rscale * cscale)
+        else:
+            xsel = jnp.concatenate(
+                [jnp.where(hp, qn, 0.0), jnp.where(hp, 0.0, W)], axis=1)
+            zsrc = xsel @ e2.T                            # (B, Np)
         if extras is not None:      # blend terms join fallback rows
             zsrc = zsrc + jnp.where(hp, 0.0, 1.0) * extras
         z = bar(jnp.where(zmask, zsrc, NEG_INF))
@@ -240,7 +370,10 @@ def route_step_jit(e2, masks_table, counts_table, T, W, ti, di, fb,
         # primary candidates = the first k cosine-ranked positions;
         # their blended scores (computed at the k columns only, like
         # the staged gather) re-rank them in-program
-        cscore = jnp.einsum("bm,brm->br", W, emb[idx_safe])
+        if quant:
+            cscore = _q8_cscore(w8, ws, e8e[idx_safe], ese[idx_safe])
+        else:
+            cscore = jnp.einsum("bm,brm->br", W, emb[idx_safe])
         if extras is not None:
             cscore = cscore + jnp.take_along_axis(extras, idx_safe,
                                                   axis=1)
@@ -248,9 +381,325 @@ def route_step_jit(e2, masks_table, counts_table, T, W, ti, di, fb,
         cs, pos = jax.lax.top_k(cscore, R)
         cidx = jnp.take_along_axis(idx_safe, pos, axis=1)
         sim_p = jnp.take_along_axis(vals, pos[:, :1], axis=1)[:, 0]
-        sim_f = (qn * embn[idx_safe[:, 0]]).sum(axis=1)
+        if quant:
+            f0 = idx_safe[:, 0]
+            sim_f = (qn * e8n[f0].astype(jnp.float32)).sum(axis=1) \
+                * esn[f0]
+        else:
+            sim_f = (qn * embn[idx_safe[:, 0]]).sum(axis=1)
         cand_score = jnp.where(hp, cs, vals)
         cand_idx = jnp.where(hp, cidx, idx_safe).astype(jnp.int32)
+
+    cand_idx = jnp.where(jnp.isfinite(cand_score), cand_idx, -1)
+    nf = jnp.minimum(c_wide, k).astype(jnp.int32)
+    return {
+        "model_idx": cand_idx[:, 0],
+        "score": cand_score[:, 0],
+        "stage": jnp.where(has_primary, 0, stage_f).astype(jnp.int32),
+        "similarity": jnp.where(has_primary, sim_p, sim_f),
+        "cand_idx": cand_idx,
+        "cand_score": cand_score,
+        "n_filtered": jnp.where(has_primary, nf, 0).astype(jnp.int32),
+        "n_candidates": jnp.where(has_primary, nf,
+                                  counts_table[fi]).astype(jnp.int32),
+    }
+
+
+# ----------------------------------------------------------------------
+# IVF-pruned program: coarse centroid probe + packed-cell fine scan
+# ----------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "r", "n_tt", "n_dm", "nprobe", "cap",
+                     "has_fb", "has_ad", "has_load", "quant"))
+def route_step_ivf_jit(e2, e2s, masks_table, counts_table, orig, cent,
+                       T, W, ti, di, fb, theta, ainv_flat, lpen,
+                       params, *, k: int, r: int, n_tt: int, n_dm: int,
+                       nprobe: int, cap: int, has_fb: bool,
+                       has_ad: bool, has_load: bool,
+                       quant: bool = False):
+    """IVF-pruned fused routing step over a CELL-PACKED catalog.
+
+    ``ops.py`` permutes the catalog into contiguous equal-capacity
+    cell blocks (``cap`` slots per cell, dead slots marked by
+    ``orig < 0``); every catalog-shaped operand (e2/e2s, mask table
+    columns, fb/theta/ainv/lpen) arrives in PACKED order, while
+    ``counts_table`` keeps the TRUE full-catalog counts so the ladder
+    semantics are untouched.  ``orig`` (Npk,) maps packed slots back
+    to original catalog rows for the outputs; ``cent`` (C, M) is the
+    unit-row centroid table.
+
+    In-program, per query: rank all C centroids against the unit task
+    vector, take the top-``nprobe`` cells, gather ONLY those cells'
+    ``nprobe * cap`` packed slots, and run the mask-fused kNN + blend
+    re-rank on the gathered sub-catalog — O(nprobe * cap) scan work
+    instead of O(N).  Two escape hatches keep the ladder total:
+    rows with an empty filter mask walk the usual fallback rungs, and
+    rows whose PROBED cells miss every filter match re-score the
+    exact full-mask blend (the widened-kNN rung, stage 1) — both
+    inside one ``lax.cond`` whose full-catalog branch only executes
+    when some row needs it.  Recall@k versus the exhaustive program
+    is the ``nprobe`` knob; ``nprobe >= C`` is exhaustive.
+    """
+    B = T.shape[0]
+    Npk = orig.shape[0]
+    M = T.shape[1]
+    C = cent.shape[0]
+    Pn = min(nprobe, C)
+    R = max(k, r)
+    J = Pn * cap
+
+    qn = T / (jnp.linalg.norm(T, axis=1, keepdims=True) + 1e-9)
+    ci, c_wide, has_primary, fi, stage_f = _ladder(
+        counts_table, ti, di, n_tt, n_dm)
+    if quant:
+        e8n, esn, e8e, ese = _quant_operands(e2, e2s, M)
+        q8, qs = quantize_rows(qn)
+        w8, ws = quantize_rows(W)
+
+    # ---- coarse: rank centroids, select cells, gather their slots
+    _, cells = jax.lax.top_k(qn @ cent.T, Pn)             # (B, Pn)
+    gidx = (cells[:, :, None] * cap
+            + jnp.arange(cap)[None, None, :]).reshape(B, J)
+    valid = orig[gidx] >= 0                               # (B, J)
+    mrow = masks_table[ci[:, None], gidx]                 # (B, J)
+
+    # ---- fine: mask-fused kNN over the gathered sub-catalog only
+    if quant:
+        acc = jnp.einsum("bm,bjm->bj", q8.astype(jnp.int32),
+                         e8n[gidx].astype(jnp.int32))
+        sims = acc.astype(jnp.float32) * (qs * esn[gidx])
+    else:
+        sims = jnp.einsum("bm,bjm->bj", qn, e2[:, :M][gidx])
+    z1 = jnp.where(mrow & valid, sims, NEG_INF)
+    if J < k:
+        z1 = jnp.pad(z1, ((0, 0), (0, k - J)), constant_values=NEG_INF)
+        gidx = jnp.pad(gidx, ((0, 0), (0, k - J)))
+    vals, pos = jax.lax.top_k(z1, k)                      # (B, k)
+    finite = vals > NEG_INF
+    pidx = jnp.take_along_axis(gidx, pos, axis=1)         # packed rows
+    pidx_safe = jnp.where(finite, pidx, 0)
+    has_knn = finite.any(axis=1)
+    nf = finite.sum(axis=1).astype(jnp.int32)
+
+    # ---- candidate re-rank at the k columns (gather-style extras)
+    if quant:
+        cscore = _q8_cscore(w8, ws, e8e[pidx_safe], ese[pidx_safe])
+    else:
+        cscore = jnp.einsum("bm,bkm->bk", W, e2[:, M:][pidx_safe])
+    if has_fb:
+        cscore = cscore + params[0] * jnp.take_along_axis(
+            fb, pidx_safe, axis=1)
+    if has_ad:
+        ctx = jnp.concatenate([T, jnp.ones((B, 1), jnp.float32)],
+                              axis=1)
+        mean = jnp.einsum("bd,bkd->bk", ctx, theta[pidx_safe])
+        xx = (ctx[:, :, None] * ctx[:, None, :]).reshape(B, -1)
+        var = jnp.einsum("bd,bkd->bk", xx, ainv_flat[pidx_safe])
+        cscore = cscore + params[1] * (
+            mean + params[2] * jnp.sqrt(jnp.maximum(var, 0.0)))
+    if has_load:
+        cscore = cscore - lpen[pidx_safe]
+    cscore = jnp.where(finite, cscore, NEG_INF)
+    cs, cpos = jax.lax.top_k(cscore, k)
+    cidx_pk = jnp.take_along_axis(pidx_safe, cpos, axis=1)
+    sim_p = jnp.take_along_axis(vals, cpos[:, :1], axis=1)[:, 0]
+    if R > k:
+        cs = jnp.pad(cs, ((0, 0), (0, R - k)), constant_values=NEG_INF)
+        cidx_pk = jnp.pad(cidx_pk, ((0, 0), (0, R - k)))
+
+    # ---- escape hatch: count-0 ladder rows AND pruned-missed rows
+    # (non-empty filter, no probed hit -> exact widened-kNN re-score).
+    # One cond: the O(B, Npk) branch only runs when some row needs it.
+    fsel = jnp.where(has_primary, ci, fi)
+    fstage = jnp.where(has_primary, 1, stage_f).astype(jnp.int32)
+    need = ~has_knn
+
+    def _fallback(_):
+        if quant:
+            acc_f = jax.lax.dot_general(
+                w8, e8e, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            blend = acc_f.astype(jnp.float32) * (ws * ese[None, :])
+        else:
+            blend = W @ e2[:, M:].T
+        extras = _extras_matrix(T, fb, theta, ainv_flat, lpen, params,
+                                B, Npk, has_fb=has_fb, has_ad=has_ad,
+                                has_load=has_load)
+        if extras is not None:
+            blend = blend + extras
+        msel = masks_table[fsel]
+        zf = jnp.where(need[:, None] & msel & (orig >= 0)[None, :],
+                       blend, NEG_INF)
+        fv, fpi = jax.lax.top_k(zf, R)
+        fpi_safe = jnp.where(fv > NEG_INF, fpi, 0)
+        if quant:
+            f0 = fpi_safe[:, 0]
+            fcos = (qn * e8n[f0].astype(jnp.float32)).sum(axis=1) \
+                * esn[f0]
+        else:
+            fcos = (qn * e2[fpi_safe[:, 0], :M]).sum(axis=1)
+        return fv, fpi_safe, fcos
+
+    def _no_fallback(_):
+        return (jnp.full((B, R), NEG_INF, jnp.float32),
+                jnp.zeros((B, R), jnp.int32),
+                jnp.zeros((B,), jnp.float32))
+
+    fv, fpi, fcos = jax.lax.cond(need.any(), _fallback, _no_fallback,
+                                 operand=None)
+
+    hk = has_knn[:, None]
+    cand_score = jnp.where(hk, cs, fv)
+    cand_pk = jnp.where(hk, cidx_pk, fpi)
+    cand_idx = jnp.where(jnp.isfinite(cand_score), orig[cand_pk],
+                         -1).astype(jnp.int32)
+    return {
+        "model_idx": cand_idx[:, 0],
+        "score": cand_score[:, 0],
+        "stage": jnp.where(has_knn, 0, fstage).astype(jnp.int32),
+        "similarity": jnp.where(has_knn, sim_p, fcos),
+        "cand_idx": cand_idx,
+        "cand_score": cand_score,
+        "n_filtered": jnp.where(has_knn, nf, 0).astype(jnp.int32),
+        "n_candidates": jnp.where(has_knn, nf,
+                                  counts_table[fsel]).astype(jnp.int32),
+    }
+
+
+# ----------------------------------------------------------------------
+# sharded program: shard_map over the catalog axis + merge_topk tree
+# ----------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "k", "r", "n_tt", "n_dm",
+                     "has_fb", "has_ad", "has_load", "quant"))
+def route_step_sharded_jit(e2, e2s, masks_table, counts_table, T, W,
+                           ti, di, fb, theta, ainv_flat, lpen, params,
+                           *, mesh, axis: str, k: int, r: int,
+                           n_tt: int, n_dm: int, has_fb: bool,
+                           has_ad: bool, has_load: bool,
+                           quant: bool = False):
+    """Cross-device fused routing step: the catalog axis of every
+    (.., N) operand is sharded over ``mesh[axis]``; the batch axis is
+    replicated.  STILL one dispatch per routed batch — the collective
+    lives inside the one jitted program.
+
+    Per shard (``shard_map`` body): the SAME block-diagonal local scan
+    as the dense jnp program (quantized when ``quant``) over the
+    shard's n_loc columns, a local exact top-R, then per-lane payloads
+    computed LOCALLY while the shard still owns its catalog columns —
+    global index (shard offset + local position), the candidate blend
+    score, and the lane's cosine.  An ``all_gather`` of the sorted
+    (B, R) carries feeds ``tree_merge_topk`` — PR 5's bitonic
+    ``merge_topk`` applied as an allreduce-style pairwise tree, ties
+    folding toward the lowest shard — so the merged lanes are exactly
+    the single-device program's lanes, and the replicated finalize
+    (candidate re-rank, fallback select, output masks) never touches
+    catalog-sharded data again.  fp32 results are bit-identical to
+    ``route_step_jit`` on untied scores; quantized results are
+    bitwise-reproducible outright (exact integer dots).
+
+    Shapes: identical to ``route_step_jit`` with Np divisible by
+    ``mesh.shape[axis] * 128`` (``ops.n_bucket_sharded``).
+    """
+    Np = e2.shape[0]
+    M = T.shape[1]
+    B = T.shape[0]
+    R = max(k, r)
+    bar = jax.lax.optimization_barrier
+
+    qn = T / (jnp.linalg.norm(T, axis=1, keepdims=True) + 1e-9)
+    ci, c_wide, has_primary, fi, stage_f = _ladder(
+        counts_table, ti, di, n_tt, n_dm)
+    hp = has_primary[:, None]
+    zi = jnp.where(has_primary, ci, fi)
+
+    def _shard(e2_l, e2s_l, masks_l, fb_l, th_l, ai_l, lp_l, T, qn,
+               W, zi, hpv, params):
+        n_loc = e2_l.shape[0]
+        hp = hpv[:, None]
+        off = (jax.lax.axis_index(axis) * n_loc).astype(jnp.int32)
+        extras = _extras_matrix(T, fb_l, th_l, ai_l, lp_l, params, B,
+                                n_loc, has_fb=has_fb, has_ad=has_ad,
+                                has_load=has_load)
+        zmask = bar(masks_l[zi])                          # (B, n_loc)
+        if quant:
+            e8n, esn, e8e, ese = _quant_operands(e2_l, e2s_l, M)
+            q8, qs = quantize_rows(qn)
+            w8, ws = quantize_rows(W)
+            xsel = jnp.concatenate(
+                [jnp.where(hp, q8, 0), jnp.where(hp, 0, w8)], axis=1)
+            acc = jax.lax.dot_general(
+                xsel, e2_l, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            rscale = jnp.where(hp, qs, ws)
+            cscale = jnp.where(hp, esn[None, :], ese[None, :])
+            zsrc = acc.astype(jnp.float32) * (rscale * cscale)
+        else:
+            embn_l = e2_l[:, :M]
+            emb_l = e2_l[:, M:]
+            xsel = jnp.concatenate(
+                [jnp.where(hp, qn, 0.0), jnp.where(hp, 0.0, W)],
+                axis=1)
+            zsrc = xsel @ e2_l.T
+        if extras is not None:
+            zsrc = zsrc + jnp.where(hp, 0.0, 1.0) * extras
+        z = bar(jnp.where(zmask, zsrc, NEG_INF))
+        # NOTE: no barrier around the top_k here — XLA:CPU's
+        # TopkDecomposer aborts on an opt-barrier between a TopK and
+        # its users inside an SPMD-partitioned computation
+        vals, pos = _hier_topk(z, R)                      # local top-R
+        finite = vals > NEG_INF
+        pos_safe = jnp.where(finite, pos, 0)
+        gidx = jnp.where(finite, off + pos, -1)
+        # per-lane payloads, computed while the columns are local:
+        # candidate blend score + lane cosine (the finalize gathers
+        # are impossible post-merge — no shard owns the whole catalog)
+        if quant:
+            csc = _q8_cscore(w8, ws, e8e[pos_safe], ese[pos_safe])
+            cos = (qn[:, None, :] * e8n[pos_safe].astype(jnp.float32)
+                   ).sum(axis=-1) * esn[pos_safe]
+        else:
+            csc = jnp.einsum("bm,brm->br", W, emb_l[pos_safe])
+            cos = (qn[:, None, :] * embn_l[pos_safe]).sum(axis=-1)
+        if extras is not None:
+            csc = csc + jnp.take_along_axis(extras, pos_safe, axis=1)
+        # ---- cross-shard reduction: pairwise merge_topk tree over
+        # the gathered sorted carries (ties -> lowest shard, matching
+        # the single-device top_k contract)
+        g = jax.lax.all_gather((vals, gidx, csc, cos), axis)
+        mv, (mi, mc, ms) = tree_merge_topk(g[0], (g[1], g[2], g[3]))
+        return mv, mi, mc, ms
+
+    vals, idx, csc, cos = shard_map(
+        _shard, mesh=mesh,
+        in_specs=(P(axis, None),
+                  P(axis, None) if quant else P(None, None),
+                  P(None, axis),
+                  P(None, axis) if has_fb else P(None, None),
+                  P(axis, None) if has_ad else P(None, None),
+                  P(axis, None) if has_ad else P(None, None),
+                  P(axis) if has_load else P(None),
+                  P(), P(), P(), P(), P(), P()),
+        out_specs=(P(), P(), P(), P()),
+        check_rep=False,
+    )(e2, e2s, masks_table, fb, theta, ainv_flat, lpen,
+      T, qn, W, zi, has_primary, params)
+
+    # ---- replicated finalize: identical to the dense jnp tail
+    kmask = (jnp.arange(R) < k)[None, :]
+    finite = vals > NEG_INF
+    idx_safe = jnp.where(finite, idx, 0)
+    cscore = jnp.where(finite & kmask, csc, NEG_INF)
+    cs, pos = jax.lax.top_k(cscore, R)
+    cidx = jnp.take_along_axis(idx_safe, pos, axis=1)
+    sim_p = jnp.take_along_axis(vals, pos[:, :1], axis=1)[:, 0]
+    sim_f = cos[:, 0]
+    cand_score = jnp.where(hp, cs, vals)
+    cand_idx = jnp.where(hp, cidx, idx_safe).astype(jnp.int32)
 
     cand_idx = jnp.where(jnp.isfinite(cand_score), cand_idx, -1)
     nf = jnp.minimum(c_wide, k).astype(jnp.int32)

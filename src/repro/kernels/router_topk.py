@@ -62,6 +62,57 @@ def block_topk(scores, col_idx, k: int):
     return v, i
 
 
+def _pad_const(p):
+    """Pad filler per payload dtype: -1 for integer lanes (index
+    semantics), 0 for float side-payloads (masked by -inf values)."""
+    return -1 if jnp.issubdtype(p.dtype, jnp.integer) else 0
+
+
+def merge_topk_multi(av, bv, a_payloads, b_payloads):
+    """Top-k union of two sorted-descending (Q, k) carries, with any
+    number of payload columns riding along every compare-exchange.
+
+    The values follow the same bitonic structure as ``merge_topk``
+    (one reversal exchange keeps the k largest of the 2k, then
+    log2(k) merge stages sort descending); each payload in
+    ``a_payloads``/``b_payloads`` (tuples of (Q, k) arrays — indices,
+    per-lane blend scores, cosines, ...) takes the exact same keep
+    mask as the values, so lanes never mix payloads.  Ties keep the
+    ``a`` element — chaining merges in shard order therefore resolves
+    cross-shard ties toward the LOWEST shard, matching ``lax.top_k``'s
+    lowest-index-first contract on a concatenated catalog.  Returns
+    (vals (Q, k), tuple of merged payloads).
+    """
+    assert len(a_payloads) == len(b_payloads)
+    k = av.shape[1]
+    kp = _pow2_ge(k)
+    a_pl, b_pl = list(a_payloads), list(b_payloads)
+    if kp != k:
+        pad = ((0, 0), (0, kp - k))
+        av = jnp.pad(av, pad, constant_values=NEG_INF)
+        bv = jnp.pad(bv, pad, constant_values=NEG_INF)
+        a_pl = [jnp.pad(p, pad, constant_values=_pad_const(p))
+                for p in a_pl]
+        b_pl = [jnp.pad(p, pad, constant_values=_pad_const(p))
+                for p in b_pl]
+    rv = bv[:, ::-1]
+    r_pl = [p[:, ::-1] for p in b_pl]
+    keep_a = av >= rv
+    v = jnp.where(keep_a, av, rv)
+    pl = [jnp.where(keep_a, pa, pr) for pa, pr in zip(a_pl, r_pl)]
+    # v is bitonic; sort descending with a standard bitonic merger
+    s = kp // 2
+    while s >= 1:
+        pos = jnp.arange(kp)
+        pv = v[:, pos ^ s]
+        first = ((pos & s) == 0)[None, :]       # lower index of each pair
+        keep = jnp.where(first, v >= pv, v <= pv)
+        pl = [jnp.where(keep, p, p[:, pos ^ s]) for p in pl]
+        v = jnp.where(keep, v, pv)
+        s //= 2
+    return v[:, :k], tuple(p[:, :k] for p in pl)
+
+
 def merge_topk(av, ai, bv, bi):
     """Top-k of the union of two sorted-descending (Q, k) carries.
 
@@ -73,31 +124,37 @@ def merge_topk(av, ai, bv, bi):
     element, and within the sort both sides of an equal pair keep
     their own payload, so no element is ever duplicated or dropped.
     Inputs need not be power-of-two wide (padded internally).
+    One-payload wrapper over ``merge_topk_multi`` (shared with the
+    cross-shard tree reduction in ``route_step``).
     """
-    k = av.shape[1]
-    kp = _pow2_ge(k)
-    if kp != k:
-        pad = ((0, 0), (0, kp - k))
-        av = jnp.pad(av, pad, constant_values=NEG_INF)
-        ai = jnp.pad(ai, pad, constant_values=-1)
-        bv = jnp.pad(bv, pad, constant_values=NEG_INF)
-        bi = jnp.pad(bi, pad, constant_values=-1)
-    rv, ri = bv[:, ::-1], bi[:, ::-1]
-    keep_a = av >= rv
-    v = jnp.where(keep_a, av, rv)
-    i = jnp.where(keep_a, ai, ri)
-    # v is bitonic; sort descending with a standard bitonic merger
-    s = kp // 2
-    while s >= 1:
-        pos = jnp.arange(kp)
-        pv = v[:, pos ^ s]
-        pi = i[:, pos ^ s]
-        first = ((pos & s) == 0)[None, :]       # lower index of each pair
-        keep = jnp.where(first, v >= pv, v <= pv)
-        v = jnp.where(keep, v, pv)
-        i = jnp.where(keep, i, pi)
-        s //= 2
-    return v[:, :k], i[:, :k]
+    v, (i,) = merge_topk_multi(av, bv, (ai,), (bi,))
+    return v, i
+
+
+def tree_merge_topk(vals, payloads):
+    """Pairwise-tree reduction of S sorted-descending per-shard
+    carries into ONE global (Q, k) top-k — the cross-shard step of the
+    sharded ``route_step``.
+
+    vals (S, Q, k) stacked per-shard top-k values (shard-major, e.g.
+    from ``lax.all_gather``); payloads: tuple of (S, Q, k) arrays.
+    Merges adjacent pairs per level (log2(S) levels of
+    ``merge_topk_multi``), always folding the HIGHER shard into the
+    lower so ties resolve toward the lowest shard — the same winner a
+    single-device ``top_k`` over the concatenated catalog picks.
+    Returns (vals (Q, k), tuple of payloads (Q, k)).
+    """
+    S = vals.shape[0]
+    parts = [(vals[s], tuple(p[s] for p in payloads)) for s in range(S)]
+    while len(parts) > 1:
+        nxt = []
+        for i in range(0, len(parts) - 1, 2):
+            (av, apl), (bv, bpl) = parts[i], parts[i + 1]
+            nxt.append(merge_topk_multi(av, bv, apl, bpl))
+        if len(parts) % 2:
+            nxt.append(parts[-1])
+        parts = nxt
+    return parts[0]
 
 
 def _router_topk_kernel(q_ref, emb_ref, mask_ref, bias_ref, vals_ref,
@@ -192,4 +249,115 @@ def router_topk_pallas(qn: jnp.ndarray, embn: jnp.ndarray, mask: jnp.ndarray,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qn, embn, mask, bias)
+    return vals, idx
+
+
+# ----------------------------------------------------------------------
+# int8 variant: dequant-free int32 accumulate, fp32 rescale at the
+# top-k boundary
+# ----------------------------------------------------------------------
+
+def _router_topk_q8_kernel(q_ref, emb_ref, qs_ref, es_ref, mask_ref,
+                           bias_ref, vals_ref, idx_ref, sv_ref, si_ref,
+                           *, k: int, blk_n: int, min_score: float):
+    jn = pl.program_id(1)
+    nn = pl.num_programs(1)
+
+    @pl.when(jn == 0)
+    def _init():
+        sv_ref[...] = jnp.full_like(sv_ref, NEG_INF)
+        si_ref[...] = jnp.full_like(si_ref, -1)
+
+    q8 = q_ref[...]                                         # (BLK_Q, D) i8
+    e8 = emb_ref[...]                                       # (BLK_N, D) i8
+    # the scan matmul accumulates in int32 — no dequantized fp32 copy
+    # of the catalog block ever materializes; the only fp32 work per
+    # (BLK_Q, BLK_N) tile is ONE elementwise rescale by the per-row
+    # scale outer product, right at the top-k boundary
+    acc = jax.lax.dot_general(
+        q8, e8, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)                   # (BLK_Q, BLK_N)
+    scores = acc.astype(jnp.float32) * (qs_ref[...] * es_ref[...])
+    scores = jnp.where(mask_ref[...] > 0, scores + bias_ref[...], NEG_INF)
+    if min_score != NEG_INF:
+        scores = jnp.where(scores >= min_score, scores, NEG_INF)
+
+    col0 = jn * blk_n
+    col_idx = col0 + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+
+    bv, bi = block_topk(scores, col_idx, k)
+    new_v, new_i = merge_topk(sv_ref[...], si_ref[...], bv, bi)
+    sv_ref[...] = new_v
+    si_ref[...] = new_i
+
+    @pl.when(jn == nn - 1)
+    def _emit():
+        vals_ref[...] = sv_ref[...]
+        idx_ref[...] = si_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "blk_q", "blk_n",
+                                             "min_score", "interpret"))
+def router_topk_q8_pallas(q8: jnp.ndarray, e8: jnp.ndarray,
+                          qscale: jnp.ndarray, escale: jnp.ndarray,
+                          mask: jnp.ndarray, bias: jnp.ndarray, k: int,
+                          *, blk_q: int = 8, blk_n: int = 512,
+                          min_score: float = NEG_INF,
+                          interpret: bool = True):
+    """int8-quantized ``router_topk_pallas``.
+
+    q8 (Q, D) / e8 (N, D) int8 rows quantized symmetrically per row;
+    qscale (Q, 1) / escale (1, N) f32 per-row scales such that the
+    fp32 score of (q, n) is ``(q8[q] . e8[n]) * qscale[q] * escale[n]``.
+    The per-block matmul runs on the int8 operands with an int32
+    accumulator (``preferred_element_type``) — the catalog stream is
+    1/4 the bytes of the fp32 kernel, and on a memory-bandwidth-bound
+    scan that is the speedup (see benchmarks/roofline.py) — and the
+    fp32 rescale happens once per tile at the top-k boundary.
+
+    NOTE on tiling: the TPU int8 minimum tile is (32, 128); compiled
+    (non-interpret) runs should use blk_q % 32 == 0.  The interpret
+    path (CPU CI) accepts the fp32 default blk_q=8.
+
+    Same shape contract and returns as ``router_topk_pallas``.
+    """
+    Q, D = q8.shape
+    N = e8.shape[0]
+    assert q8.dtype == jnp.int8 and e8.dtype == jnp.int8, (q8.dtype,
+                                                          e8.dtype)
+    assert Q % blk_q == 0 and N % blk_n == 0, (Q, N, blk_q, blk_n)
+    assert qscale.shape == (Q, 1) and escale.shape == (1, N), (
+        qscale.shape, escale.shape)
+    assert mask.shape == (Q, N) and bias.shape == (1, N)
+    grid = (Q // blk_q, N // blk_n)
+
+    kernel = functools.partial(_router_topk_q8_kernel, k=k, blk_n=blk_n,
+                               min_score=min_score)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_q, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((blk_n, D), lambda i, j: (j, 0)),
+            pl.BlockSpec((blk_q, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, blk_n), lambda i, j: (0, j)),
+            pl.BlockSpec((blk_q, blk_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, blk_n), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((blk_q, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, k), jnp.float32),
+            pltpu.VMEM((blk_q, k), jnp.int32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(q8, e8, qscale, escale, mask, bias)
     return vals, idx

@@ -22,6 +22,7 @@ import re
 import sys
 import time
 import traceback
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -95,6 +96,11 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
     mesh = make_production_mesh(multi_pod=multi_pod)
     spec = S.input_specs(cfg, shape_name)
     t0 = time.time()
+    # Snapshot the silent-replication counter around spec construction:
+    # every time rules.maybe() falls back to replication because a named
+    # axis is absent from this mesh, a tensor the config claims is
+    # sharded actually materializes N full copies.  That must be loud.
+    repl0 = R.silent_replication_count()
 
     with jax.set_mesh(mesh):
         params_shape = jax.eval_shape(
@@ -126,6 +132,15 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
+    silent_repl = R.silent_replication_count() - repl0
+    if silent_repl:
+        warnings.warn(
+            f"[{arch}/{shape_name}] sharding.rules.maybe() silently "
+            f"replicated {silent_repl} spec axis(es): a tensor the "
+            f"rules name as sharded has no matching mesh axis and is "
+            f"stored as {mesh.devices.size} full copies",
+            stacklevel=2)
+
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
     coll = collective_bytes(compiled.as_text())
@@ -147,6 +162,7 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
         "flops": _get(cost, "flops"),
         "bytes_accessed": _get(cost, "bytes accessed"),
         "collective_bytes": coll,
+        "silent_replications": int(silent_repl),
         "memory": {
             "argument_size_bytes": getattr(mem, "argument_size_in_bytes", 0),
             "output_size_bytes": getattr(mem, "output_size_in_bytes", 0),

@@ -19,3 +19,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """1-device mesh for CPU smoke/serving runs."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_routing_mesh(n_devices: int | None = None):
+    """1-D mesh for the mega-catalog sharded ``route_step``: the
+    catalog (N) axis of every routing operand shards over its single
+    ``"catalog"`` axis (``sharding.rules.CATALOG_AXIS``); queries stay
+    replicated.  Defaults to all visible devices — on a CPU CI box set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (or more)
+    to exercise the cross-device program."""
+    from repro.sharding.rules import CATALOG_AXIS
+    nd = jax.device_count() if n_devices is None else int(n_devices)
+    assert 1 <= nd <= jax.device_count(), (nd, jax.device_count())
+    return jax.make_mesh((nd,), (CATALOG_AXIS,))

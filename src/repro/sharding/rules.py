@@ -35,9 +35,70 @@ def data_axes(mesh: Mesh):
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
 
+# silent-replication audit: ``maybe`` falling back to None is usually
+# intentional (1-D norms, odd vocab tails) but can silently hide a
+# mis-sized mesh axis that replicates a tensor meant to be sharded —
+# at mega-catalog sizes that is a multi-GB surprise per device.  Every
+# fallback bumps this counter; ``launch/dryrun.py`` snapshots it
+# around spec construction, warns, and records it into Telemetry.
+_SILENT_REPLICATIONS = {"count": 0}
+
+
+def silent_replication_count() -> int:
+    """Total ``maybe`` calls that silently replicated so far."""
+    return _SILENT_REPLICATIONS["count"]
+
+
+def reset_silent_replication_count() -> None:
+    _SILENT_REPLICATIONS["count"] = 0
+
+
 def maybe(mesh: Mesh, dim: int, axis):
-    """axis if dim divides evenly over it, else None (replicate)."""
-    return axis if dim % axis_size(mesh, axis) == 0 else None
+    """axis if dim divides evenly over it, else None (replicate).
+
+    The replicate fallback is counted in
+    ``silent_replication_count()`` so dry-runs can surface layouts
+    that quietly lost their sharding to a non-dividing dim.
+    """
+    if dim % axis_size(mesh, axis) == 0:
+        return axis
+    _SILENT_REPLICATIONS["count"] += 1
+    return None
+
+
+# ----------------------------------------------------------------------
+# routing-catalog specs (mega-catalog route_step)
+# ----------------------------------------------------------------------
+
+# the 1-D routing mesh axis the catalog (N) dimension shards over —
+# built by ``launch.mesh.make_routing_mesh``
+CATALOG_AXIS = "catalog"
+
+
+def route_step_specs(mesh: Mesh) -> Dict[str, P]:
+    """PartitionSpecs for the sharded fused route step's operands.
+
+    Every (.., N) operand splits its catalog axis over
+    ``CATALOG_AXIS``; per-query operands (T/W/ti/di), the ladder
+    counts table and the scalar params are replicated — the batch is
+    small next to the catalog, and replicating it makes the per-shard
+    scan embarrassingly parallel with ONE cross-shard top-k merge
+    tree as the only collective (kernels/route_step.py).
+    """
+    assert CATALOG_AXIS in mesh.axis_names, mesh.axis_names
+    c = CATALOG_AXIS
+    return {
+        "e2": P(c, None),               # catalog block rows
+        "e2s": P(c, None),              # int8 per-row scales
+        "masks_table": P(None, c),      # mask rows x catalog cols
+        "counts_table": P(),            # ladder counts: replicated
+        "fb": P(None, c),               # feedback bias (B, N)
+        "theta": P(c, None),            # bandit posterior rows
+        "ainv_flat": P(c, None),
+        "lpen": P(c),                   # load penalty (N,)
+        "query": P(),                   # T/W/ti/di: replicated
+        "params": P(),
+    }
 
 
 # ----------------------------------------------------------------------

@@ -1,3 +1,14 @@
+import os
+
+# Multi-device host platform BEFORE anything imports jax (pattern from
+# launch/dryrun.py): the sharded mega-catalog route-step tests need
+# >= 4 CPU devices.  Respect an explicit caller override.
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4").strip()
+
 import numpy as np
 import pytest
 

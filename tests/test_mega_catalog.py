@@ -1,0 +1,403 @@
+"""Mega-catalog serving modes of the fused route step: int8 quantized
+scan, IVF two-level pruned search, catalog-sharded cross-device kNN —
+plus the padded-constant cache regression.
+
+Recall methodology: at d=8 the cosine gap between neighboring catalog
+entries sits below int8 resolution, so quantized recall is scored
+against the quantization error bound — a retrieved candidate whose
+EXACT score is within ``_eps_tol`` of the exact k-th best is a hit
+(same metric as ``benchmarks/router_scale.bench_mega``).  IVF recall
+(a pruning property, not a precision one) is scored exact-set.
+"""
+import gc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mres import build_ivf
+from repro.core.preferences import DOMAINS, METRICS, TASK_TYPES
+from repro.core.routing import RoutingEngine
+from repro.kernels import ops as K
+from repro.kernels import ref as R
+from repro.kernels.router_topk import tree_merge_topk
+from repro.launch.mesh import make_routing_mesh
+from tests.conftest import make_entry
+from tests.test_route_step import _random_problem, _ref_kwargs
+from tests.test_routing_batch import random_catalog, random_queries
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs 4 host devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+
+def _eps_tol(m: int) -> float:
+    """Worst-case |Δcosine| of symmetric int8 quantization of two unit
+    vectors (per-component error <= scale/2, scale <= 1/127)."""
+    return float(np.sqrt(m) / 127.0 + m / (2.0 * 127.0 ** 2))
+
+
+def _eps_recall(got, want, emb, T, tol) -> float:
+    """Fraction of retrieved candidates whose exact cosine is within
+    ``tol`` of the exact k-th best (stage-0 rows only)."""
+    embn = emb / (np.linalg.norm(emb, axis=1, keepdims=True) + 1e-9)
+    qn = T / (np.linalg.norm(T, axis=1, keepdims=True) + 1e-9)
+    num = den = 0
+    for b in range(T.shape[0]):
+        if want["stage"][b] != 0 or got["stage"][b] != 0:
+            continue
+        rrow = [int(x) for x in want["cand_idx"][b] if x >= 0]
+        trow = [int(x) for x in got["cand_idx"][b] if x >= 0]
+        if not rrow:
+            continue
+        ckth = float((embn[rrow] @ qn[b]).min())
+        ct = embn[trow] @ qn[b]
+        den += len(rrow)
+        num += min(len(rrow), int((ct >= ckth - tol).sum()))
+    return num / max(den, 1)
+
+
+def _exact_recall(got, want) -> float:
+    num = den = 0
+    for trow, rrow in zip(got["cand_idx"], want["cand_idx"]):
+        rset = {int(x) for x in rrow if x >= 0}
+        tset = {int(x) for x in trow if x >= 0}
+        den += len(rset)
+        num += len(rset & tset)
+    return num / max(den, 1)
+
+
+def _knn_problem(B, N, seed, *, clustered=False):
+    """A mask-free problem (every row passes every filter): pure kNN
+    precision stress, no fallback rows."""
+    rng = np.random.default_rng(seed)
+    M = len(METRICS)
+    if clustered:
+        # adversarial for quantization AND for IVF cell boundaries:
+        # tight families whose members differ by less than the int8
+        # step, centered on random directions
+        centers = rng.random((24, M))
+        emb = np.clip(centers[rng.integers(0, 24, N)]
+                      + rng.normal(0.0, 0.02, (N, M)), 0.0, 1.0)
+    else:
+        emb = rng.random((N, M))
+    emb = emb.astype(np.float32)
+    tt = np.ones((len(TASK_TYPES) + 1, N), bool)
+    dm = np.ones((len(DOMAINS) + 1, N), bool)
+    gmask = np.ones(N, bool)
+    T = rng.random((B, M)).astype(np.float32)
+    W = rng.random((B, M)).astype(np.float32)
+    ti = np.full(B, len(TASK_TYPES), np.int32)
+    di = np.full(B, len(DOMAINS), np.int32)
+    return emb, tt, dm, gmask, T, W, ti, di
+
+
+# ----------------------------------------------------------------------
+# int8 quantized scan
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,N,k", [(5, 64, 4), (9, 200, 8)])
+def test_quant_route_step_matches_ref_exact(B, N, k):
+    """Without extras the quantized blend is integer dot products plus
+    one f32 rescale — the fused program and the jnp oracle agree
+    BITWISE on every decision output."""
+    args, _ = _random_problem(B, N, seed=B * 100 + N, with_fb=False,
+                              with_ad=False, with_load=False)
+    r = min(max(5, k), N)
+    got = K.route_step(*args, k=k, r=r, quant=True)
+    want = R.route_step(*(jnp.asarray(a) for a in args), k, r, quant=True)
+    for key in ("model_idx", "stage", "cand_idx", "n_filtered",
+                "n_candidates"):
+        np.testing.assert_array_equal(got[key], np.asarray(want[key]),
+                                      err_msg=key)
+    for key in ("score", "similarity", "cand_score"):
+        np.testing.assert_allclose(got[key], np.asarray(want[key]),
+                                   rtol=2e-5, atol=2e-5, err_msg=key)
+
+
+def test_quant_route_step_matches_ref_with_extras():
+    """With feedback/bandit/load the fused path associates the f32
+    extras differently than the oracle (gather-then-add vs
+    add-then-gather) — scores agree to fp tolerance."""
+    args, kw = _random_problem(7, 150, seed=42)
+    got = K.route_step(*args, k=6, r=6, quant=True, **kw)
+    want = R.route_step(*(jnp.asarray(a) for a in args), 6, 6,
+                        quant=True, **_ref_kwargs(kw))
+    np.testing.assert_array_equal(got["stage"], np.asarray(want["stage"]))
+    np.testing.assert_allclose(got["cand_score"],
+                               np.asarray(want["cand_score"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("clustered", [False, True])
+def test_quant_recall_within_quantization_tolerance(clustered):
+    B, N, k = 16, 512, 8
+    args = _knn_problem(B, N, seed=11, clustered=clustered)
+    fp = K.route_step(*args, k=k, r=k)
+    q8 = K.route_step(*args, k=k, r=k, quant=True)
+    np.testing.assert_array_equal(fp["stage"], q8["stage"])
+    rec = _eps_recall(q8, fp, args[0], args[4], _eps_tol(len(METRICS)))
+    assert rec >= 0.99, f"int8 recall {rec} (clustered={clustered})"
+
+
+def test_quant_pallas_path_matches_jnp():
+    """use_pallas=True routes the quantized kNN through the int8
+    Pallas kernel (interpret mode) — decision-identical to the jnp
+    quantized path (both do exact int32-accumulated dots)."""
+    args, kw = _random_problem(9, 140, seed=8)
+    got_j = K.route_step(*args, k=5, r=5, quant=True, use_pallas=False,
+                         **kw)
+    got_p = K.route_step(*args, k=5, r=5, quant=True, use_pallas=True,
+                         **kw)
+    np.testing.assert_array_equal(got_j["model_idx"], got_p["model_idx"])
+    np.testing.assert_array_equal(got_j["stage"], got_p["stage"])
+    np.testing.assert_allclose(got_j["score"], got_p["score"],
+                               rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# IVF two-level pruned search
+# ----------------------------------------------------------------------
+
+def test_ivf_recall_sweep_vs_exhaustive():
+    """Exact-set recall vs the exhaustive scan is monotone in
+    ``nprobe`` (probed cell sets are nested) and reaches 1.0 at
+    nprobe = n_cells, where the pruned program IS exhaustive."""
+    B, N, C, k = 8, 1024, 32, 8
+    args = _knn_problem(B, N, seed=21, clustered=True)
+    ivf = build_ivf(args[0], C)
+    dense = K.route_step(*args, k=k, r=k)
+    recalls, eps_recalls = [], []
+    for nprobe in (1, 2, 4, 8, 16, C):
+        got = K.route_step(*args, k=k, r=k, ivf=ivf.as_tuple(),
+                           nprobe=nprobe)
+        recalls.append(_exact_recall(got, dense))
+        eps_recalls.append(_eps_recall(got, dense, args[0], args[4],
+                                       _eps_tol(len(METRICS))))
+    assert recalls == sorted(recalls), recalls
+    assert recalls[-1] == 1.0, recalls
+    # the modest default already clears the recall bar on clustered
+    # data under the near-tie tolerance (members of a tight family are
+    # routing-equivalent; exact-set recall only distinguishes them at
+    # wider nprobe, as the sweep above shows)
+    assert eps_recalls[3] >= 0.99, (recalls, eps_recalls)
+
+
+def test_ivf_exhaustive_nprobe_matches_dense_exactly():
+    B, N, C, k = 6, 300, 12, 5
+    args, kw = _random_problem(B, N, seed=17)
+    ivf = build_ivf(args[0], C)
+    dense = K.route_step(*args, k=k, r=k, **kw)
+    got = K.route_step(*args, k=k, r=k, ivf=ivf.as_tuple(), nprobe=C,
+                       **kw)
+    for key in ("model_idx", "stage", "cand_idx", "n_filtered",
+                "n_candidates"):
+        np.testing.assert_array_equal(got[key], dense[key], err_msg=key)
+    for key in ("score", "similarity", "cand_score"):
+        np.testing.assert_allclose(got[key], dense[key],
+                                   rtol=1e-5, atol=1e-5, err_msg=key)
+
+
+@pytest.mark.parametrize("nprobe", [2, 6])
+def test_ivf_matches_ref_oracle(nprobe):
+    """The packed-cell device program equals the plain-jnp IVF oracle
+    (same probed cells, same fallback ladder) on random masked
+    problems — including rows the pruning starves into fallback."""
+    B, N, C = 9, 257, 16
+    args, kw = _random_problem(B, N, seed=33)
+    ivf = build_ivf(args[0], C)
+    got = K.route_step(*args, k=6, r=6, ivf=ivf.as_tuple(),
+                       nprobe=nprobe, **kw)
+    want = R.route_step_ivf(*(jnp.asarray(a) for a in args), 6, 6,
+                            jnp.asarray(ivf.centroids),
+                            jnp.asarray(ivf.cell_of), nprobe,
+                            **_ref_kwargs(kw))
+    for key in ("model_idx", "stage", "cand_idx", "n_filtered",
+                "n_candidates"):
+        np.testing.assert_array_equal(got[key], np.asarray(want[key]),
+                                      err_msg=key)
+    np.testing.assert_allclose(got["cand_score"],
+                               np.asarray(want["cand_score"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mres_ivf_index_caching():
+    """ivf_index() is cached until a registration dirties the store,
+    and rebuilds for a different n_cells."""
+    mres = random_catalog(40, seed=5)
+    a = mres.ivf_index()
+    assert a is mres.ivf_index()
+    b = mres.ivf_index(n_cells=4)
+    assert b is not a and b.n_cells == 4
+    mres.register(make_entry("fresh", task_types=("chat",)))
+    c = mres.ivf_index()
+    assert c is not b
+    assert c.cell_of.shape == (41,)
+
+
+def test_engine_ivf_gating_and_parity():
+    """Below ``ivf_min_n`` the engine serves the dense program; at or
+    above it the pruned program kicks in and (at default nprobe on a
+    small catalog) stays decision-consistent with dense."""
+    mres = random_catalog(64, seed=19)
+    prefs, sigs = random_queries(6, seed=19)
+    dense = RoutingEngine(mres, knn_k=4).route_many_batch(prefs, sigs)
+    gated = RoutingEngine(mres, knn_k=4, ivf=True)       # 64 < 4096
+    assert gated.route_many_batch(prefs, sigs).models() == dense.models()
+    forced = RoutingEngine(mres, knn_k=4, ivf=True, ivf_min_n=1,
+                           nprobe=8)
+    out = forced.route_many_batch(prefs, sigs)
+    assert out.models() == dense.models()
+    np.testing.assert_array_equal(out.stage, dense.stage)
+
+
+# ----------------------------------------------------------------------
+# catalog-sharded cross-device program
+# ----------------------------------------------------------------------
+
+def test_tree_merge_topk_matches_full_sort():
+    """The payload-carrying pairwise merge tree (the cross-shard
+    reduction) equals a full sort of the concatenated per-shard
+    carries — for power-of-two and odd shard counts — and every
+    payload lane rides with its value."""
+    rng = np.random.default_rng(3)
+    for S in (2, 3, 4, 7):
+        Q, k = 4, 5
+        vals = -np.sort(-rng.integers(0, 9, (S, Q, k)).astype(np.float32),
+                        axis=2)
+        idx = np.arange(S * Q * k, dtype=np.int32).reshape(S, Q, k)
+        side = rng.random((S, Q, k)).astype(np.float32)
+        mv, (mi, ms) = tree_merge_topk(
+            jnp.asarray(vals), (jnp.asarray(idx), jnp.asarray(side)))
+        flatv = vals.transpose(1, 0, 2).reshape(Q, S * k)
+        want = -np.sort(-flatv, axis=1)[:, :k]
+        np.testing.assert_array_equal(np.asarray(mv), want, err_msg=f"S={S}")
+        flati = idx.transpose(1, 0, 2).reshape(Q, S * k)
+        flats = side.transpose(1, 0, 2).reshape(Q, S * k)
+        pairs = {(int(i), float(v), float(s))
+                 for i, v, s in zip(flati.ravel(), flatv.ravel(),
+                                    flats.ravel())}
+        for q in range(Q):
+            for i, v, s in zip(np.asarray(mi)[q], np.asarray(mv)[q],
+                               np.asarray(ms)[q]):
+                assert (int(i), float(v), float(s)) in pairs
+
+
+@needs_devices
+@pytest.mark.parametrize("B,N,k,flags", [
+    (1, 5, 3, (True, True, True)),       # catalog smaller than mesh
+    (9, 130, 8, (True, False, True)),
+    (16, 515, 4, (False, True, False)),  # past one sharded bucket
+    (33, 96, 2, (False, False, False)),
+])
+def test_sharded_route_step_bit_identical_to_dense(B, N, k, flags):
+    """The acceptance claim: fp32 sharded over 4 devices returns the
+    SAME bits as the single-device fused program — every output key,
+    including scores."""
+    args, kw = _random_problem(B, N, seed=B + N, with_fb=flags[0],
+                               with_ad=flags[1], with_load=flags[2])
+    r = min(max(5, k), N)
+    mesh = make_routing_mesh(4)
+    want = K.route_step(*args, k=k, r=r, **kw)
+    got = K.route_step(*args, k=k, r=r, mesh=mesh, **kw)
+    assert set(got) == set(want)
+    for key in sorted(want):
+        np.testing.assert_array_equal(got[key], want[key], err_msg=key)
+
+
+@needs_devices
+def test_sharded_quant_matches_dense_quant():
+    args, kw = _random_problem(11, 260, seed=51)
+    mesh = make_routing_mesh(4)
+    want = K.route_step(*args, k=6, r=6, quant=True, **kw)
+    got = K.route_step(*args, k=6, r=6, quant=True, mesh=mesh, **kw)
+    for key in ("model_idx", "stage", "cand_idx", "n_filtered",
+                "n_candidates"):
+        np.testing.assert_array_equal(got[key], want[key], err_msg=key)
+    for key in ("score", "similarity", "cand_score"):
+        np.testing.assert_allclose(got[key], want[key],
+                                   rtol=1e-5, atol=1e-5, err_msg=key)
+
+
+@needs_devices
+def test_sharded_engine_parity_and_zero_recompiles():
+    """Engine-level: a mesh-attached engine picks identical candidates
+    to the default engine, and its steady state keeps the fused
+    contract — one dispatch per batch, zero recompiles across mixed
+    batch sizes after warmup."""
+    mres = random_catalog(96, seed=13)
+    eng_d = RoutingEngine(mres, knn_k=8)
+    eng_s = RoutingEngine(mres, knn_k=8, mesh=make_routing_mesh(4))
+    prefs, sigs = random_queries(9, seed=13)
+    d = eng_d.route_many_batch(prefs, sigs)
+    s = eng_s.route_many_batch(prefs, sigs)
+    assert s.models() == d.models()
+    np.testing.assert_array_equal(s.cand_idx, d.cand_idx)
+    np.testing.assert_array_equal(s.cand_score, d.cand_score)
+
+    for b in (1, 5, 17):                           # warm the buckets
+        eng_s.route_many_batch(*random_queries(b, seed=b))
+    warm = K.route_step_stats()
+    replay = (3, 9, 1, 12, 17, 6)
+    for i, b in enumerate(replay):
+        eng_s.route_many_batch(*random_queries(b, seed=50 + i))
+    stats = K.route_step_stats()
+    assert stats["route_step_compiles"] == warm["route_step_compiles"], \
+        "sharded path recompiled after warmup"
+    assert stats["route_step_dispatches"] \
+        == warm["route_step_dispatches"] + len(replay)
+
+
+def test_n_bucket_sharded():
+    assert [K.n_bucket_sharded(n, 4) for n in (1, 512, 513, 2048)] == \
+        [512, 512, 1024, 2048]
+    assert K.n_bucket_sharded(100_000, 4) == 100_352
+    assert K.n_bucket_sharded(100_000, 4) % (4 * K.LANE) == 0
+
+
+# ----------------------------------------------------------------------
+# padded-constant cache: stale-generation eviction
+# ----------------------------------------------------------------------
+
+def test_catalog_cache_keeps_one_live_copy_per_constant():
+    """Regression for the duplication bug: growing the catalog rebuilds
+    the embedding matrix; the old generations' padded device copies
+    must die with their source arrays instead of accumulating one
+    near-identical multi-MB pack per historical size."""
+    K.reset_catalog_cache()
+    mres = random_catalog(24, seed=3)
+    eng = RoutingEngine(mres, knn_k=4)
+    prefs, sigs = random_queries(3, seed=3)
+    for i in range(6):
+        eng.route_many_batch(prefs, sigs)
+        mres.register(make_entry(f"grow{i}", task_types=("chat",),
+                                 generalist=True))
+    gc.collect()
+    eng.route_many_batch(prefs, sigs)
+    info = K.catalog_cache_info()
+    # every stale generation was evicted: only the live embedding's
+    # pack remains, exactly one copy per constant
+    assert info["entries"] == 1, info
+    assert len(info["keys"]) == len(set(info["keys"]))
+    assert {key[0] for key in info["keys"]} == {id(mres.embeddings())}
+
+
+def test_catalog_cache_capped_with_live_variants():
+    """Distinct live variants (fp32/quant/ivf on the same snapshot) all
+    cache — bounded by the cap."""
+    K.reset_catalog_cache()
+    mres = random_catalog(48, seed=7)
+    prefs, sigs = random_queries(4, seed=7)
+    engines = [RoutingEngine(mres, knn_k=4),
+               RoutingEngine(mres, knn_k=4, quantize=True),
+               RoutingEngine(mres, knn_k=4, ivf=True, ivf_min_n=1),
+               RoutingEngine(mres, knn_k=4, quantize=True, ivf=True,
+                             ivf_min_n=1)]
+    models = [e.route_many_batch(prefs, sigs).models() for e in engines]
+    info = K.catalog_cache_info()
+    assert 1 <= info["entries"] <= K._CATALOG_CACHE_MAX
+    assert len(info["keys"]) == len(set(info["keys"]))
+    # cache hits must not change decisions
+    assert engines[0].route_many_batch(prefs, sigs).models() == models[0]

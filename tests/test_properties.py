@@ -296,3 +296,41 @@ def test_fused_route_step_equals_staged_path(mres, batch, data):
             assert a_in_b == pytest.approx(b.score, abs=1e-4)
         for (_, sa), (_, sb) in zip(a.candidates, b.candidates):
             assert sa == pytest.approx(sb, abs=1e-4)
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(catalogs(max_n=12), query_batches(max_b=5), st.data())
+def test_sharded_fused_route_step_equals_staged_path(mres, batch, data):
+    """(ix) catalog-sharded differential: the cross-device fused step
+    (catalog axis sharded over the multi-device host mesh, per-shard
+    mask-fused kNN + payload-carrying cross-shard merge tree) matches
+    the staged numpy reference — model choice, the full in-program
+    fallback ladder, stage sizes, and scores to fp tolerance — across
+    random catalogs, masks, and blend layers."""
+    import jax
+    if jax.device_count() < 2:
+        pytest.skip("needs a multi-device host platform")
+    from repro.launch.mesh import make_routing_mesh
+    prefs, sigs = batch
+    fb, ad, ad_w, load, load_w = data.draw(
+        blend_layers(len(mres.entries)))
+    eng = RoutingEngine(mres, fb, knn_k=4,
+                        adaptive=ad, adaptive_weight=ad_w,
+                        load=load, load_weight=load_w,
+                        mesh=make_routing_mesh())
+    fused = eng.route_many_batch(prefs, sigs).decisions()
+    staged = eng.route_many_staged(prefs, sigs)
+    for a, b, sig in zip(fused, staged, sigs):
+        assert a.fallback_kind == b.fallback_kind
+        assert a.stage_sizes == b.stage_sizes
+        assert len(a.candidates) == len(b.candidates)
+        if not _knn_is_tie_free(mres, eng, sig, b.task_vector):
+            continue        # candidate set not uniquely determined
+        assert a.score == pytest.approx(b.score, abs=1e-4)
+        if a.model != b.model:
+            a_in_b = dict(b.candidates).get(a.model)
+            assert a_in_b is not None
+            assert a_in_b == pytest.approx(b.score, abs=1e-4)
+        for (_, sa), (_, sb) in zip(a.candidates, b.candidates):
+            assert sa == pytest.approx(sb, abs=1e-4)

@@ -95,3 +95,34 @@ def test_cache_specs_long_context_shards_length():
     specs2 = R.cache_specs(cfg2, mesh, cache2)
     # KV cache present and spec'd per (k, v)
     assert set(specs2) >= {"k", "v"}
+
+
+def test_maybe_counts_silent_replications():
+    """Every ``maybe`` fallback to replication (non-dividing dim) bumps
+    the audit counter the dry-run surfaces — divisible dims don't."""
+    mesh = make_host_mesh()                      # both axes size 1
+    base = R.silent_replication_count()
+    assert R.maybe(mesh, 10, "model") == "model"
+    assert R.silent_replication_count() == base  # clean shard: no bump
+    mesh4 = jax.make_mesh((4,), ("data",))
+    assert R.maybe(mesh4, 8, "data") == "data"
+    assert R.silent_replication_count() == base
+    assert R.maybe(mesh4, 6, "data") is None     # 6 % 4 != 0: replicate
+    assert R.maybe(mesh4, 1, "data") is None
+    assert R.silent_replication_count() == base + 2
+    R.reset_silent_replication_count()
+    assert R.silent_replication_count() == 0
+
+
+def test_route_step_specs_cover_catalog_axis():
+    """The mega-catalog routing specs shard every (.., N) operand over
+    the catalog axis and replicate the per-query operands."""
+    mesh = jax.make_mesh((4,), (R.CATALOG_AXIS,))
+    specs = R.route_step_specs(mesh)
+    assert specs["e2"] == P(R.CATALOG_AXIS, None)
+    assert specs["masks_table"] == P(None, R.CATALOG_AXIS)
+    assert specs["lpen"] == P(R.CATALOG_AXIS)
+    assert specs["counts_table"] == P()
+    assert specs["query"] == P()
+    with pytest.raises(AssertionError):
+        R.route_step_specs(make_host_mesh())     # no catalog axis

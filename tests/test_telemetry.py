@@ -194,3 +194,12 @@ def test_concurrent_records():
     assert s["events"] == 1800
     assert sum(s["fallback_funnel"].values()) == 1800
     assert sum(a["requests"] for a in s["per_model"].values()) == 1800
+
+
+def test_sharding_counters():
+    t = Telemetry()
+    assert t.sharding_stats() == {"silent_replications": 0}
+    t.record_sharding(silent_replications=3)
+    t.record_sharding(silent_replications=1)
+    assert t.sharding_stats()["silent_replications"] == 4
+    assert t.summary()["sharding"]["silent_replications"] == 4
