@@ -17,8 +17,8 @@ import time
 import traceback
 
 from benchmarks import (ablations, adaptive, analyzer_pruning, batch_mode,
-                        cache_hit, feedback, load_aware, merging, roofline,
-                        router_scale, routing_win)
+                        cache_hit, feedback, load_aware, merging,
+                        obs_overhead, roofline, router_scale, routing_win)
 
 ALL = {
     "routing_win": routing_win.run,
@@ -28,6 +28,7 @@ ALL = {
     "load_aware": load_aware.run,
     "cache_hit": cache_hit.run,
     "router_scale": router_scale.run,
+    "obs_overhead": obs_overhead.run,
     "analyzer_pruning": analyzer_pruning.run,
     "merging": merging.run,
     "ablations": ablations.run,
@@ -40,6 +41,7 @@ SMOKE = {
     "adaptive": adaptive.main,
     "load_aware": load_aware.main,
     "cache_hit": cache_hit.main,
+    "obs_overhead": obs_overhead.main,
 }
 
 

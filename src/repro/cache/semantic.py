@@ -43,6 +43,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.preferences import N_METRICS, TaskSignature, resolve
+from repro.obs.trace import NOOP_SPAN
 
 # cache_funnel outcome kinds (Telemetry.cache_funnel key set, stable
 # even on empty engines): lookup outcomes, then insert outcomes
@@ -100,9 +101,12 @@ class SemanticCache:
                  sketch_dims: int = 32, text_weight: float = 1.0,
                  dim: Optional[int] = None, use_kernel: bool = False,
                  kernel_min_n: int = 1024, quantize: bool = False,
-                 time_fn=time.time):
+                 tracer=None, time_fn=time.time):
         assert capacity > 0, capacity
         assert -1.0 <= threshold <= 1.0, threshold
+        # span sink (obs.trace.Tracer): batched lookups report a
+        # "cache_lookup" span nested under the caller's ambient span
+        self.tracer = tracer
         self.capacity = int(capacity)
         self.threshold = float(threshold)
         self.ttl_s = None if ttl_s is None else float(ttl_s)
@@ -259,11 +263,17 @@ class SemanticCache:
         Like ``lookup`` but hit rows are materialized under the SAME
         lock, so a concurrent put/eviction/expiry between lookup and
         get can never invalidate a hit mid-serve."""
-        with self._lock:
-            hit, slot, sim = self._lookup_locked(
-                np.asarray(vecs, np.float32), np.asarray(fps, np.int64))
-            entries = [self._entry_locked(int(s)) if h else None
-                       for h, s in zip(hit, slot)]
+        span = self.tracer.span("cache_lookup",
+                                batch=int(np.asarray(vecs).shape[0])) \
+            if self.tracer is not None else NOOP_SPAN
+        with span:
+            with self._lock:
+                hit, slot, sim = self._lookup_locked(
+                    np.asarray(vecs, np.float32),
+                    np.asarray(fps, np.int64))
+                entries = [self._entry_locked(int(s)) if h else None
+                           for h, s in zip(hit, slot)]
+            span.set(hits=int(np.asarray(hit).sum()))
         return hit, entries, sim
 
     def _entry_locked(self, slot: int) -> CacheEntry:

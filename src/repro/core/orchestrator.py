@@ -28,6 +28,7 @@ from repro.core.mres import MRES, ModelEntry
 from repro.core.preferences import (TaskSignature, UserPreferences, resolve,
                                     resolve_batch)
 from repro.core.routing import RoutingDecision, RoutingEngine
+from repro.obs.trace import NOOP_SPAN
 
 
 class RoutedQuery:
@@ -108,7 +109,7 @@ class OptiRoute:
                  knn_k: int = 8, merge_threshold: Optional[float] = None,
                  batch_sample_frac: float = 0.02,
                  use_kernel: bool = False, feedback_weight: float = 0.5,
-                 telemetry=None, adaptive=None,
+                 telemetry=None, tracer=None, adaptive=None,
                  adaptive_weight: float = 0.0, reward_fn=None,
                  reward_shaper=None, load=None, load_weight: float = 0.0,
                  cache=None):
@@ -121,11 +122,14 @@ class OptiRoute:
                                     adaptive=adaptive,
                                     adaptive_weight=adaptive_weight,
                                     load=load, load_weight=load_weight,
-                                    telemetry=telemetry)
+                                    telemetry=telemetry, tracer=tracer)
         self.merger = (ModelMerger(mres, merge_threshold)
                        if merge_threshold is not None else None)
         self.batch_sample_frac = batch_sample_frac
         self.telemetry = telemetry
+        # span sink (obs.trace.Tracer): analyze/route/observe stages
+        # report nested spans, propagated down to the fused dispatch
+        self.tracer = tracer
         # adaptive loop: bandit + (optional) automatic reward emission.
         # ``reward_fn(rq) -> quality in [0, 1]`` makes ``route_all``
         # close the loop itself; without it, call ``observe`` explicitly.
@@ -186,8 +190,13 @@ class OptiRoute:
         if len(prefs_list) != B:
             raise ValueError(f"prefs batch size {len(prefs_list)} != "
                              f"text batch size {B}")
+        tr = self.tracer
         t0 = time.time()
-        sigs = self.analyzer.analyze_batch(list(texts))
+        if tr is not None:
+            with tr.span("analyze", batch=B):
+                sigs = self.analyzer.analyze_batch(list(texts))
+        else:
+            sigs = self.analyzer.analyze_batch(list(texts))
         t1 = time.time()
         if self.merger is None and self.engine._fused_ok():
             batch = self.engine.route_many_batch(prefs_list, sigs)
@@ -197,7 +206,11 @@ class OptiRoute:
                                route_s=(t2 - t1) / B)
                    for i, (t, s) in enumerate(zip(texts, sigs))]
         else:
-            decisions = self.engine.route_many(prefs_list, sigs)
+            if tr is not None:
+                with tr.span("route_step", path="staged", batch=B):
+                    decisions = self.engine.route_many(prefs_list, sigs)
+            else:
+                decisions = self.engine.route_many(prefs_list, sigs)
             if self.merger is not None:
                 low = [i for i, d in enumerate(decisions)
                        if d.score < self.merger.score_threshold]
@@ -271,48 +284,53 @@ class OptiRoute:
         todo = sorted(set(fresh) | set(cacheable))
         if not todo:
             return None
-        if qualities is None:
-            qual = {i: float(self.reward_fn(rqs[i])) for i in todo}
-        else:
-            qual = {i: float(qualities[i]) for i in todo}
-        # cache write-back takes RAW quality: the cache's admission bar
-        # is about answer trustworthiness, not the cost/latency-shaped
-        # bandit reward
-        for i in cacheable:
-            rq = rqs[i]
-            kind = self.cache.put(rq.cache_key, rq.cache_fp,
-                                  rq.model, rq.response,
-                                  qual[i], sig=rq.sig)
-            rq.cache_written = True
-            if self.telemetry is not None:
-                self.telemetry.record_cache(kind)
-        if cacheable and self.telemetry is not None:
-            # inserts can evict/expire internally; surface that churn
-            for kind, n in self.cache.drain_events().items():
-                self.telemetry.record_cache(kind, n)
-        if self.adaptive is None or not fresh:
-            for i in fresh:
-                rqs[i].observed = True
-            return None
-        sub = [rqs[i] for i in fresh]
-        sub_q = [qual[i] for i in fresh]
-        sub_ep = None if extra_penalty is None else \
-            np.asarray(extra_penalty, np.float32)[fresh]
-        names = self.mres.snapshot()[1]
-        col = {m: j for j, m in enumerate(names)}
-        midx = np.array([col[rq.model] for rq in sub])
-        X = np.stack([rq.task_vector for rq in sub])
-        if self.reward_shaper is not None:
-            rewards = self.reward_shaper.shape(sub_q, midx, sub_ep)
-        else:
-            rewards = np.asarray(sub_q, np.float32)
-            if sub_ep is not None:
-                rewards = rewards - sub_ep
-        self.adaptive.ensure(len(names))
-        self.adaptive.update(X, midx, rewards)
-        for rq in sub:
-            rq.observed = True
-        return rewards
+        span = self.tracer.span("observe", batch=len(rqs),
+                                fresh=len(fresh),
+                                cacheable=len(cacheable)) \
+            if self.tracer is not None else NOOP_SPAN
+        with span:
+            if qualities is None:
+                qual = {i: float(self.reward_fn(rqs[i])) for i in todo}
+            else:
+                qual = {i: float(qualities[i]) for i in todo}
+            # cache write-back takes RAW quality: the cache's admission
+            # bar is about answer trustworthiness, not the
+            # cost/latency-shaped bandit reward
+            for i in cacheable:
+                rq = rqs[i]
+                kind = self.cache.put(rq.cache_key, rq.cache_fp,
+                                      rq.model, rq.response,
+                                      qual[i], sig=rq.sig)
+                rq.cache_written = True
+                if self.telemetry is not None:
+                    self.telemetry.record_cache(kind)
+            if cacheable and self.telemetry is not None:
+                # inserts can evict/expire internally; surface the churn
+                for kind, n in self.cache.drain_events().items():
+                    self.telemetry.record_cache(kind, n)
+            if self.adaptive is None or not fresh:
+                for i in fresh:
+                    rqs[i].observed = True
+                return None
+            sub = [rqs[i] for i in fresh]
+            sub_q = [qual[i] for i in fresh]
+            sub_ep = None if extra_penalty is None else \
+                np.asarray(extra_penalty, np.float32)[fresh]
+            names = self.mres.snapshot()[1]
+            col = {m: j for j, m in enumerate(names)}
+            midx = np.array([col[rq.model] for rq in sub])
+            X = np.stack([rq.task_vector for rq in sub])
+            if self.reward_shaper is not None:
+                rewards = self.reward_shaper.shape(sub_q, midx, sub_ep)
+            else:
+                rewards = np.asarray(sub_q, np.float32)
+                if sub_ep is not None:
+                    rewards = rewards - sub_ep
+            self.adaptive.ensure(len(names))
+            self.adaptive.update(X, midx, rewards)
+            for rq in sub:
+                rq.observed = True
+            return rewards
 
     # --------------------------- batch ---------------------------
     def route_batch(self, texts: Sequence[str], prefs, *,

@@ -213,7 +213,7 @@ class RoutingEngine:
                  use_complexity: bool = True,
                  adaptive=None, adaptive_weight: float = 0.0,
                  load=None, load_weight: float = 0.0,
-                 fused: bool = True, telemetry=None,
+                 fused: bool = True, telemetry=None, tracer=None,
                  mesh=None, quantize: bool = False,
                  ivf: bool = False, nprobe: int = 8,
                  ivf_min_n: int = 4096):
@@ -233,6 +233,9 @@ class RoutingEngine:
         self.fused = fused
         # dispatch/compile counter sink (Telemetry), set by OptiRoute
         self.telemetry = telemetry
+        # span sink (obs.trace.Tracer): the fused dispatch reports a
+        # "route_step" span with path/bucket/compile attributes
+        self.tracer = tracer
         # online-learning layer (repro.adaptive): learned per-model
         # reward estimates blended into the static scores at weight
         # ``adaptive_weight`` (the preference knob; 0 = static routing)
@@ -460,7 +463,7 @@ class RoutingEngine:
             use_pallas=self.use_kernel and n >= self._kernel_min_n,
             quant=self.quantize, mesh=self.mesh, ivf=ivf,
             nprobe=self.nprobe,
-            telemetry=self.telemetry)
+            telemetry=self.telemetry, tracer=self.tracer)
         return RoutingBatch(
             names=names, model_idx=out["model_idx"],
             score=out["score"], stage=out["stage"],

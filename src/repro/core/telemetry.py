@@ -5,14 +5,32 @@ routed request into: model chosen, fallback kind, analyzer/route
 latencies, simulated serving cost.  Exposes per-model aggregates,
 fallback rates, stage-funnel statistics and a rolling-window QPS view —
 what an operator needs to see that the router behaves in production.
+
+Memory is FIXED no matter how long the process serves (PR 7): raw
+events sit in a bounded ring (newest ``max_events`` kept, for
+debugging/attribution), while everything reported — funnels, per-model
+aggregates, latency/cost distributions, QPS — is maintained
+incrementally in monotonic counters and fixed-bucket log histograms
+(``obs.metrics.LogHistogram``).  ``summary()`` therefore reflects ALL
+events ever recorded, not just the retained window, and no view
+re-scans or re-quantiles raw lists under the lock.  Thumbs feedback
+attaches O(1) via per-model pending stacks instead of an O(n) reverse
+scan.  ``summary()`` takes ONE consistent snapshot under the lock.
 """
 from __future__ import annotations
 
 import collections
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Any, Deque, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Any, Deque, Dict, Optional
+
+from repro.obs.metrics import LogHistogram
+
+# latency histograms cover 10us .. 100s at ~0.54% relative resolution;
+# cost histograms cover 1e-3 .. 1e4 simulated-cost units
+_LAT_RANGE = dict(lo=1e-5, hi=1e2, per_octave=128)
+_COST_RANGE = dict(lo=1e-3, hi=1e4, per_octave=128)
 
 
 @dataclass
@@ -29,21 +47,67 @@ class RouteEvent:
     thumbs: Optional[bool] = None
 
 
+def _new_model_agg() -> Dict[str, Any]:
+    return dict(requests=0, fallbacks=0, cost=0.0, route_s=0.0,
+                thumbs_up=0, thumbs_down=0)
+
+
 class Telemetry:
-    def __init__(self, window_s: float = 60.0):
+    def __init__(self, window_s: float = 60.0, max_events: int = 8192,
+                 max_pending_thumbs: int = 512):
         self.window_s = window_s
-        self._events: List[RouteEvent] = []
+        self.max_events = int(max_events)
+        self.max_pending_thumbs = int(max_pending_thumbs)
+        # bounded retention of raw events (debugging / attribution);
+        # aggregates below are monotonic and cover ALL events
+        self._events: Deque[RouteEvent] = \
+            collections.deque(maxlen=self.max_events)
+        self._events_total = 0
+        self._fallbacks_total = 0
+        self._fallback_funnel: Dict[str, int] = {}
+        self._per_model: Dict[str, Dict[str, Any]] = {}
+        self._model_lat: Dict[str, LogHistogram] = {}
+        self._lat_hist = LogHistogram(**_LAT_RANGE)
+        self._cost_hist = LogHistogram(**_COST_RANGE)
+        # model -> stack of unrated events; thumbs pop the most recent
+        self._pending: Dict[str, Deque[RouteEvent]] = {}
+        # event timestamps for the rolling QPS window (pruned at read;
+        # hard cap keeps memory bounded even if qps() is never called)
+        self._qps_ts: Deque[float] = collections.deque(maxlen=65536)
         self._admissions: Dict[str, int] = {}
         self._cache: Dict[str, int] = {}
         self._route_step: Dict[str, int] = {"dispatches": 0,
                                             "compiles": 0}
         self._sharding: Dict[str, int] = {"silent_replications": 0}
+        self._counters: Dict[str, float] = {}
+        self._gauges: Dict[str, float] = {}
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------
     def record(self, event: RouteEvent) -> None:
         with self._lock:
             self._events.append(event)
+            self._events_total += 1
+            self._fallbacks_total += bool(event.fallback)
+            self._fallback_funnel[event.fallback] = \
+                self._fallback_funnel.get(event.fallback, 0) + 1
+            a = self._per_model.get(event.model)
+            if a is None:
+                a = self._per_model[event.model] = _new_model_agg()
+                self._model_lat[event.model] = LogHistogram(**_LAT_RANGE)
+                self._pending[event.model] = collections.deque(
+                    maxlen=self.max_pending_thumbs)
+            a["requests"] += 1
+            a["fallbacks"] += bool(event.fallback)
+            a["cost"] += event.sim_cost
+            a["route_s"] += event.route_s
+            lat = event.analyzer_s + event.route_s
+            self._model_lat[event.model].record(lat)
+            self._lat_hist.record(lat)
+            if event.sim_cost:
+                self._cost_hist.record(event.sim_cost)
+            self._pending[event.model].append(event)
+            self._qps_ts.append(event.ts)
 
     def record_decision(self, rq, *, sim_cost: float = 0.0) -> None:
         """Convenience: log an orchestrator RoutedQuery.
@@ -121,48 +185,61 @@ class Telemetry:
         with self._lock:
             return {k: self._cache.get(k, 0) for k in CACHE_KINDS}
 
-    def attach_thumbs(self, model: str, thumbs_up: bool) -> None:
+    def inc(self, name: str, amount: float = 1.0) -> None:
+        """Bump a generic monotonic counter (exported as-is)."""
         with self._lock:
-            for e in reversed(self._events):
-                if e.model == model and e.thumbs is None:
-                    e.thumbs = thumbs_up
-                    return
+            self._counters[name] = self._counters.get(name, 0.0) + amount
+
+    def set_gauge(self, name: str, value: float) -> None:
+        """Set a generic point-in-time gauge (exported as-is)."""
+        with self._lock:
+            self._gauges[name] = float(value)
+
+    def attach_thumbs(self, model: str, thumbs_up: bool) -> None:
+        """Attach feedback to the MOST RECENT unrated event for
+        ``model``.  O(1): each model keeps a bounded stack of unrated
+        events, so feedback on a long history never rescans the ring."""
+        with self._lock:
+            stack = self._pending.get(model)
+            if not stack:
+                return
+            e = stack.pop()
+            e.thumbs = thumbs_up
+            a = self._per_model[model]
+            if thumbs_up:
+                a["thumbs_up"] += 1
+            else:
+                a["thumbs_down"] += 1
 
     # ------------------------------------------------------------------
-    def per_model(self) -> Dict[str, Dict[str, float]]:
-        import numpy as np
-        with self._lock:
-            agg: Dict[str, Dict[str, float]] = {}
-            lat: Dict[str, List[float]] = {}
-            for e in self._events:
-                a = agg.setdefault(e.model, dict(
-                    requests=0, fallbacks=0, cost=0.0, route_s=0.0,
-                    thumbs_up=0, thumbs_down=0))
-                a["requests"] += 1
-                a["fallbacks"] += bool(e.fallback)
-                a["cost"] += e.sim_cost
-                a["route_s"] += e.route_s
-                lat.setdefault(e.model, []).append(e.analyzer_s + e.route_s)
-                if e.thumbs is True:
-                    a["thumbs_up"] += 1
-                elif e.thumbs is False:
-                    a["thumbs_down"] += 1
-        for m, a in agg.items():
-            a["fallback_rate"] = a["fallbacks"] / max(a["requests"], 1)
-            n_fb = a["thumbs_up"] + a["thumbs_down"]
-            a["satisfaction"] = (a["thumbs_up"] / n_fb) if n_fb else None
+    # views (all incremental — no event rescans)
+    # ------------------------------------------------------------------
+    def _per_model_locked(self) -> Dict[str, Dict[str, float]]:
+        agg: Dict[str, Dict[str, float]] = {}
+        for m, a in self._per_model.items():
+            out = dict(a)
+            out["fallback_rate"] = out["fallbacks"] / max(
+                out["requests"], 1)
+            n_fb = out["thumbs_up"] + out["thumbs_down"]
+            out["satisfaction"] = (out["thumbs_up"] / n_fb) \
+                if n_fb else None
             # per-model routing-latency distribution, not just means:
             # operators alarm on tails, and means hide queueing spikes
-            a["latency_p50_s"] = float(np.quantile(lat[m], 0.5))
-            a["latency_p99_s"] = float(np.quantile(lat[m], 0.99))
+            h = self._model_lat[m]
+            out["latency_p50_s"] = h.quantile(0.5)
+            out["latency_p99_s"] = h.quantile(0.99)
+            agg[m] = out
         return agg
+
+    def per_model(self) -> Dict[str, Dict[str, float]]:
+        with self._lock:
+            return self._per_model_locked()
 
     def fallback_rate(self) -> float:
         with self._lock:
-            if not self._events:
+            if not self._events_total:
                 return 0.0
-            return sum(bool(e.fallback) for e in self._events) \
-                / len(self._events)
+            return self._fallbacks_total / self._events_total
 
     def fallback_funnel(self) -> Dict[str, int]:
         """Routed-request counts per fallback ladder stage.
@@ -170,36 +247,64 @@ class Telemetry:
         Keys follow ``routing.FALLBACK_LADDER`` ('' = primary fused-kNN
         hit); only stages that occurred appear.  The operator's view of
         how far down the ladder traffic is falling."""
-        funnel: Dict[str, int] = {}
         with self._lock:
-            for e in self._events:
-                funnel[e.fallback] = funnel.get(e.fallback, 0) + 1
-        return funnel
+            return dict(self._fallback_funnel)
 
     def qps(self, now: Optional[float] = None) -> float:
+        """Requests/s over ``(now - window_s, now]``.  Prunes the
+        timestamp deque as it reads (assumes ``now`` values are
+        non-decreasing across calls, which wall clocks are)."""
         now = now if now is not None else time.time()
+        cutoff = now - self.window_s
         with self._lock:
-            recent = [e for e in self._events
-                      if e.ts > now - self.window_s]
-        return len(recent) / self.window_s
+            ts = self._qps_ts
+            while ts and ts[0] <= cutoff:
+                ts.popleft()
+            n = len(ts)
+        return n / self.window_s
+
+    def _latency_percentiles_locked(self, q) -> Dict[str, float]:
+        return {f"p{int(x * 100)}": self._lat_hist.quantile(x)
+                for x in q}
 
     def latency_percentiles(self, q=(0.5, 0.9, 0.99)) -> Dict[str, float]:
-        import numpy as np
         with self._lock:
-            lat = [e.analyzer_s + e.route_s for e in self._events]
-        if not lat:
-            return {f"p{int(x*100)}": 0.0 for x in q}
-        return {f"p{int(x*100)}": float(np.quantile(lat, x)) for x in q}
+            return self._latency_percentiles_locked(q)
+
+    def latency_totals(self) -> Dict[str, float]:
+        """{count, sum, min, max} of the route latency distribution."""
+        with self._lock:
+            return self._lat_hist.snapshot()
+
+    def cost_totals(self) -> Dict[str, float]:
+        """{count, sum, min, max} of the per-request simulated cost."""
+        with self._lock:
+            return self._cost_hist.snapshot()
 
     def summary(self) -> Dict[str, Any]:
-        return {
-            "events": len(self._events),
-            "fallback_rate": self.fallback_rate(),
-            "fallback_funnel": self.fallback_funnel(),
-            "admission_funnel": self.admission_funnel(),
-            "cache_funnel": self.cache_funnel(),
-            "route_step": self.route_step_stats(),
-            "sharding": self.sharding_stats(),
-            "latency": self.latency_percentiles(),
-            "per_model": self.per_model(),
-        }
+        """ONE consistent snapshot of every view, taken under the lock
+        (a concurrent ``record`` lands either wholly before or wholly
+        after it — funnels, totals and per-model counts always agree)."""
+        from repro.cache import CACHE_KINDS
+        with self._lock:
+            lat_p = self._latency_percentiles_locked((0.5, 0.9, 0.99))
+            return {
+                "events": self._events_total,
+                "fallback_rate": (self._fallbacks_total
+                                  / self._events_total
+                                  if self._events_total else 0.0),
+                "fallback_funnel": dict(self._fallback_funnel),
+                "admission_funnel": dict(self._admissions),
+                "cache_funnel": {k: self._cache.get(k, 0)
+                                 for k in CACHE_KINDS},
+                "route_step": dict(self._route_step),
+                "sharding": dict(self._sharding),
+                "latency": lat_p,
+                "latency_percentiles": lat_p,
+                "latency_totals": self._lat_hist.snapshot(),
+                "cost_totals": self._cost_hist.snapshot(),
+                "qps": len(self._qps_ts) / self.window_s,
+                "per_model": self._per_model_locked(),
+                "counters": dict(self._counters),
+                "gauges": dict(self._gauges),
+            }

@@ -111,6 +111,19 @@ def _bump(kind: str, compiles: int) -> None:
         _STATS[f"{kind}_compiles"] += compiles
 
 
+# optional device-cost profiler hook (obs.profile.DeviceCostProfiler):
+# when attached, route_step hands it each shape bucket's bound jitted
+# call once so it can read compiled.cost_analysis() — one extra compile
+# per NEW bucket while attached, zero steady-state cost when detached
+_COST_PROFILER = None
+
+
+def set_cost_profiler(profiler) -> None:
+    """Attach (or detach with ``None``) a per-bucket cost profiler."""
+    global _COST_PROFILER
+    _COST_PROFILER = profiler
+
+
 _DUMMIES = None
 
 
@@ -471,7 +484,7 @@ def route_step(emb, tt_matrix, dm_matrix, gmask, T, W, ti, di, *,
                interpret: Optional[bool] = None,
                quant: bool = False, mesh=None,
                ivf=None, nprobe: int = 8,
-               telemetry=None) -> dict:
+               telemetry=None, tracer=None) -> dict:
     """One fused routing step per batch (see ``kernels/route_step.py``).
 
     Pads the batch to its power-of-two Q bucket and the catalog to its
@@ -483,7 +496,12 @@ def route_step(emb, tt_matrix, dm_matrix, gmask, T, W, ti, di, *,
     Dispatch/compile counts land in ``route_step_stats``; an attached
     ``telemetry`` additionally receives THIS call's (1 dispatch,
     compile delta) directly, so concurrent callers never read each
-    other's deltas out of the shared counters.
+    other's deltas out of the shared counters.  ``tracer`` (an
+    ``obs.trace.Tracer``) wraps the dispatch in a ``route_step`` span
+    carrying the selected path, shape bucket, quantization mode, shard
+    count and compile delta; an attached cost profiler (see
+    ``set_cost_profiler``) gets each NEW shape bucket's bound call to
+    read ``compiled.cost_analysis()`` from.
 
     Mega-catalog knobs (all still ONE dispatch per batch):
 
@@ -550,14 +568,15 @@ def route_step(emb, tt_matrix, dm_matrix, gmask, T, W, ti, di, *,
         aip = ai[osafe] * valid[:, None] if has_ad else dummy1[0]
         lpp = (np.asarray(lpen, np.float32)[:n][osafe] * valid) \
             if has_load else dummy1[1]
-        out, compiles = _count_compiles(
+        jit_fn = route_step_ivf_jit
+        call = functools.partial(
             route_step_ivf_jit,
-            lambda: route_step_ivf_jit(
-                e2_d, e2s_d, masks_d, counts_d, orig_d, cent_d,
-                Tp, Wp, tip, dip, fbp, thp, aip, lpp, params,
-                k=k, r=r, n_tt=n_tt, n_dm=n_dm, nprobe=int(nprobe),
-                cap=cap, has_fb=has_fb, has_ad=has_ad,
-                has_load=has_load, quant=quant))
+            e2_d, e2s_d, masks_d, counts_d, orig_d, cent_d,
+            Tp, Wp, tip, dip, fbp, thp, aip, lpp, params,
+            k=k, r=r, n_tt=n_tt, n_dm=n_dm, nprobe=int(nprobe),
+            cap=cap, has_fb=has_fb, has_ad=has_ad,
+            has_load=has_load, quant=quant)
+        path, n_pad, shards = "ivf", cap, 1
     elif mesh is not None:
         from repro.sharding.rules import CATALOG_AXIS
         ndev = mesh.shape[CATALOG_AXIS]
@@ -575,14 +594,15 @@ def route_step(emb, tt_matrix, dm_matrix, gmask, T, W, ti, di, *,
             thp = aip = dummy1[0]
         lpp = np.pad(np.asarray(lpen, np.float32)[:n], (0, npad)) \
             if has_load else dummy1[1]
-        out, compiles = _count_compiles(
+        jit_fn = route_step_sharded_jit
+        call = functools.partial(
             route_step_sharded_jit,
-            lambda: route_step_sharded_jit(
-                e2_d, e2s_d, masks_d, counts_d, Tp, Wp, tip, dip,
-                fbp, thp, aip, lpp, params, mesh=mesh,
-                axis=CATALOG_AXIS, k=k, r=r, n_tt=n_tt, n_dm=n_dm,
-                has_fb=has_fb, has_ad=has_ad, has_load=has_load,
-                quant=quant))
+            e2_d, e2s_d, masks_d, counts_d, Tp, Wp, tip, dip,
+            fbp, thp, aip, lpp, params, mesh=mesh,
+            axis=CATALOG_AXIS, k=k, r=r, n_tt=n_tt, n_dm=n_dm,
+            has_fb=has_fb, has_ad=has_ad, has_load=has_load,
+            quant=quant)
+        path, n_pad, shards = "sharded", np_pad, ndev
     else:
         np_pad = n_bucket(n)
         npad = np_pad - n
@@ -598,14 +618,26 @@ def route_step(emb, tt_matrix, dm_matrix, gmask, T, W, ti, di, *,
             thp = aip = dummy1[0]
         lpp = np.pad(np.asarray(lpen, np.float32)[:n], (0, npad)) \
             if has_load else dummy1[1]
-        out, compiles = _count_compiles(
+        jit_fn = route_step_jit
+        call = functools.partial(
             route_step_jit,
-            lambda: route_step_jit(
-                e2_d, e2s_d, masks_d, counts_d, Tp, Wp, tip, dip, fbp,
-                thp, aip, lpp, params, k=k, r=r, n_tt=n_tt, n_dm=n_dm,
-                has_fb=has_fb, has_ad=has_ad, has_load=has_load,
-                use_pallas=use_pallas, blk_q=8, blk_n=blk_n,
-                interpret=interp, quant=quant))
+            e2_d, e2s_d, masks_d, counts_d, Tp, Wp, tip, dip, fbp,
+            thp, aip, lpp, params, k=k, r=r, n_tt=n_tt, n_dm=n_dm,
+            has_fb=has_fb, has_ad=has_ad, has_load=has_load,
+            use_pallas=use_pallas, blk_q=8, blk_n=blk_n,
+            interpret=interp, quant=quant)
+        path, n_pad, shards = "dense", np_pad, 1
+    prof = _COST_PROFILER
+    if prof is not None:
+        prof.capture((path, qp, n_pad, quant, shards), jit_fn, call)
+    if tracer is not None:
+        with tracer.span("route_step", path=path, batch=B,
+                         q_bucket=qp, n_bucket=n_pad, catalog_n=n,
+                         quant=quant, shards=shards) as sp:
+            out, compiles = _count_compiles(jit_fn, call)
+            sp.set(compiles=compiles)
+    else:
+        out, compiles = _count_compiles(jit_fn, call)
     _bump("route_step", compiles)
     if telemetry is not None:
         telemetry.record_route_step(dispatches=1, compiles=compiles)

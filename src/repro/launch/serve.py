@@ -50,13 +50,39 @@ def main(argv=None):
                     help="subset of catalog archs to load runners for")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--merge-threshold", type=float, default=None)
+    ap.add_argument("--metrics-out", default=None,
+                    help="dump Prometheus text exposition here "
+                         "(e.g. results/metrics.prom)")
+    ap.add_argument("--trace-out", default=None,
+                    help="dump the span ring as JSONL here "
+                         "(e.g. results/trace.jsonl)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve GET /metrics on this port while the "
+                         "request stream runs (0 = ephemeral)")
     args = ap.parse_args(argv)
+
+    obs_on = (args.metrics_out or args.trace_out
+              or args.metrics_port is not None)
+    tracer = telemetry = None
+    if obs_on:
+        from repro.core.telemetry import Telemetry
+        from repro.obs import Tracer
+        tracer = Tracer()
+        telemetry = Telemetry()
 
     print("[serve] building catalog (reduced runners) ...")
     mres = build_catalog(smoke_runners=True, archs=args.archs)
     analyzer = load_analyzer()
-    router = OptiRoute(mres, analyzer, merge_threshold=args.merge_threshold)
+    router = OptiRoute(mres, analyzer, merge_threshold=args.merge_threshold,
+                       telemetry=telemetry, tracer=tracer)
     engine = ServingEngine(router)
+
+    server = None
+    if args.metrics_port is not None:
+        from repro.obs import serve_metrics
+        server = serve_metrics(telemetry, tracer=tracer,
+                               port=args.metrics_port)
+        print(f"[serve] /metrics on http://127.0.0.1:{server.port}/metrics")
 
     profiles = ([args.profile] if args.profile
                 else list(PROFILES))
@@ -76,6 +102,21 @@ def main(argv=None):
         entry = mres.entry(r.model)
         engine.feedback(r, thumbs_up=r.sig.task_type in entry.task_types)
     print("[serve] summary:", json.dumps(engine.summary(), indent=2))
+
+    if args.metrics_out:
+        from repro.obs import write_prom
+        pathlib.Path(args.metrics_out).parent.mkdir(parents=True,
+                                                    exist_ok=True)
+        write_prom(args.metrics_out, telemetry, load=engine.load,
+                   tracer=tracer)
+        print(f"[serve] metrics -> {args.metrics_out}")
+    if args.trace_out:
+        pathlib.Path(args.trace_out).parent.mkdir(parents=True,
+                                                  exist_ok=True)
+        n = tracer.export_jsonl(args.trace_out)
+        print(f"[serve] {n} spans -> {args.trace_out}")
+    if server is not None:
+        server.close()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,100 @@
+"""Device-side cost profiling for the fused route step.
+
+``DeviceCostProfiler`` hooks into ``kernels.ops.route_step`` (via
+``ops.set_cost_profiler``) and, the first time each (path, q-bucket,
+n-bucket, quant) shape bucket is dispatched, lowers and compiles the
+same jitted call to read XLA's ``compiled.cost_analysis()`` — static
+FLOPs / bytes-accessed estimates per device program.  That is one
+extra compile per *bucket* (not per dispatch) and only while a
+profiler is attached, so the steady-state hot path is untouched; the
+per-bucket numbers feed the ``repro_route_step_flops`` /
+``repro_route_step_bytes`` gauges in the Prometheus export.
+
+``trace_capture(dir)`` optionally wraps a region in a
+``jax.profiler.trace`` so the fused dispatch shows up in a real
+profiler timeline (TensorBoard-compatible); degrades to a no-op when
+the profiler backend is unavailable.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional
+
+
+def _extract_costs(analysis) -> Dict[str, Optional[float]]:
+    """Normalize ``cost_analysis()`` output across JAX versions
+    (dict, list-of-dict, or absent keys)."""
+    if isinstance(analysis, (list, tuple)):
+        analysis = analysis[0] if analysis else {}
+    if not isinstance(analysis, dict):
+        return {"flops": None, "bytes_accessed": None}
+    return {"flops": analysis.get("flops"),
+            "bytes_accessed": analysis.get("bytes accessed",
+                                           analysis.get("bytes_accessed"))}
+
+
+class DeviceCostProfiler:
+    """Captures per-bucket XLA cost analysis for jitted dispatches.
+
+    ``capture(bucket, jit_fn, call)`` is invoked by the ops layer with
+    the already-bound call (a ``functools.partial``); unseen buckets
+    are lowered+compiled once to read ``cost_analysis()``.  Thread-safe
+    and failure-tolerant: a backend without cost analysis records
+    ``None`` entries rather than raising into the hot path.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._by_bucket: Dict[Any, Dict[str, Optional[float]]] = {}
+        self.captures = 0
+        self.errors = 0
+
+    def capture(self, bucket, jit_fn, call) -> None:
+        with self._lock:
+            if bucket in self._by_bucket:
+                return
+            # reserve the slot so concurrent dispatchers of the same
+            # bucket don't double-compile
+            self._by_bucket[bucket] = {"flops": None,
+                                       "bytes_accessed": None}
+        try:
+            lowered = jit_fn.lower(*call.args, **call.keywords)
+            analysis = lowered.compile().cost_analysis()
+            costs = _extract_costs(analysis)
+        except Exception:                   # noqa: BLE001 - best effort
+            with self._lock:
+                self.errors += 1
+            return
+        with self._lock:
+            self._by_bucket[bucket] = costs
+            self.captures += 1
+
+    def profile(self) -> Dict[str, Dict[str, Optional[float]]]:
+        """Per-bucket costs keyed by a stable string form of the bucket."""
+        with self._lock:
+            return {"/".join(str(p) for p in k): dict(v)
+                    for k, v in self._by_bucket.items()}
+
+
+@contextlib.contextmanager
+def trace_capture(trace_dir: Optional[str]):
+    """``jax.profiler.trace`` around a region; no-op when ``trace_dir``
+    is falsy or the profiler backend refuses to start."""
+    if not trace_dir:
+        yield
+        return
+    try:
+        import jax
+        ctx = jax.profiler.trace(str(trace_dir))
+        ctx.__enter__()
+    except Exception:                       # noqa: BLE001
+        yield
+        return
+    try:
+        yield
+    finally:
+        try:
+            ctx.__exit__(None, None, None)
+        except Exception:                   # noqa: BLE001 - profiler-only
+            pass

@@ -41,6 +41,7 @@ import numpy as np
 from repro.core.orchestrator import OptiRoute
 from repro.core.preferences import TaskSignature, resolve_batch
 from repro.data.tokenizer import HashTokenizer
+from repro.obs.trace import NOOP_SPAN
 from repro.serving.load import LoadTracker, plan_admission
 
 
@@ -51,6 +52,7 @@ class Request:
     id: int = 0
     max_new: int = 8
     deadline_ms: Optional[float] = None   # latency SLO (None = no SLO)
+    tenant: str = ""                  # multi-tenant attribution (traces)
 
 
 @dataclass
@@ -67,6 +69,8 @@ class Response:
     admission: str = "admitted"       # admitted | rerouted | shed
     est_latency_s: float = 0.0        # admission-time wait+service estimate
     cache_hit: bool = False           # served from the semantic cache
+    trace_id: str = ""                # this request's trace (obs.trace)
+    trace_root: Any = None            # root Span handle (observe attaches)
 
     @property
     def shed(self) -> bool:
@@ -76,7 +80,8 @@ class Response:
 class ServingEngine:
     def __init__(self, router: OptiRoute, *, prompt_len: int = 32,
                  vocab_hash: int = 4096,
-                 load: Optional[LoadTracker] = None, cache=None):
+                 load: Optional[LoadTracker] = None, cache=None,
+                 tracer=None):
         self.router = router
         self.tok = HashTokenizer(vocab_hash)
         self.prompt_len = prompt_len
@@ -84,6 +89,15 @@ class ServingEngine:
             else getattr(router.engine, "load", None)
         self.cache = cache if cache is not None \
             else getattr(router, "cache", None)
+        # span sink (obs.trace.Tracer): defaults to the router's, so
+        # one tracer covers submit -> route -> kernel dispatch; the
+        # attached cache inherits it too (its lookup span must nest
+        # under the same batch trace)
+        self.tracer = tracer if tracer is not None \
+            else getattr(router, "tracer", None)
+        if (self.cache is not None and self.tracer is not None
+                and getattr(self.cache, "tracer", None) is None):
+            self.cache.tracer = self.tracer
         router_cache = getattr(router, "cache", None)
         if cache is not None and router_cache is None:
             # the write-back lives in OptiRoute.observe — an
@@ -119,48 +133,98 @@ class ServingEngine:
         keys = fps = None
         miss = list(range(len(reqs)))
         tel = self.router.telemetry
-        # featurize each request's preferences EXACTLY once: the
-        # resolved UserPreferences instances (with their memoized
-        # weight vectors) feed the cache key vectors, the fingerprint
-        # gates, AND — threaded through to route_all — the routing
-        # task vectors, instead of re-resolving (and for dict prefs,
-        # re-vectorizing) per consumer
-        prefs_res = resolve_batch([r.prefs for r in reqs], len(reqs))
-        if self.cache is not None:
-            keys = self.cache.keys_for(prefs_res,
-                                       [r.text for r in reqs])
-            # the decoding budget joins the exact-match gate: a 4-token
-            # answer must never serve a 256-token request
-            fps = self.cache.fingerprints(prefs_res,
-                                          extras=[r.max_new for r in reqs])
-            # entries materialize under the store's lock: a concurrent
-            # eviction can never invalidate a hit between lookup and use
-            hit, entries, _ = self.cache.lookup_entries(keys, fps)
-            if tel is not None:
-                for kind, n in self.cache.drain_events().items():
-                    tel.record_cache(kind, n)
-            miss = []
-            for i, r in enumerate(reqs):
+        tr = self.tracer
+        batch_span = tr.start_trace("submit", batch=len(reqs),
+                                    mode="interactive") \
+            if tr is not None else NOOP_SPAN
+        with batch_span:
+            # featurize each request's preferences EXACTLY once: the
+            # resolved UserPreferences instances (with their memoized
+            # weight vectors) feed the cache key vectors, the
+            # fingerprint gates, AND — threaded through to route_all —
+            # the routing task vectors, instead of re-resolving (and
+            # for dict prefs, re-vectorizing) per consumer
+            prefs_res = resolve_batch([r.prefs for r in reqs], len(reqs))
+            if self.cache is not None:
+                keys = self.cache.keys_for(prefs_res,
+                                           [r.text for r in reqs])
+                # the decoding budget joins the exact-match gate: a
+                # 4-token answer must never serve a 256-token request
+                fps = self.cache.fingerprints(
+                    prefs_res, extras=[r.max_new for r in reqs])
+                # entries materialize under the store's lock: a
+                # concurrent eviction can never invalidate a hit
+                # between lookup and use
+                hit, entries, _ = self.cache.lookup_entries(keys, fps)
                 if tel is not None:
-                    tel.record_cache("hit" if hit[i] else "miss")
-                if hit[i]:
-                    e = entries[i]
-                    out[i] = Response(
-                        request=r, model=e.model, sig=e.sig,
-                        tokens=e.response, sim_latency_s=0.0,
-                        route_s=0.0, analyzer_s=0.0, cache_hit=True)
-                else:
-                    miss.append(i)
-        if miss:
-            served = self._route_and_serve(
-                [reqs[i] for i in miss],
-                [prefs_res[i] for i in miss],
-                None if keys is None else keys[miss],
-                None if fps is None else fps[miss])
-            for j, i in enumerate(miss):
-                out[i] = served[j]
+                    for kind, n in self.cache.drain_events().items():
+                        tel.record_cache(kind, n)
+                miss = []
+                for i, r in enumerate(reqs):
+                    if tel is not None:
+                        tel.record_cache("hit" if hit[i] else "miss")
+                    if hit[i]:
+                        e = entries[i]
+                        out[i] = Response(
+                            request=r, model=e.model, sig=e.sig,
+                            tokens=e.response, sim_latency_s=0.0,
+                            route_s=0.0, analyzer_s=0.0, cache_hit=True)
+                    else:
+                        miss.append(i)
+            if miss:
+                served = self._route_and_serve(
+                    [reqs[i] for i in miss],
+                    [prefs_res[i] for i in miss],
+                    None if keys is None else keys[miss],
+                    None if fps is None else fps[miss])
+                for j, i in enumerate(miss):
+                    out[i] = served[j]
+        self._fanout_trace(reqs, out, batch_span)
         self.log.extend(out)            # type: ignore[arg-type]
         return out                      # type: ignore[return-value]
+
+    def _fanout_trace(self, reqs: Sequence[Request],
+                      out: Sequence[Response], batch_span) -> None:
+        """Fan the batch-level spans out to one trace PER REQUEST: a
+        ``request`` root carrying ids and verdicts, with child spans
+        for exactly the stages that ran for it (a cache hit gets only
+        its ``cache_lookup``; a shed request stops at ``admission``).
+        Durations are the batch stage costs amortized per request.
+        Each ``Response`` leaves with its ``trace_id``/``trace_root``
+        stamped so later ``observe`` calls can attach to the tree."""
+        tr = self.tracer
+        if tr is None or not tr.enabled:
+            return
+        B = len(reqs)
+        for r, resp in zip(reqs, out):
+            root = tr.record_span(
+                "request",
+                duration_s=resp.analyzer_s + resp.route_s
+                + resp.sim_latency_s,
+                request_id=r.id, tenant=r.tenant, batch=B,
+                batch_trace=batch_span.trace_id, model=resp.model,
+                admission=resp.admission, cache_hit=resp.cache_hit)
+            resp.trace_id = root.trace_id
+            resp.trace_root = root
+            if self.cache is not None:
+                tr.record_span(
+                    "cache_lookup", parent=root,
+                    outcome="hit" if resp.cache_hit else "miss")
+            if resp.cache_hit:   # short-circuit: no route/admit/generate
+                continue
+            tr.record_span("analyze", parent=root,
+                           duration_s=resp.analyzer_s)
+            tr.record_span("route_step", parent=root,
+                           duration_s=resp.route_s,
+                           fallback=resp.fallback)
+            if self.load is not None and r.deadline_ms is not None:
+                tr.record_span("admission", parent=root,
+                               verdict=resp.admission,
+                               est_latency_s=resp.est_latency_s)
+            if not resp.shed:
+                tr.record_span("generate", parent=root,
+                               duration_s=resp.sim_latency_s,
+                               model=resp.model)
 
     def _route_and_serve(self, requests: Sequence[Request], prefs_res,
                          cache_keys, cache_fps) -> List[Response]:
@@ -192,66 +256,78 @@ class ServingEngine:
         # catalog) so estimated_latency_s can add it elementwise
         pending = np.zeros(self.load.n_models, np.int64) \
             if self.load is not None else None
-        for r, rq in routed:
-            if self.load is None:
-                plans.append((rq.model, "admitted", 0.0))
-                continue
-            if r.deadline_ms is None:
-                # no SLO: admitted as routed, but the placement still
-                # counts toward what LATER requests in this batch see.
-                # rq.model reads the batch arrays — the full decision
-                # object only materializes for deadline-carrying
-                # requests, whose candidate lists admission ranks over
-                model, kind, est = rq.model, "admitted", 0.0
-            else:
-                model, kind, est = plan_admission(rq.decision, self.load,
-                                                  col, r.deadline_ms,
-                                                  pending=pending)
-                if tel is not None:
-                    tel.record_admission(kind)
-            plans.append((model, kind, est))
-            if pending is not None and kind != "shed":
-                pending[col[model]] += 1
+        tr = self.tracer
+        adm_span = tr.span("admission", batch=len(routed)) \
+            if tr is not None and self.load is not None else NOOP_SPAN
+        with adm_span:
+            for r, rq in routed:
+                if self.load is None:
+                    plans.append((rq.model, "admitted", 0.0))
+                    continue
+                if r.deadline_ms is None:
+                    # no SLO: admitted as routed, but the placement
+                    # still counts toward what LATER requests in this
+                    # batch see.  rq.model reads the batch arrays — the
+                    # full decision object only materializes for
+                    # deadline-carrying requests, whose candidate lists
+                    # admission ranks over
+                    model, kind, est = rq.model, "admitted", 0.0
+                else:
+                    model, kind, est = plan_admission(
+                        rq.decision, self.load, col, r.deadline_ms,
+                        pending=pending)
+                    if tel is not None:
+                        tel.record_admission(kind)
+                plans.append((model, kind, est))
+                if pending is not None and kind != "shed":
+                    pending[col[model]] += 1
         groups: Dict[Tuple[str, int], List[int]] = defaultdict(list)
         for i, (r, _) in enumerate(routed):
             model, kind, _ = plans[i]
             if kind != "shed":
                 groups[(model, r.max_new)].append(i)
         out: List[Optional[Response]] = [None] * len(requests)
-        for (model, max_new), idxs in groups.items():
-            entry = self.router.mres.entry(model)
-            if self.load is not None:
-                self.load.admit(col[model], count=len(idxs))
-                self.load.start(col[model], count=len(idxs))
-            gen, per_req_s = None, None
-            try:
-                if entry.runner is not None:
-                    toks = self._tokens([requests[i].text for i in idxs],
-                                        entry.runner.cfg.vocab_size)
-                    gen = entry.runner.generate(toks, max_new=max_new)
-                per_req_s = (gen.sim_latency_s / len(idxs)
-                             if gen is not None else
-                             entry.raw_metrics.get("latency_ms", 0.0) / 1e3)
-            finally:
-                # a generate failure must still release the slots, or
-                # the model's inflight count (and its routing penalty)
-                # stays inflated forever; no EWMA sample on failure
+        gen_span = tr.span("generate", groups=len(groups)) \
+            if tr is not None else NOOP_SPAN
+        with gen_span:
+            for (model, max_new), idxs in groups.items():
+                entry = self.router.mres.entry(model)
                 if self.load is not None:
-                    self.load.finish(col[model], per_req_s,
-                                     count=len(idxs))
-            for j, i in enumerate(idxs):
-                r, rq = routed[i]
-                # a rerouted request was SERVED by a different model
-                # than its routed decision; dropping the rq handle
-                # keeps observe() from crediting the wrong bandit arm
-                out[i] = Response(
-                    request=r, model=model, sig=rq.sig,
-                    tokens=None if gen is None else gen.tokens[j],
-                    sim_latency_s=0.0 if gen is None else per_req_s,
-                    route_s=rq.route_s, analyzer_s=rq.analyzer_s,
-                    fallback=rq.fallback_kind,
-                    rq=rq if plans[i][1] == "admitted" else None,
-                    admission=plans[i][1], est_latency_s=plans[i][2])
+                    self.load.admit(col[model], count=len(idxs))
+                    self.load.start(col[model], count=len(idxs))
+                gen, per_req_s = None, None
+                try:
+                    if entry.runner is not None:
+                        toks = self._tokens(
+                            [requests[i].text for i in idxs],
+                            entry.runner.cfg.vocab_size)
+                        gen = entry.runner.generate(toks, max_new=max_new)
+                    per_req_s = (gen.sim_latency_s / len(idxs)
+                                 if gen is not None else
+                                 entry.raw_metrics.get("latency_ms",
+                                                       0.0) / 1e3)
+                finally:
+                    # a generate failure must still release the slots,
+                    # or the model's inflight count (and its routing
+                    # penalty) stays inflated forever; no EWMA sample
+                    # on failure
+                    if self.load is not None:
+                        self.load.finish(col[model], per_req_s,
+                                         count=len(idxs))
+                for j, i in enumerate(idxs):
+                    r, rq = routed[i]
+                    # a rerouted request was SERVED by a different
+                    # model than its routed decision; dropping the rq
+                    # handle keeps observe() from crediting the wrong
+                    # bandit arm
+                    out[i] = Response(
+                        request=r, model=model, sig=rq.sig,
+                        tokens=None if gen is None else gen.tokens[j],
+                        sim_latency_s=0.0 if gen is None else per_req_s,
+                        route_s=rq.route_s, analyzer_s=rq.analyzer_s,
+                        fallback=rq.fallback_kind,
+                        rq=rq if plans[i][1] == "admitted" else None,
+                        admission=plans[i][1], est_latency_s=plans[i][2])
         for i, (r, rq) in enumerate(routed):   # shed: fail fast, no slot
             if out[i] is None:
                 out[i] = Response(
@@ -300,6 +376,7 @@ class ServingEngine:
             raise ValueError(f"{len(responses)} responses but "
                              f"{len(qualities)} qualities — observations "
                              "must align one-to-one")
+        tr = self.tracer
         pairs = []
         for r, q in zip(responses, qualities):
             if r.rq is None:
@@ -308,6 +385,11 @@ class ServingEngine:
             # router's observe() can write it into the semantic cache
             if r.rq.response is None:
                 r.rq.response = r.tokens
+            # the outcome joins the request's own trace tree, not just
+            # the router-level batch span
+            if tr is not None and r.trace_root is not None:
+                tr.record_span("observe", parent=r.trace_root,
+                               quality=float(q), model=r.model)
             pairs.append((r.rq, q))
         if not pairs:
             return None

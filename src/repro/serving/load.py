@@ -187,6 +187,21 @@ class LoadTracker:
         w = self.estimated_wait_s(cols)
         return (w / (w + self.tau_s)).astype(np.float32)
 
+    def metrics(self, names: Optional[Sequence[str]] = None) -> dict:
+        """Gauge view for the Prometheus export: per-model queue depth,
+        inflight count, capacity and EWMA service time, keyed by model
+        name when ``names`` is given (else by column index)."""
+        q, f, c, s = self.snapshot()
+        keys = [str(i) for i in range(self.n_models)] \
+            if names is None else [str(m) for m in names[:self.n_models]]
+        keys += [str(i) for i in range(len(keys), self.n_models)]
+        return {
+            "queue_depth": {k: int(v) for k, v in zip(keys, q)},
+            "inflight": {k: int(v) for k, v in zip(keys, f)},
+            "capacity": {k: float(v) for k, v in zip(keys, c)},
+            "ewma_service_s": {k: float(v) for k, v in zip(keys, s)},
+        }
+
     # ---------------- persistence (RouterState) ----------------
     def state(self) -> dict:
         """Packed-array snapshot for ``repro.checkpoint.RouterState``:

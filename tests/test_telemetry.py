@@ -1,6 +1,7 @@
 """Telemetry ledger: rolling-window QPS, per-model aggregates,
 fallback-funnel stats and thumbs attribution."""
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -194,6 +195,111 @@ def test_concurrent_records():
     assert s["events"] == 1800
     assert sum(s["fallback_funnel"].values()) == 1800
     assert sum(a["requests"] for a in s["per_model"].values()) == 1800
+
+
+def test_soak_memory_stays_bounded():
+    """100k events: raw retention and the QPS deque stay at their caps
+    while every reported aggregate still covers ALL events — the ledger
+    never trades correctness for its fixed memory footprint."""
+    tel = Telemetry(max_events=1024)
+    n = 100_000
+    for i in range(n):
+        tel.record(_ev(float(i) / 100.0, f"m{i % 4}",
+                       fallback="any" if i % 10 == 0 else "",
+                       route_s=0.001 * (i % 50 + 1), cost=0.5))
+    assert len(tel._events) <= 1024              # ring capped
+    assert len(tel._qps_ts) <= tel._qps_ts.maxlen
+    s = tel.summary()
+    assert s["events"] == n                      # aggregates see all
+    assert sum(s["fallback_funnel"].values()) == n
+    assert s["fallback_funnel"]["any"] == n // 10
+    assert sum(a["requests"] for a in s["per_model"].values()) == n
+    assert s["latency_totals"]["count"] == n
+    assert s["cost_totals"]["sum"] == pytest.approx(0.5 * n)
+    p = s["latency_percentiles"]
+    assert 0.001 <= p["p50"] <= p["p99"] <= 0.051
+
+
+def test_attach_thumbs_scales_with_feedback_not_history():
+    """Thumbs attach via per-model pending stacks: rating against a
+    100k-event history costs the same as against a tiny one (the old
+    implementation re-scanned the whole event list per attach)."""
+    def attach_cost(history: int, ratings: int) -> float:
+        tel = Telemetry()
+        for i in range(history):
+            tel.record(_ev(float(i), "hot"))
+        t0 = time.perf_counter()
+        for _ in range(ratings):
+            tel.record(_ev(0.0, "hot"))
+            tel.attach_thumbs("hot", True)
+        return time.perf_counter() - t0
+
+    small = attach_cost(10, 300)
+    big = attach_cost(100_000, 300)
+    # O(n)-per-attach would make `big` ~10000x `small`; allow wide
+    # CI noise but catch any history-proportional regression
+    assert big <= max(small * 20, 0.05), (small, big)
+    # correctness on a long history: still targets the most recent
+    # unrated event for the model
+    tel = Telemetry()
+    for i in range(5000):
+        tel.record(_ev(float(i), "a"))
+    tel.record(_ev(9999.0, "a"))
+    tel.attach_thumbs("a", False)
+    with tel._lock:
+        assert tel._events[-1].thumbs is False
+        assert tel._events[-2].thumbs is None
+    assert tel.per_model()["a"]["thumbs_down"] == 1
+    tel.attach_thumbs("missing-model", True)     # no pending: no-op
+
+
+def test_summary_is_one_consistent_snapshot():
+    """summary() under concurrent record(): every snapshot's funnels,
+    per-model counts and histogram totals agree with its own event
+    count — a half-applied record can never leak into a view."""
+    tel = Telemetry()
+    stop = threading.Event()
+    errs = []
+
+    def writer(k):
+        try:
+            j = 0
+            while not stop.is_set():
+                tel.record(_ev(float(j), f"m{k}",
+                               fallback="any" if j % 5 == 0 else "",
+                               route_s=0.002, cost=1.0))
+                j += 1
+        except Exception as e:                 # noqa: BLE001
+            errs.append(e)
+
+    def reader():
+        try:
+            for _ in range(300):
+                s = tel.summary()
+                n = s["events"]
+                assert sum(s["fallback_funnel"].values()) == n
+                assert sum(a["requests"]
+                           for a in s["per_model"].values()) == n
+                assert s["latency_totals"]["count"] == n
+                assert s["cost_totals"]["count"] == n
+                expect_fb = sum(v for k_, v in s["fallback_funnel"].items()
+                                if k_)
+                assert s["fallback_rate"] * max(n, 1) == \
+                    pytest.approx(expect_fb)
+        except Exception as e:                 # noqa: BLE001
+            errs.append(e)
+
+    writers = [threading.Thread(target=writer, args=(k,))
+               for k in range(3)]
+    readers = [threading.Thread(target=reader) for _ in range(2)]
+    for t in writers + readers:
+        t.start()
+    for t in readers:
+        t.join()
+    stop.set()
+    for t in writers:
+        t.join()
+    assert not errs, errs
 
 
 def test_sharding_counters():
