@@ -18,7 +18,8 @@ import traceback
 
 from benchmarks import (ablations, adaptive, analyzer_pruning, batch_mode,
                         cache_hit, feedback, load_aware, merging,
-                        obs_overhead, roofline, router_scale, routing_win)
+                        obs_overhead, roofline, router_scale, routing_win,
+                        soak)
 
 ALL = {
     "routing_win": routing_win.run,
@@ -33,6 +34,7 @@ ALL = {
     "merging": merging.run,
     "ablations": ablations.run,
     "roofline": roofline.run,
+    "soak": soak.run,
 }
 
 # benchmarks with a seconds-scale CI mode (each main accepts --smoke)
@@ -42,6 +44,7 @@ SMOKE = {
     "load_aware": load_aware.main,
     "cache_hit": cache_hit.main,
     "obs_overhead": obs_overhead.main,
+    "soak": soak.main,
 }
 
 

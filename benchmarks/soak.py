@@ -1,0 +1,552 @@
+"""Benchmark: sustained-load multi-tenant soak of the serving stack.
+
+Closed-loop replay of a bursty multi-tenant episode through the REAL
+serving path — ``MicroBatcher`` aggregation windows feeding
+``ServingEngine.submit`` (one fused ``route_all`` dispatch + deadline
+admission + grouped generate per window) — in VIRTUAL time, so an
+hours-equivalent episode runs in seconds and every run is
+deterministic.  Four phases over the same catalog and traffic:
+
+  1. control      — the clean episode (the reference outcome stream);
+  2. fault        — a runner fault is injected into the hot model
+     mid-soak: ONLY that model's group may degrade to
+     ``admission="failed"`` (the batch, and the soak, must survive);
+  3. restart      — a rolling restart under load: the router state is
+     checkpointed at a window boundary (``save_router_state``), the
+     router/engine/tracker are rebuilt from scratch, state is restored
+     (``load_router_state``), and the remaining backlog drains through
+     the new engine.  The restart must be TRANSPARENT: the outcome
+     stream is asserted identical to the control run;
+  4. queueing     — the same arrival trace through the discrete-event
+     ``ServingSimulator`` (real queueing delay) with window-batched
+     routing + per-tenant intake buckets: p99 / p99.9 tail latency,
+     shed/reroute rates and cross-tenant fairness are measured here.
+
+Soak-wide assertions (the PR's acceptance criteria):
+  * zero route-step recompiles after the control run's warmup — across
+    the fault run, the restart (fresh engine!) and the queueing phase;
+  * the load tracker nets to ZERO after every drain;
+  * a mid-soak runner fault degrades only its own group, never the
+    batch — and the failures are visible (``admission="failed"``);
+  * quiet tenants keep a near-zero shed rate while a flooding tenant
+    is rate-limited at intake (cross-tenant isolation);
+  * bounded tail latency and bounded cross-tenant unfairness (Jain).
+
+Writes ``results/bench/soak.json`` and ``results/soak_metrics.prom``
+(per-tenant admission funnel + ``soak_*`` gauges) — the CI SLO gate
+re-evaluates the soak SLOs from that dump.  ``--smoke`` runs a
+seconds-scale episode with the same assertions.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from types import SimpleNamespace
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from benchmarks.common import REPO, save_result, synthetic_entry
+from repro.core.mres import MRES
+from repro.core.orchestrator import OptiRoute
+from repro.core.preferences import TaskSignature
+from repro.core.routing import RoutingEngine
+from repro.core.telemetry import Telemetry
+from repro.checkpoint import load_router_state, save_router_state
+from repro.data.workload import (MultiTenantScenario, ServingSimulator,
+                                 TenantSpec, TrafficScenario,
+                                 jain_fairness, make_workload,
+                                 multi_tenant_arrivals)
+from repro.serving.async_engine import MicroBatcher, TenantPolicy
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.load import ADMISSION_KINDS, LoadTracker, plan_admission
+
+# (name, accuracy, latency_ms, cost, slots): hot dominates the static
+# score but owns the fewest decode slots (the load-aware stress shape)
+CATALOG: Tuple[Tuple[str, float, float, float, int], ...] = (
+    ("hot",   0.95, 40.0, 2.0,  4),
+    ("alt-a", 0.88, 60.0, 1.5,  8),
+    ("alt-b", 0.86, 80.0, 1.0,  8),
+    ("alt-c", 0.82, 50.0, 0.8,  8),
+    ("bulk",  0.75, 90.0, 0.5, 16),
+)
+HOT = CATALOG[0][0]
+_PROFILES = ("accuracy-first", "balanced", "cost-effective")
+
+
+class SoakAnalyzer:
+    """Deterministic text -> signature stand-in: the soak exercises the
+    serving/admission path, not the trained analyzer (and restart
+    equality needs bit-identical signatures across runs)."""
+
+    def analyze_batch(self, texts):
+        return [TaskSignature(task_type="chat", domain="general",
+                              complexity=round(
+                                  0.15 + (len(t) % 37) / 60.0, 4))
+                for t in texts]
+
+    def analyze(self, text):
+        return self.analyze_batch([text])[0]
+
+
+class FakeRunner:
+    """Deterministic zero-weight runner: ``generate`` returns
+    (B, max_new) token zeros with ``sim_latency_s = service_s * B``
+    (the engine divides by batch size -> ``service_s`` per request)."""
+
+    class _Cfg:
+        vocab_size = 256
+
+    cfg = _Cfg()
+
+    def __init__(self, service_s: float):
+        self.service_s = float(service_s)
+
+    def generate(self, toks, max_new: int = 8):
+        B = int(np.asarray(toks).shape[0])
+        return SimpleNamespace(tokens=np.zeros((B, max_new), np.int32),
+                               sim_latency_s=self.service_s * B)
+
+
+class FaultRunner:
+    """Injected mid-soak: every generate raises (a crashed backend)."""
+
+    cfg = FakeRunner._Cfg()
+
+    def generate(self, toks, max_new: int = 8):
+        raise RuntimeError("soak fault injection")
+
+
+def _build_catalog() -> Tuple[MRES, List[str]]:
+    m = MRES()
+    for name, acc, lat, cost, _ in CATALOG:
+        e = synthetic_entry(name, accuracy=acc, latency_ms=lat, cost=cost,
+                            task_types=("chat",), domains=("general",),
+                            generalist=True)
+        e.runner = FakeRunner(lat / 1e3)
+        m.register(e)
+    return m, [c[0] for c in CATALOG]
+
+
+def _fresh_stack(sc: MultiTenantScenario, tel: Telemetry
+                 ) -> Tuple[ServingEngine, LoadTracker, MRES]:
+    """Catalog + tracker + router + engine, built from scratch (the
+    rolling restart proves state transfers via the checkpoint, not via
+    shared objects)."""
+    mres, names = _build_catalog()
+    service = [c[2] / 1e3 for c in CATALOG]
+    tracker = LoadTracker(len(names), tau_s=sc.base.deadline_ms / 2e3,
+                          default_service_s=float(np.mean(service)))
+    for j, c in enumerate(CATALOG):
+        tracker.set_capacity(j, float(c[4]))
+    router = OptiRoute(mres, SoakAnalyzer(), knn_k=len(names),
+                       telemetry=tel, load=tracker, load_weight=1.0)
+    return ServingEngine(router), tracker, mres
+
+
+def _policies(sc: MultiTenantScenario) -> Dict[str, TenantPolicy]:
+    return {t.name: TenantPolicy(weight=t.weight, rate=t.rate_limit)
+            for t in sc.tenants}
+
+
+# ----------------------------------------------------------------------
+# phase 1: virtual-time window replay through the real engine
+# ----------------------------------------------------------------------
+
+def replay_engine_soak(sc: MultiTenantScenario, tel: Telemetry, *,
+                       max_batch: int = 32, max_wait_s: float = 0.1,
+                       fail_t: Optional[float] = None,
+                       restart_t: Optional[float] = None,
+                       ckpt_path: Optional[str] = None) -> Dict:
+    """One virtual-time episode: arrivals -> MicroBatcher windows ->
+    ``engine.submit`` per window.  ``fail_t`` arms a hot-model runner
+    fault at that virtual time (injected until a window actually
+    routes to it); ``restart_t`` performs a checkpoint/rebuild/restore
+    rolling restart at the first window boundary past that time.
+    Returns the per-request outcome stream plus accounting."""
+    sc = sc.validate()
+    times, tidx = multi_tenant_arrivals(sc)
+    assert times.size, "scenario produced no arrivals"
+    pool = make_workload(64, seed=sc.base.seed + 101,
+                         task_type=sc.base.task_type,
+                         domain=sc.base.domain)
+    mb = MicroBatcher(max_batch=max_batch, max_wait_s=max_wait_s,
+                      policies=_policies(sc))
+    engine, tracker, mres = _fresh_stack(sc, tel)
+    stack = {"engine": engine, "tracker": tracker, "mres": mres}
+
+    # warm every power-of-two shape bucket the windows can hit, through
+    # the full submit path (route + admission + grouped generate)
+    b = 1
+    while b <= max_batch:
+        engine.submit([Request(text=pool[j % len(pool)].text,
+                               prefs="accuracy-first", id=-1, max_new=4,
+                               deadline_ms=sc.base.deadline_ms)
+                       for j in range(b)])
+        b *= 2
+    compiles_after_warmup = tel.route_step_stats()["compiles"]
+
+    state = {"injecting": False, "fault_armed": fail_t is None,
+             "fault_seen": False, "restarted": restart_t is None}
+    outcomes: List[Tuple[int, str, str, str]] = []
+    windows: List[int] = []
+
+    def flush(now: float) -> None:
+        items = mb.take(now)
+        if not items:
+            return
+        inject = state["injecting"]
+        hot = stack["mres"].entry(HOT)
+        keep = hot.runner
+        if inject:
+            hot.runner = FaultRunner()
+        try:
+            resps = stack["engine"].submit(items)
+        finally:
+            if inject:
+                hot.runner = keep
+        windows.append(len(items))
+        if inject:
+            for rp in resps:        # ONLY the hot group may degrade
+                if rp.model == HOT and not rp.shed:
+                    assert rp.failed and "soak fault" in rp.error, rp
+                else:
+                    assert not rp.failed, (rp.model, rp.error)
+            if any(rp.failed for rp in resps):
+                state["fault_seen"] = True
+                state["injecting"] = False
+        outcomes.extend((rp.request.id, rp.request.tenant, rp.admission,
+                         rp.model) for rp in resps)
+
+    def boundary_events(now: float) -> None:
+        # fired ONLY at window boundaries, which the control and
+        # restart runs share exactly — a restart elsewhere would change
+        # the windowing and break the equality assertion
+        if fail_t is not None and not state["fault_armed"] \
+                and now >= fail_t:
+            state["fault_armed"] = True
+            state["injecting"] = True
+        if restart_t is not None and not state["restarted"] \
+                and now >= restart_t:
+            assert ckpt_path, "restart needs a checkpoint path"
+            save_router_state(ckpt_path, stack["engine"].router)
+            engine2, tracker2, mres2 = _fresh_stack(sc, tel)
+            load_router_state(ckpt_path, engine2.router)
+            stack.update(engine=engine2, tracker=tracker2, mres=mres2)
+            state["restarted"] = True
+
+    for k in range(times.size):
+        t = float(times[k])
+        while True:
+            dl = mb.next_deadline(t)
+            if dl is None or dl > t:
+                break
+            flush(dl)
+            boundary_events(dl)
+        ti = int(tidx[k])
+        name = sc.tenants[ti].name
+        req = Request(text=pool[k % len(pool)].text,
+                      prefs=_PROFILES[ti % len(_PROFILES)], id=k,
+                      max_new=4, deadline_ms=sc.deadline_ms_of(ti),
+                      tenant=name)
+        verdict = mb.offer(name, req, t)
+        if verdict != "queued":      # intake shed: degrade immediately
+            tel.record_admission("shed", tenant=name)
+            tel.inc(f"intake_{verdict.replace('-', '_')}")
+            outcomes.append((k, name, "shed", ""))
+    end = float(times[-1])
+    while mb.pending():
+        dl = mb.next_deadline(end)
+        end = max(end, dl if dl is not None else end)
+        flush(end)
+        boundary_events(end)
+
+    # the tracker must net to zero after the drain — any residue is a
+    # leaked admit/start (and a permanent phantom routing penalty)
+    q, f, _, _ = stack["tracker"].snapshot()
+    assert (q == 0).all() and (f == 0).all(), (q, f)
+    assert len(outcomes) == times.size, (len(outcomes), times.size)
+    if fail_t is not None:
+        assert state["fault_seen"], "fault was armed but never fired"
+    assert all(w <= max_batch for w in windows), max(windows)
+
+    tally = {t.name: dict.fromkeys(ADMISSION_KINDS, 0)
+             for t in sc.tenants}
+    for _, tenant, adm, _ in outcomes:
+        tally[tenant][adm] += 1
+    return {"outcomes": sorted(outcomes), "windows": windows,
+            "tally": tally, "intake": mb.stats,
+            "fault_seen": state["fault_seen"],
+            "restarted": state["restarted"],
+            "compiles_after_warmup": compiles_after_warmup,
+            "requests": int(times.size)}
+
+
+# ----------------------------------------------------------------------
+# phase 2: queueing tails through the discrete-event simulator
+# ----------------------------------------------------------------------
+
+def run_queueing_soak(sc: MultiTenantScenario, tel: Telemetry, *,
+                      max_batch: int = 32, max_wait_s: float = 0.1
+                      ) -> Dict:
+    """The same traffic through real queueing: per-tenant intake
+    buckets, window-batched ``route_many`` + ``plan_admission``, and
+    the ``ServingSimulator``'s FIFO servers.  Tail latency, shed /
+    reroute rates and per-tenant fairness are computed here."""
+    sc = sc.validate()
+    times, tidx = multi_tenant_arrivals(sc)
+    R = times.size
+    mres, names = _build_catalog()
+    col = {m: j for j, m in enumerate(names)}
+    service = [c[2] / 1e3 for c in CATALOG]
+    capacity = [c[4] for c in CATALOG]
+    tracker = LoadTracker(len(names), tau_s=sc.base.deadline_ms / 2e3,
+                          default_service_s=float(np.mean(service)))
+    eng = RoutingEngine(mres, knn_k=len(names), load=tracker,
+                        load_weight=1.0, telemetry=tel)
+    sim = ServingSimulator(service, capacity, tracker=tracker)
+
+    # intake rate limiting (virtual time), then window assignment over
+    # the ACCEPTED stream — same aggregation constants as phase 1
+    buckets = {t.name: _policies(sc)[t.name].make_bucket()
+               for t in sc.tenants}
+    ok = np.zeros(R, bool)
+    for i, t in enumerate(times):
+        b = buckets[sc.tenants[int(tidx[i])].name]
+        ok[i] = b is None or b.try_take(float(t))
+    win_of = np.full(R, -1, np.int64)
+    windows: List[List[int]] = []
+    w_start = -1.0
+    for i in np.flatnonzero(ok):
+        t = float(times[i])
+        if (not windows or len(windows[-1]) >= max_batch
+                or t - w_start > max_wait_s):
+            windows.append([])
+            w_start = t
+        win_of[i] = len(windows) - 1
+        windows[-1].append(int(i))
+
+    rng = np.random.default_rng(sc.base.seed + 17)
+    sigs = [TaskSignature(task_type="chat", domain="general",
+                          complexity=float(rng.random()))
+            for _ in range(64)]
+    decisions: Dict[int, Tuple[int, str]] = {}
+    routed_windows = set()
+
+    def route_fn(i: int, t: float) -> Tuple[int, str]:
+        name = sc.tenants[int(tidx[i])].name
+        if not ok[i]:
+            tel.record_admission("shed", tenant=name)
+            tel.inc("intake_rate_limited")
+            return 0, "shed"
+        w = int(win_of[i])
+        if w not in routed_windows:   # one fused dispatch per window
+            idxs = windows[w]
+            ds = eng.route_many(
+                [_PROFILES[int(tidx[j]) % len(_PROFILES)] for j in idxs],
+                [sigs[j % len(sigs)] for j in idxs])
+            pending = np.zeros(len(names), np.int64)
+            for j, d in zip(idxs, ds):
+                m, kind, _ = plan_admission(
+                    d, tracker, col, sc.deadline_ms_of(int(tidx[j])),
+                    pending=pending)
+                if kind != "shed":
+                    pending[col[m]] += 1
+                decisions[j] = (col[m], kind)
+                tel.record_admission(
+                    kind, tenant=sc.tenants[int(tidx[j])].name)
+            routed_windows.add(w)
+        return decisions[i]
+
+    res = sim.run(times, route_fn, deadline_ms=sc.base.deadline_ms)
+    served = ~res["shed"]
+    lat = res["latency_s"][served]
+    per_tenant = {}
+    for i, t in enumerate(sc.tenants):
+        mask = tidx == i
+        offered = int(mask.sum())
+        per_tenant[t.name] = {
+            "offered": offered,
+            "served": int((mask & served).sum()),
+            "shed": int((mask & res["shed"]).sum()),
+            "intake_rejected": int((mask & ~ok).sum()),
+            "shed_rate": float((mask & res["shed"]).sum()
+                               / max(offered, 1)),
+        }
+    # fairness over each tenant's served share of its POST-INTAKE
+    # demand: intake limits are policy (flood pays for its own flood);
+    # unfairness would be the shared pipeline starving one tenant's
+    # accepted traffic
+    ratios = [per_tenant[t.name]["served"]
+              / max(per_tenant[t.name]["offered"]
+                    - per_tenant[t.name]["intake_rejected"], 1)
+              for t in sc.tenants]
+    fair = jain_fairness(ratios)
+    return {
+        "requests": int(R),
+        "served": int(served.sum()),
+        "throughput_rps": float(served.sum() / sc.base.duration_s),
+        "p50_s": res["p50_s"], "p99_s": res["p99_s"],
+        "p999_s": float(np.quantile(lat, 0.999)) if lat.size else 0.0,
+        "slo_miss_rate": res["slo_miss_rate"],
+        "shed_rate": float(res["shed"].mean()),
+        "reroute_rate": float(res["rerouted"].mean()),
+        "fairness_jain": fair,
+        "per_tenant": per_tenant,
+    }
+
+
+# ----------------------------------------------------------------------
+# the full soak
+# ----------------------------------------------------------------------
+
+def _scenario(*, duration_s: float, base_rate: float, burst_rate: float,
+              flood_limit: float, seed: int = 11) -> MultiTenantScenario:
+    return MultiTenantScenario(
+        base=TrafficScenario(duration_s=duration_s, base_rate=base_rate,
+                             burst_rate=burst_rate, burst_start=0.25,
+                             burst_len=0.35, deadline_ms=400.0,
+                             seed=seed),
+        tenants=(TenantSpec("acme", weight=2.0),
+                 TenantSpec("globex", weight=1.0),
+                 TenantSpec("flood", weight=1.0, rate_scale=3.0,
+                            rate_limit=flood_limit, deadline_ms=300.0)))
+
+
+def run(*, duration_s: float = 90.0, base_rate: float = 25.0,
+        burst_rate: float = 100.0, flood_limit: float = 30.0,
+        max_batch: int = 32, max_wait_ms: float = 100.0,
+        quiet_shed_max: float = 0.05, fairness_min: float = 0.85,
+        p99_bound_s: float = 0.8, p999_bound_s: float = 1.0,
+        verbose: bool = True):
+    sc = _scenario(duration_s=duration_s, base_rate=base_rate,
+                   burst_rate=burst_rate, flood_limit=flood_limit)
+    wait_s = max_wait_ms / 1e3
+    tel = Telemetry()
+    results_dir = REPO / "results"
+    results_dir.mkdir(parents=True, exist_ok=True)
+
+    t0 = time.perf_counter()
+    control = replay_engine_soak(sc, tel, max_batch=max_batch,
+                                 max_wait_s=wait_s)
+    control_s = time.perf_counter() - t0
+    fault = replay_engine_soak(sc, tel, max_batch=max_batch,
+                               max_wait_s=wait_s,
+                               fail_t=0.35 * duration_s)
+    restart = replay_engine_soak(
+        sc, tel, max_batch=max_batch, max_wait_s=wait_s,
+        restart_t=0.6 * duration_s,
+        ckpt_path=str(results_dir / "soak_router.npz"))
+
+    # the rolling restart must be invisible in the outcome stream
+    assert restart["restarted"]
+    assert restart["outcomes"] == control["outcomes"], \
+        "rolling restart changed routing/admission outcomes"
+    assert fault["fault_seen"]
+
+    queueing = run_queueing_soak(sc, tel, max_batch=max_batch,
+                                 max_wait_s=wait_s)
+
+    # zero recompiles after the FIRST run's warmup — across the fault
+    # run, the rebuilt post-restart engine and the queueing phase
+    post_warm = (tel.route_step_stats()["compiles"]
+                 - control["compiles_after_warmup"])
+    assert post_warm == 0, f"{post_warm} route-step recompiles mid-soak"
+
+    # cross-tenant isolation: the flooding tenant was rate-limited at
+    # intake while the quiet tenants kept a near-zero shed rate
+    for run_row in (control, fault, restart):
+        for t in sc.tenants:
+            total = max(sum(run_row["tally"][t.name].values()), 1)
+            rate = run_row["tally"][t.name]["shed"] / total
+            if t.rate_limit is None:
+                assert rate <= quiet_shed_max, (t.name, rate)
+    assert control["intake"]["flood"]["rate_limited"] > 0
+    quiet = [t.name for t in sc.tenants if t.rate_limit is None]
+    engine_fair = jain_fairness(
+        [sum(v for k, v in control["tally"][n].items()
+             if k in ("admitted", "rerouted"))
+         / max(control["intake"][n]["queued"], 1) for n in quiet])
+    assert engine_fair >= fairness_min, engine_fair
+    assert queueing["fairness_jain"] >= fairness_min, queueing
+    for name in quiet:
+        assert queueing["per_tenant"][name]["shed_rate"] \
+            <= quiet_shed_max, queueing["per_tenant"]
+    assert queueing["p99_s"] <= p99_bound_s, queueing["p99_s"]
+    assert queueing["p999_s"] <= p999_bound_s, queueing["p999_s"]
+
+    # exportable SLO surface: soak gauges + per-tenant funnel -> .prom
+    tel.set_gauge("soak_post_warmup_compiles", float(post_warm))
+    tel.set_gauge("soak_fairness_jain", queueing["fairness_jain"])
+    tel.set_gauge("soak_p99_s", queueing["p99_s"])
+    tel.set_gauge("soak_p999_s", queueing["p999_s"])
+    tel.set_gauge("soak_shed_rate", queueing["shed_rate"])
+    tel.set_gauge("soak_throughput_rps", queueing["throughput_rps"])
+    tel.set_gauge("soak_requests", float(control["requests"]))
+    tel.set_gauge("soak_windows", float(len(control["windows"])))
+    from repro.obs import write_prom
+    prom_path = results_dir / "soak_metrics.prom"
+    write_prom(str(prom_path), tel)
+
+    us = control_s / max(control["requests"], 1) * 1e6
+    if verbose:
+        print(f"  engine soak: {control['requests']} reqs in "
+              f"{len(control['windows'])} windows "
+              f"({us:.0f}us/req wall), tally={control['tally']}")
+        print(f"  fault run: fault_seen={fault['fault_seen']} "
+              f"failed={ {t: v['failed'] for t, v in fault['tally'].items()} }")
+        print(f"  restart run: outcomes identical to control "
+              f"({len(restart['outcomes'])} requests)")
+        print(f"  queueing: p50={queueing['p50_s']*1e3:.0f}ms "
+              f"p99={queueing['p99_s']*1e3:.0f}ms "
+              f"p99.9={queueing['p999_s']*1e3:.0f}ms "
+              f"shed={queueing['shed_rate']*100:.1f}% "
+              f"reroute={queueing['reroute_rate']*100:.1f}% "
+              f"jain={queueing['fairness_jain']:.3f}")
+        print(f"  recompiles after warmup: {post_warm}  "
+              f"-> {prom_path}")
+
+    payload = {
+        "scenario": {"duration_s": duration_s, "base_rate": base_rate,
+                     "burst_rate": burst_rate,
+                     "flood_limit": flood_limit,
+                     "tenants": [dataclasses.asdict(t)
+                                 for t in sc.tenants]},
+        "catalog": [dict(zip(("name", "accuracy", "latency_ms", "cost",
+                              "slots"), c)) for c in CATALOG],
+        "engine_soak": {k: control[k] for k in
+                        ("requests", "tally", "intake", "windows")},
+        "fault_run": {"fault_seen": fault["fault_seen"],
+                      "tally": fault["tally"]},
+        "restart_run": {"restarted": restart["restarted"],
+                        "outcomes_match_control": True},
+        "queueing": queueing,
+        "post_warmup_compiles": post_warm,
+        "engine_us_per_req": us,
+    }
+    save_result("soak", payload)
+    return ("soak", us,
+            f"{control['requests']} reqs/run x3 + restart + fault, "
+            f"0 recompiles post-warmup, p99.9 "
+            f"{queueing['p999_s']*1e3:.0f}ms, shed "
+            f"{queueing['shed_rate']*100:.1f}%, jain "
+            f"{queueing['fairness_jain']:.3f}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale episode for CI; same restart/"
+                    "fault/recompile/fairness assertions")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        run(duration_s=30.0, base_rate=12.0, burst_rate=48.0,
+            flood_limit=20.0)
+    else:
+        run()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

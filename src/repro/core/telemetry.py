@@ -75,6 +75,9 @@ class Telemetry:
         # hard cap keeps memory bounded even if qps() is never called)
         self._qps_ts: Deque[float] = collections.deque(maxlen=65536)
         self._admissions: Dict[str, int] = {}
+        # tenant -> {kind -> count}: the per-tenant admission funnel
+        # (fairness dashboards key on this; bounded by tenant count)
+        self._tenant_admissions: Dict[str, Dict[str, int]] = {}
         self._cache: Dict[str, int] = {}
         self._route_step: Dict[str, int] = {"dispatches": 0,
                                             "compiles": 0}
@@ -156,18 +159,31 @@ class Telemetry:
         with self._lock:
             return dict(self._sharding)
 
-    def record_admission(self, kind: str, count: int = 1) -> None:
-        """Count one deadline-admission outcome (``admitted`` /
-        ``rerouted`` / ``shed`` — see ``repro.serving.load``)."""
+    def record_admission(self, kind: str, count: int = 1, *,
+                         tenant: Optional[str] = None) -> None:
+        """Count one admission outcome (``admitted`` / ``rerouted`` /
+        ``shed`` / ``failed`` — see ``repro.serving.load``).  ``tenant``
+        additionally attributes the outcome to a per-tenant funnel so
+        fairness (who gets shed when the system saturates) is
+        observable per customer, not just in aggregate."""
         with self._lock:
             self._admissions[kind] = self._admissions.get(kind, 0) + count
+            if tenant is not None:
+                t = self._tenant_admissions.setdefault(tenant, {})
+                t[kind] = t.get(kind, 0) + count
 
     def admission_funnel(self) -> Dict[str, int]:
-        """Deadline-admission outcome counts: how much traffic was
-        admitted as routed, rerouted to a lower-ranked candidate to
-        make its SLO, or shed as a guaranteed miss."""
+        """Admission outcome counts: how much traffic was admitted as
+        routed, rerouted to a lower-ranked candidate to make its SLO,
+        shed as a guaranteed miss, or failed at generation time."""
         with self._lock:
             return dict(self._admissions)
+
+    def admission_by_tenant(self) -> Dict[str, Dict[str, int]]:
+        """Per-tenant admission funnels: ``{tenant: {kind: count}}``
+        for every outcome recorded with a tenant attribution."""
+        with self._lock:
+            return {t: dict(k) for t, k in self._tenant_admissions.items()}
 
     def record_cache(self, kind: str, count: int = 1) -> None:
         """Count one semantic-cache outcome (``hit`` / ``miss`` at
@@ -295,6 +311,9 @@ class Telemetry:
                                   if self._events_total else 0.0),
                 "fallback_funnel": dict(self._fallback_funnel),
                 "admission_funnel": dict(self._admissions),
+                "admission_by_tenant": {
+                    t: dict(k)
+                    for t, k in self._tenant_admissions.items()},
                 "cache_funnel": {k: self._cache.get(k, 0)
                                  for k in CACHE_KINDS},
                 "route_step": dict(self._route_step),

@@ -417,6 +417,90 @@ def poisson_arrivals(sc: TrafficScenario) -> np.ndarray:
     return all_ts[keep]
 
 
+# ----------------------------------------------------------------------
+# multi-tenant traffic (async serving + soak harness)
+# ----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's share of a multi-tenant episode.
+
+    ``rate_scale`` multiplies the base scenario's arrival rates (a
+    flooding tenant is simply ``rate_scale`` >> 1); ``weight`` is the
+    fair-dequeue share the serving layer should give it; ``rate_limit``
+    (req/s) is the token-bucket ceiling intake enforces (None = no
+    limit); ``deadline_ms`` overrides the base scenario's SLO for this
+    tenant's requests (None = inherit)."""
+    name: str
+    weight: float = 1.0
+    rate_scale: float = 1.0
+    rate_limit: Optional[float] = None
+    deadline_ms: Optional[float] = None
+
+    def validate(self) -> "TenantSpec":
+        assert self.name, "tenant needs a name"
+        assert self.weight > 0 and self.rate_scale > 0
+        assert self.rate_limit is None or self.rate_limit > 0
+        return self
+
+
+@dataclass(frozen=True)
+class MultiTenantScenario:
+    """A shared bursty episode fanned out across tenants: every tenant
+    draws its own independent Poisson process shaped like ``base``
+    scaled by its ``rate_scale`` (seeded per tenant, so episodes are
+    reproducible and tenants are independent)."""
+    base: TrafficScenario = TrafficScenario()
+    tenants: Tuple[TenantSpec, ...] = (
+        TenantSpec("acme"), TenantSpec("globex"))
+
+    def validate(self) -> "MultiTenantScenario":
+        self.base.validate()
+        names = [t.validate().name for t in self.tenants]
+        assert len(names) == len(set(names)), f"duplicate tenants: {names}"
+        assert names, "need at least one tenant"
+        return self
+
+    def deadline_ms_of(self, tenant_idx: int) -> float:
+        t = self.tenants[tenant_idx]
+        return float(t.deadline_ms if t.deadline_ms is not None
+                     else self.base.deadline_ms)
+
+
+def multi_tenant_arrivals(sc: MultiTenantScenario
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+    """Merged arrival stream: ``(times, tenant_idx)`` — times sorted
+    ascending, ``tenant_idx[i]`` indexing ``sc.tenants``.  Each
+    tenant's process is an independently-seeded copy of the base
+    scenario with its rates scaled by ``rate_scale``."""
+    sc = sc.validate()
+    times: List[np.ndarray] = []
+    idx: List[np.ndarray] = []
+    for i, t in enumerate(sc.tenants):
+        per = dataclasses.replace(
+            sc.base,
+            base_rate=sc.base.base_rate * t.rate_scale,
+            burst_rate=sc.base.burst_rate * t.rate_scale,
+            seed=sc.base.seed + 7919 * (i + 1))
+        a = poisson_arrivals(per)
+        times.append(a)
+        idx.append(np.full(a.size, i, np.int64))
+    ts = np.concatenate(times) if times else np.zeros(0)
+    ti = np.concatenate(idx) if idx else np.zeros(0, np.int64)
+    order = np.argsort(ts, kind="stable")
+    return ts[order], ti[order]
+
+
+def jain_fairness(x: Sequence[float]) -> float:
+    """Jain's fairness index of per-tenant allocations: 1.0 when all
+    equal, -> 1/n as one tenant dominates.  Feed it WEIGHT-NORMALIZED
+    goodput (served/weight) so weighted fairness scores as 1.0."""
+    v = np.asarray(list(x), np.float64)
+    if v.size == 0 or not np.any(v):
+        return 1.0
+    return float(v.sum() ** 2 / (v.size * (v ** 2).sum()))
+
+
 class ServingSimulator:
     """Discrete-event queueing simulator over a routed catalog.
 

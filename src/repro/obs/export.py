@@ -6,7 +6,10 @@ stable names (dashboards and the CI SLO gate key on these):
     repro_requests_total{model="..."}           counter
     repro_fallback_total{stage="..."}           counter
     repro_admission_total{kind="..."}           counter
+    repro_tenant_admission_total{kind=,tenant=} counter
     repro_cache_total{kind="..."}               counter
+    repro_counter_total{name="..."}             counter (Telemetry.inc)
+    repro_gauge{name="..."}                     gauge (set_gauge)
     repro_route_step_dispatches_total           counter
     repro_route_step_compiles_total             counter
     repro_sharding_silent_replications_total    counter
@@ -26,6 +29,7 @@ from a previous process.
 """
 from __future__ import annotations
 
+import re
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, Optional
@@ -89,6 +93,15 @@ def prometheus_text(telemetry, *, load=None, tracer=None,
     for kind, n in sorted(s["admission_funnel"].items()):
         w.sample("repro_admission_total", n, {"kind": kind})
 
+    tenants = s.get("admission_by_tenant", {})
+    if tenants:
+        w.header("repro_tenant_admission_total", "counter",
+                 "Admission verdicts per tenant")
+        for tenant, kinds in sorted(tenants.items()):
+            for kind, n in sorted(kinds.items()):
+                w.sample("repro_tenant_admission_total", n,
+                         {"kind": kind, "tenant": tenant})
+
     w.header("repro_cache_total", "counter", "Semantic cache outcomes")
     for kind, n in sorted(s["cache_funnel"].items()):
         w.sample("repro_cache_total", n, {"kind": kind})
@@ -131,6 +144,19 @@ def prometheus_text(telemetry, *, load=None, tracer=None,
              "Simulated serving cost per model")
     for model, agg in sorted(s["per_model"].items()):
         w.sample("repro_model_cost_total", agg["cost"], {"model": model})
+
+    counters = s.get("counters", {})
+    if counters:
+        w.header("repro_counter_total", "counter",
+                 "Generic monotonic counters (Telemetry.inc)")
+        for name, v in sorted(counters.items()):
+            w.sample("repro_counter_total", v, {"name": name})
+    gauges = s.get("gauges", {})
+    if gauges:
+        w.header("repro_gauge", "gauge",
+                 "Generic point-in-time gauges (Telemetry.set_gauge)")
+        for name, v in sorted(gauges.items()):
+            w.sample("repro_gauge", v, {"name": name})
 
     if load is not None:
         lm = load.metrics()
@@ -210,8 +236,40 @@ def metrics_from_prom(text: str) -> Dict[str, float]:
     admitted = lab("repro_admission_total", kind="admitted")
     rerouted = lab("repro_admission_total", kind="rerouted")
     shed = lab("repro_admission_total", kind="shed")
-    planned = admitted + rerouted + shed
+    failed = lab("repro_admission_total", kind="failed")
+    planned = admitted + rerouted + shed + failed
     m["shed_rate"] = shed / planned if planned else 0.0
+    m["failed_rate"] = failed / planned if planned else 0.0
+
+    # per-tenant shed rates (SLO rules key on tenant_shed_rate_<name>
+    # and the cross-tenant worst case tenant_shed_rate_max)
+    per_tenant: Dict[str, Dict[str, float]] = {}
+    pat = re.compile(r'^repro_tenant_admission_total\{kind="([^"]+)",'
+                     r'tenant="([^"]+)"\}$')
+    for key, v in raw.items():
+        match = pat.match(key)
+        if match:
+            per_tenant.setdefault(match.group(2), {})[match.group(1)] = v
+    rates = []
+    for tenant, kinds in sorted(per_tenant.items()):
+        total = sum(kinds.values())
+        rate = kinds.get("shed", 0.0) / total if total else 0.0
+        m[f"tenant_shed_rate_{tenant}"] = rate
+        rates.append(rate)
+    m["tenant_shed_rate_max"] = max(rates) if rates else 0.0
+
+    # generic counters/gauges surface under their bare names so SLO
+    # rules can target them directly (e.g. the soak harness's
+    # ``soak_p999_s`` / ``soak_post_warmup_compiles`` gauges); derived
+    # keys above win any collision
+    for pat2, kind in (
+            (re.compile(r'^repro_gauge\{name="([^"]+)"\}$'), "gauge"),
+            (re.compile(r'^repro_counter_total\{name="([^"]+)"\}$'),
+             "counter")):
+        for key, v in raw.items():
+            match = pat2.match(key)
+            if match and match.group(1) not in m:
+                m[match.group(1)] = v
 
     hits = lab("repro_cache_total", kind="hit")
     misses = lab("repro_cache_total", kind="miss")

@@ -1,5 +1,20 @@
 """Serving substrate: runners, catalog builder, batched engine, live
-per-model load tracking for load-/SLO-aware routing."""
+per-model load tracking for load-/SLO-aware routing, and the asyncio
+multi-tenant front-end (micro-batch windows, token-bucket rate limits,
+weighted-fair dequeue, streaming)."""
 from repro.serving.load import ADMISSION_KINDS, LoadTracker, plan_admission
 
-__all__ = ["ADMISSION_KINDS", "LoadTracker", "plan_admission"]
+__all__ = ["ADMISSION_KINDS", "LoadTracker", "plan_admission",
+           "TokenBucket", "TenantPolicy", "MicroBatcher",
+           "AsyncServingEngine"]
+
+
+def __getattr__(name):
+    # the async front-end imports the engine stack (and transitively
+    # jax); load it lazily so `from repro.serving import LoadTracker`
+    # stays cheap for tools that only need the tracker
+    if name in ("TokenBucket", "TenantPolicy", "MicroBatcher",
+                "AsyncServingEngine"):
+        from repro.serving import async_engine
+        return getattr(async_engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -17,7 +17,11 @@ request) and enforces per-request latency SLOs: a request carrying
 ``deadline_ms`` whose routed model's estimated wait+service misses the
 deadline is rerouted to its best-scoring candidate that fits, or shed
 outright when none can make it (``Response.admission`` records the
-outcome; counts land in ``Telemetry.admission_funnel``).
+outcome; counts land in ``Telemetry.admission_funnel``).  A runner
+exception during one model group's generate degrades ONLY that group:
+its requests come back with ``admission="failed"`` (tokens=None,
+``Response.error`` carrying the cause) while every other group in the
+batch is served normally — one bad model never kills the batch.
 
 When a ``SemanticCache`` is attached (``cache=`` or via the router),
 ``submit`` consults it FIRST: each request's (preference axes + text
@@ -40,6 +44,7 @@ import numpy as np
 
 from repro.core.orchestrator import OptiRoute
 from repro.core.preferences import TaskSignature, resolve_batch
+from repro.core.telemetry import RouteEvent
 from repro.data.tokenizer import HashTokenizer
 from repro.obs.trace import NOOP_SPAN
 from repro.serving.load import LoadTracker, plan_admission
@@ -66,15 +71,27 @@ class Response:
     analyzer_s: float
     fallback: str = ""
     rq: Any = None                    # RoutedQuery (adaptive loop handle)
-    admission: str = "admitted"       # admitted | rerouted | shed
+    admission: str = "admitted"       # admitted | rerouted | shed | failed
     est_latency_s: float = 0.0        # admission-time wait+service estimate
     cache_hit: bool = False           # served from the semantic cache
     trace_id: str = ""                # this request's trace (obs.trace)
     trace_root: Any = None            # root Span handle (observe attaches)
+    error: str = ""                   # failure detail (admission="failed"
+                                      # or an intake rejection reason)
 
     @property
     def shed(self) -> bool:
         return self.admission == "shed"
+
+    @property
+    def failed(self) -> bool:
+        return self.admission == "failed"
+
+    @property
+    def served(self) -> bool:
+        """True when a model actually produced (or simulated) an
+        answer — sheds never took a slot, fails took one but raised."""
+        return self.admission in ("admitted", "rerouted")
 
 
 class ServingEngine:
@@ -221,7 +238,13 @@ class ServingEngine:
                 tr.record_span("admission", parent=root,
                                verdict=resp.admission,
                                est_latency_s=resp.est_latency_s)
-            if not resp.shed:
+            if resp.failed:
+                # the group DID take a slot and raise — the trace tree
+                # shows the failed generate stage, not a missing one
+                tr.record_span("generate", parent=root,
+                               duration_s=0.0, model=resp.model,
+                               outcome="failed", error=resp.error)
+            elif not resp.shed:
                 tr.record_span("generate", parent=root,
                                duration_s=resp.sim_latency_s,
                                model=resp.model)
@@ -273,11 +296,13 @@ class ServingEngine:
                     # admission ranks over
                     model, kind, est = rq.model, "admitted", 0.0
                 else:
+                    # the funnel is recorded AFTER generation (one
+                    # final outcome per request), not here: an admitted
+                    # request whose group later fails must count as
+                    # "failed", not "admitted"
                     model, kind, est = plan_admission(
                         rq.decision, self.load, col, r.deadline_ms,
                         pending=pending)
-                    if tel is not None:
-                        tel.record_admission(kind)
                 plans.append((model, kind, est))
                 if pending is not None and kind != "shed":
                     pending[col[model]] += 1
@@ -295,7 +320,7 @@ class ServingEngine:
                 if self.load is not None:
                     self.load.admit(col[model], count=len(idxs))
                     self.load.start(col[model], count=len(idxs))
-                gen, per_req_s = None, None
+                gen, per_req_s, err = None, None, ""
                 try:
                     if entry.runner is not None:
                         toks = self._tokens(
@@ -306,28 +331,38 @@ class ServingEngine:
                                  if gen is not None else
                                  entry.raw_metrics.get("latency_ms",
                                                        0.0) / 1e3)
+                except Exception as e:             # noqa: BLE001
+                    # one model group failing must never kill the other
+                    # groups in the batch: degrade THIS group to
+                    # admission="failed" responses and keep serving
+                    err = f"{type(e).__name__}: {e}"
                 finally:
                     # a generate failure must still release the slots,
                     # or the model's inflight count (and its routing
                     # penalty) stays inflated forever; no EWMA sample
-                    # on failure
+                    # on failure (per_req_s is still None then)
                     if self.load is not None:
                         self.load.finish(col[model], per_req_s,
                                          count=len(idxs))
                 for j, i in enumerate(idxs):
                     r, rq = routed[i]
                     # a rerouted request was SERVED by a different
-                    # model than its routed decision; dropping the rq
+                    # model than its routed decision, and a failed one
+                    # produced no outcome at all; dropping the rq
                     # handle keeps observe() from crediting the wrong
-                    # bandit arm
+                    # (or any) bandit arm
                     out[i] = Response(
                         request=r, model=model, sig=rq.sig,
-                        tokens=None if gen is None else gen.tokens[j],
-                        sim_latency_s=0.0 if gen is None else per_req_s,
+                        tokens=None if (gen is None or err)
+                        else gen.tokens[j],
+                        sim_latency_s=0.0 if (gen is None or err)
+                        else per_req_s,
                         route_s=rq.route_s, analyzer_s=rq.analyzer_s,
                         fallback=rq.fallback_kind,
-                        rq=rq if plans[i][1] == "admitted" else None,
-                        admission=plans[i][1], est_latency_s=plans[i][2])
+                        rq=rq if (plans[i][1] == "admitted" and not err)
+                        else None,
+                        admission="failed" if err else plans[i][1],
+                        est_latency_s=plans[i][2], error=err)
         for i, (r, rq) in enumerate(routed):   # shed: fail fast, no slot
             if out[i] is None:
                 out[i] = Response(
@@ -336,27 +371,127 @@ class ServingEngine:
                     analyzer_s=rq.analyzer_s,
                     fallback=rq.fallback_kind, rq=None,
                     admission="shed", est_latency_s=plans[i][2])
+        # ONE funnel entry per request, recording the FINAL outcome:
+        # deadline-carrying requests land their admission verdict, and
+        # a failed group is always recorded (even SLO-less traffic) —
+        # the funnel is how an operator sees the failure at all
+        if tel is not None:
+            for i, (r, _) in enumerate(routed):
+                resp = out[i]
+                if resp.failed or (self.load is not None
+                                   and r.deadline_ms is not None):
+                    tel.record_admission(resp.admission,
+                                         tenant=r.tenant or None)
         return out                      # type: ignore[return-value]
 
     def _submit_batch(self, requests: Sequence[Request]) -> List[Response]:
+        """Sample-and-aggregate batch mode with the SAME serving
+        lifecycle as interactive mode: the semantic cache answers
+        repeats first, the miss rows share ONE routed decision
+        (``route_batch``), the load tracker sees admit -> start ->
+        finish around the single grouped generate, telemetry records
+        one route event per served request, and the batch fans out to
+        per-request traces.  Batch responses still carry no ``rq``
+        handle (one aggregate decision has no per-query bandit
+        context), so ``observe`` skips them — the cache is lookup-only
+        in this mode."""
+        reqs = list(requests)
+        out: List[Optional[Response]] = [None] * len(reqs)
+        tel = self.router.telemetry
+        tr = self.tracer
+        batch_span = tr.start_trace("submit", batch=len(reqs),
+                                    mode="batch") \
+            if tr is not None else NOOP_SPAN
+        with batch_span:
+            prefs_res = resolve_batch([r.prefs for r in reqs], len(reqs))
+            miss = list(range(len(reqs)))
+            if self.cache is not None:
+                keys = self.cache.keys_for(prefs_res,
+                                           [r.text for r in reqs])
+                fps = self.cache.fingerprints(
+                    prefs_res, extras=[r.max_new for r in reqs])
+                hit, entries, _ = self.cache.lookup_entries(keys, fps)
+                if tel is not None:
+                    for kind, n in self.cache.drain_events().items():
+                        tel.record_cache(kind, n)
+                miss = []
+                for i, r in enumerate(reqs):
+                    if tel is not None:
+                        tel.record_cache("hit" if hit[i] else "miss")
+                    if hit[i]:
+                        e = entries[i]
+                        out[i] = Response(
+                            request=r, model=e.model, sig=e.sig,
+                            tokens=e.response, sim_latency_s=0.0,
+                            route_s=0.0, analyzer_s=0.0, cache_hit=True)
+                    else:
+                        miss.append(i)
+            if miss:
+                served = self._serve_batch_group([reqs[i] for i in miss])
+                for j, i in enumerate(miss):
+                    out[i] = served[j]
+        self._fanout_trace(reqs, out, batch_span)
+        self.log.extend(out)            # type: ignore[arg-type]
+        return out                      # type: ignore[return-value]
+
+    def _serve_batch_group(self, requests: Sequence[Request]
+                           ) -> List[Response]:
+        """One aggregate decision -> one batched generate, with full
+        tracker lifecycle, per-group failure degradation and telemetry
+        (the batch-mode twin of ``_route_and_serve``'s group loop)."""
         texts = [r.text for r in requests]
-        decision, sigs, stats = self.router.route_batch(
+        decision, _, stats = self.router.route_batch(
             texts, requests[0].prefs)
-        entry = self.router.mres.entry(decision.model)
-        gen = None
-        if entry.runner is not None:
-            toks = self._tokens(texts, entry.runner.cfg.vocab_size)
-            gen = entry.runner.generate(toks, max_new=requests[0].max_new)
+        model = decision.model
+        entry = self.router.mres.entry(model)
+        tel = self.router.telemetry
+        col = -1
+        if self.load is not None:
+            names = self.router.mres.snapshot()[1]
+            col = {m: j for j, m in enumerate(names)}[model]
+            self.load.ensure(len(names))
+            self.load.admit(col, count=len(requests))
+            self.load.start(col, count=len(requests))
+        gen, per_req_s, err = None, None, ""
+        try:
+            if entry.runner is not None:
+                toks = self._tokens(texts, entry.runner.cfg.vocab_size)
+                gen = entry.runner.generate(toks,
+                                            max_new=requests[0].max_new)
+            per_req_s = (gen.sim_latency_s / len(requests)
+                         if gen is not None else
+                         entry.raw_metrics.get("latency_ms", 0.0) / 1e3)
+        except Exception as e:                     # noqa: BLE001
+            err = f"{type(e).__name__}: {e}"
+        finally:
+            if self.load is not None:
+                self.load.finish(col, per_req_s, count=len(requests))
         agg = stats["aggregate_sig"]
         out = [Response(
-            request=r, model=decision.model, sig=agg,
-            tokens=None if gen is None else gen.tokens[i],
-            sim_latency_s=0.0 if gen is None
-            else gen.sim_latency_s / len(requests),
+            request=r, model=model, sig=agg,
+            tokens=None if (gen is None or err) else gen.tokens[i],
+            sim_latency_s=0.0 if (gen is None or err) else per_req_s,
             route_s=stats["route_s"] / len(requests),
             analyzer_s=stats["analyzer_s"] / len(requests),
-            fallback=decision.fallback_kind) for i, r in enumerate(requests)]
-        self.log.extend(out)
+            fallback=decision.fallback_kind,
+            admission="failed" if err else "admitted",
+            error=err) for i, r in enumerate(requests)]
+        if tel is not None:
+            sim_cost = entry.raw_metrics.get("cost_per_mtok", 0.0)
+            for resp in out:
+                # route_batch records nothing itself: one event per
+                # request served, so sustained batch traffic shows up
+                # in QPS / per-model aggregates like interactive does
+                tel.record(RouteEvent(
+                    ts=time.time(), model=model,
+                    task_type=agg.task_type, domain=agg.domain,
+                    complexity=agg.complexity,
+                    fallback=decision.fallback_kind,
+                    analyzer_s=resp.analyzer_s, route_s=resp.route_s,
+                    sim_cost=sim_cost))
+                if resp.failed:
+                    tel.record_admission(
+                        "failed", tenant=resp.request.tenant or None)
         return out
 
     # ------------------------------------------------------------------
@@ -408,8 +543,9 @@ class ServingEngine:
                 cache_hits += 1    # outcome, no slot, no model latency
                 continue
             admissions[r.admission] += 1
-            if r.shed:        # a shed request was served by NO model —
-                continue      # it only shows up in the admission counts
+            if not r.served:  # shed/failed requests were served by NO
+                continue      # model — they only show up in the
+                              # admission counts
             by_model[r.model] += 1
             lat[r.model].append(r.sim_latency_s + r.route_s
                                 + r.analyzer_s)

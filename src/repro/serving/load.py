@@ -41,8 +41,11 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-# admission outcomes (telemetry funnel keys), in severity order
-ADMISSION_KINDS = ("admitted", "rerouted", "shed")
+# admission outcomes (telemetry funnel keys), in severity order:
+# admitted/rerouted/shed are decided at admission time (plan_admission);
+# failed is decided at generation time — the request WAS admitted and
+# consumed slot lifecycle, but its model group's generate raised
+ADMISSION_KINDS = ("admitted", "rerouted", "shed", "failed")
 
 
 class LoadTracker:
@@ -137,6 +140,19 @@ class LoadTracker:
                 a = self.ewma_alpha
                 self.ewma_s[idx] = (1.0 - a) * self.ewma_s[idx] \
                     + a * float(service_s)
+
+    def cancel(self, idx: int, *, queued: int = 0, inflight: int = 0
+               ) -> None:
+        """Roll back counters for ABANDONED requests: work that was
+        admitted (and possibly started) but will never finish — e.g. a
+        scheduler giving up on its backlog at ``max_ticks``.  Unlike
+        ``finish`` this never folds an EWMA sample (no service
+        happened), and it decrements the queue directly (the request
+        never started).  Clamped at zero."""
+        assert queued >= 0 and inflight >= 0, (queued, inflight)
+        with self._lock:
+            self.queue[idx] = max(self.queue[idx] - queued, 0)
+            self.inflight[idx] = max(self.inflight[idx] - inflight, 0)
 
     # ---------------- derived views ----------------
     def snapshot(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray,

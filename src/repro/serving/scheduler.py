@@ -14,6 +14,7 @@ admission and retirement are pure cache-slot updates.
 from __future__ import annotations
 
 import collections
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional
@@ -63,6 +64,11 @@ class ContinuousBatcher:
         self.ticks = 0
         self.load = load
         self.model_idx = model_idx
+        self.cancelled: List[SlotRequest] = []
+        # guards queue/active membership so submit() from request
+        # threads, queue_depth() from the router's scoring path and the
+        # tick driver all see one consistent outstanding-work count
+        self._lock = threading.Lock()
         if load is not None:
             load.ensure(model_idx + 1)
             load.set_capacity(model_idx, float(slots))
@@ -86,13 +92,18 @@ class ContinuousBatcher:
                     f"slot cache (limit {limit}; pass truncate=True to "
                     f"clip)")
             req.tokens = req.tokens[:limit]
-        self.queue.append(req)
+        with self._lock:
+            self.queue.append(req)
         if self.load is not None:
             self.load.admit(self.model_idx)
 
     def queue_depth(self) -> int:
-        """Queued + active requests (the batcher's outstanding work)."""
-        return len(self.queue) + sum(r is not None for r in self.active)
+        """Queued + active requests (the batcher's outstanding work).
+        Taken under the batcher lock so a request mid-transition from
+        queue to slot is counted exactly once, never zero or twice."""
+        with self._lock:
+            return (len(self.queue)
+                    + sum(r is not None for r in self.active))
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.active) if r is None]
@@ -100,9 +111,14 @@ class ContinuousBatcher:
     def _admit(self) -> None:
         """Prefill queued requests into free slots (slot-cache insert)."""
         for i in self._free_slots():
-            if not self.queue:
-                return
-            req = self.queue.popleft()
+            with self._lock:
+                if not self.queue:
+                    return
+                req = self.queue.popleft()
+                # the slot claim happens in the SAME critical section
+                # as the dequeue: queue_depth never sees the request in
+                # neither place
+                self.active[i] = req
             toks = jnp.asarray(req.tokens[None], jnp.int32)
             last, cache1, pos1 = M.prefill(self.params, self.cfg,
                                            {"tokens": toks},
@@ -115,15 +131,15 @@ class ContinuousBatcher:
             self._next_tok[i] = int(jnp.argmax(last[0]))
             req.slot = i
             req.started_s = time.perf_counter()
-            self.active[i] = req
             if self.load is not None:
                 self.load.start(self.model_idx)
 
     def _retire(self) -> None:
         for i, req in enumerate(self.active):
             if req is not None and req.done:
-                self.finished.append(req)
-                self.active[i] = None
+                with self._lock:
+                    self.finished.append(req)
+                    self.active[i] = None
                 if self.load is not None:
                     self.load.finish(
                         self.model_idx,
@@ -150,8 +166,44 @@ class ContinuousBatcher:
         self.ticks += 1
         return len(live)
 
-    def run_until_drained(self, max_ticks: int = 10_000) -> List[SlotRequest]:
+    def cancel(self) -> List[SlotRequest]:
+        """Abandon all outstanding work and ROLL BACK the mirrored
+        tracker arm: queued requests decrement the queue counter,
+        active ones the inflight counter — with no EWMA sample (no
+        service completed).  Without this, a scheduler that gives up
+        (``max_ticks``, shutdown) leaves the arm's counters inflated
+        forever and the router keeps penalizing a model that is
+        actually idle.  Returns the dropped requests (also appended to
+        ``self.cancelled``).  Not safe concurrently with ``tick``:
+        call it from the tick driver."""
+        with self._lock:
+            queued = list(self.queue)
+            self.queue.clear()
+            active = [r for r in self.active if r is not None]
+            for i in range(self.slots):
+                self.active[i] = None
+        if self.load is not None and (queued or active):
+            self.load.cancel(self.model_idx, queued=len(queued),
+                             inflight=len(active))
+        for r in active:
+            r.slot = -1
+        dropped = queued + active
+        self.cancelled.extend(dropped)
+        return dropped
+
+    def run_until_drained(self, max_ticks: int = 10_000, *,
+                          cancel_leftover: bool = True
+                          ) -> List[SlotRequest]:
+        """Tick until no work remains or ``max_ticks`` is reached.  On
+        a ``max_ticks`` exit the leftover queue/slots are cancelled by
+        default so the mirrored tracker arm nets back to zero instead
+        of staying inflated forever; pass ``cancel_leftover=False`` to
+        keep the backlog (and its tracker counters) for a later drain.
+        """
         while (self.queue or any(r is not None for r in self.active)) \
                 and self.ticks < max_ticks:
             self.tick()
+        if cancel_leftover and (
+                self.queue or any(r is not None for r in self.active)):
+            self.cancel()
         return self.finished

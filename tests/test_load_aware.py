@@ -483,29 +483,135 @@ def test_similarity_stays_pure_cosine_under_load():
     assert -1.0 - 1e-6 <= d.similarity <= 1.0 + 1e-6
 
 
-def test_generate_failure_releases_load_slots():
+class _BoomCfg:
+    vocab_size = 64
+
+
+class BoomRunner:
+    """Test runner whose generate always raises."""
+    cfg = _BoomCfg()
+
+    def generate(self, toks, max_new=8):
+        raise RuntimeError("boom")
+
+
+def test_generate_failure_degrades_group_and_releases_slots():
     """A runner crash mid-batch must not leak inflight counts (which
-    would permanently penalize a healthy model)."""
+    would permanently penalize a healthy model) — and must not
+    propagate out of submit: the failed group's requests come back
+    degraded (admission='failed', no tokens, no bandit handle) while
+    the batch as a whole survives."""
     from repro.serving.engine import Request
-
-    class BoomCfg:
-        vocab_size = 64
-
-    class BoomRunner:
-        cfg = BoomCfg()
-
-        def generate(self, toks, max_new=8):
-            raise RuntimeError("boom")
 
     engine, lt, reqs = _serving_setup()
     routed = engine.router.route_all([r.text for r in reqs[:1]],
                                      "accuracy-first")
-    engine.router.mres.entry(routed[0].decision.model).runner = \
-        BoomRunner()
-    with pytest.raises(RuntimeError, match="boom"):
-        engine.submit(reqs)
+    boomed = routed[0].decision.model
+    engine.router.mres.entry(boomed).runner = BoomRunner()
+    out = engine.submit(reqs)                # must NOT raise
     q, f, _, _ = lt.snapshot()
     assert (f == 0).all() and (q == 0).all()
+    assert len(out) == len(reqs)
+    for r in out:
+        if r.model == boomed:
+            assert r.admission == "failed" and r.failed
+            assert r.tokens is None and r.rq is None
+            assert "boom" in r.error
+        else:
+            assert r.admission == "admitted"
+    # the failure is visible in the funnel even without deadlines
+    funnel = engine.router.telemetry.admission_funnel()
+    assert funnel.get("failed", 0) == sum(r.failed for r in out) > 0
+    # observe() silently skips the handle-less failed responses
+    assert engine.observe([r for r in out if r.failed],
+                          [1.0] * sum(r.failed for r in out)) is None
+
+
+def test_failed_group_not_mislabeled_shed():
+    """Requests whose ADMITTED group failed must be labeled 'failed',
+    never 'shed' — they consumed slot lifecycle, and summary()'s
+    admission counts must show real capacity use."""
+    from repro.serving.engine import Request
+
+    engine, lt, _ = _serving_setup()
+    # a saturating deadline-carrying burst: some requests shed for
+    # real, the boomed model's admitted share must stay distinct
+    reqs = [Request(text=f"q{i}", prefs="accuracy-first", id=i,
+                    deadline_ms=125.0) for i in range(40)]
+    routed = engine.router.route_all([reqs[0].text], "accuracy-first")
+    boomed = routed[0].decision.model
+    engine.router.mres.entry(boomed).runner = BoomRunner()
+    out = engine.submit(reqs)
+    kinds = {r.admission for r in out}
+    assert "failed" in kinds and "shed" in kinds
+    for r in out:
+        if r.model == boomed and not r.shed:
+            assert r.failed
+        if r.shed:         # true sheds never touched the boomed runner
+            assert r.error == ""
+    s = engine.summary()
+    assert s["admissions"].get("failed", 0) == sum(r.failed for r in out)
+    # failed requests were served by NO model: they are not in models
+    assert sum(s["models"].values()) == sum(r.served for r in out)
+    # final-outcome funnel still partitions the whole batch
+    funnel = engine.router.telemetry.admission_funnel()
+    assert sum(funnel.values()) == 40
+    q, f, _, _ = lt.snapshot()
+    assert (q == 0).all() and (f == 0).all()
+
+
+def test_batch_mode_full_lifecycle():
+    """_submit_batch must drive the same tracker lifecycle + telemetry
+    as interactive mode (bugfix: batch traffic used to be invisible to
+    load-aware routing and metrics)."""
+    from repro.serving.engine import Request
+
+    class ProbeRunner:
+        """Asserts the tracker sees the batch in flight DURING
+        generate, not just net-zero afterwards."""
+        cfg = _BoomCfg()
+
+        def __init__(self, lt, col):
+            self.lt, self.col, self.seen = lt, col, -1
+
+        def generate(self, toks, max_new=8):
+            self.seen = int(self.lt.snapshot()[1][self.col])
+            import types
+            return types.SimpleNamespace(
+                tokens=np.zeros((toks.shape[0], max_new), np.int32),
+                sim_latency_s=0.01 * toks.shape[0])
+
+    engine, lt, reqs = _serving_setup()
+    tel = engine.router.telemetry
+    names = engine.router.mres.snapshot()[1]
+    # batch mode routes ONE aggregate decision; find it, then probe it
+    decision, _, _ = engine.router.route_batch(
+        [r.text for r in reqs], reqs[0].prefs)
+    col = names.index(decision.model)
+    probe = ProbeRunner(lt, col)
+    engine.router.mres.entry(decision.model).runner = probe
+    out = engine.submit(reqs, mode="batch")
+    assert len({r.model for r in out}) == 1
+    assert probe.seen == len(reqs)           # inflight while generating
+    q, f, _, _ = lt.snapshot()
+    assert (q == 0).all() and (f == 0).all() # ...and drained after
+    assert lt.snapshot()[3][col] != pytest.approx(0.05)  # EWMA folded
+    assert tel.summary()["events"] == len(reqs)   # one event per request
+    assert all(r.sim_latency_s > 0 for r in out)
+
+
+def test_batch_mode_failure_degrades_not_raises():
+    from repro.serving.engine import Request
+    engine, lt, reqs = _serving_setup()
+    decision, _, _ = engine.router.route_batch(
+        [r.text for r in reqs], reqs[0].prefs)
+    engine.router.mres.entry(decision.model).runner = BoomRunner()
+    out = engine.submit(reqs, mode="batch")
+    assert all(r.failed and r.tokens is None for r in out)
+    q, f, _, _ = lt.snapshot()
+    assert (q == 0).all() and (f == 0).all()
+    funnel = engine.router.telemetry.admission_funnel()
+    assert funnel.get("failed", 0) == len(reqs)
 
 
 def test_rerouted_and_shed_responses_carry_no_bandit_handle():

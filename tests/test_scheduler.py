@@ -129,3 +129,40 @@ def test_batcher_mirrors_load_tracker(setup):
     q, f, _, ewma = lt.snapshot()
     assert q[1] == 0 and f[1] == 0 and cb.queue_depth() == 0
     assert ewma[1] < 99.0                # realized service times folded in
+
+
+def test_max_ticks_exit_rolls_tracker_back(setup):
+    """Abandoning the backlog at max_ticks must roll the mirrored
+    tracker arm back to zero — a stuck scheduler must not leave its
+    model permanently penalized (bugfix: counters used to stay
+    inflated forever)."""
+    from repro.serving.load import LoadTracker
+    cfg, params = setup
+    lt = LoadTracker(default_service_s=0.5)
+    cb = ContinuousBatcher(cfg, params, slots=2, ctx_len=64,
+                           load=lt, model_idx=0)
+    for i in range(5):
+        cb.submit(SlotRequest(
+            id=i, tokens=RNG.integers(2, cfg.vocab_size, 6).astype(np.int32),
+            max_new=8))
+    finished = cb.run_until_drained(max_ticks=2)   # nowhere near done
+    assert len(finished) < 5 and cb.queue_depth() == 0
+    q, f, _, ewma = lt.snapshot()
+    assert q[0] == 0 and f[0] == 0
+    assert ewma[0] == pytest.approx(0.5)  # cancel folds NO ewma sample
+    assert len(cb.cancelled) == 5 - len(finished)
+    assert all(r.slot == -1 for r in cb.cancelled)
+    # opting out keeps the backlog (and its tracker counters) intact
+    cb2 = ContinuousBatcher(cfg, params, slots=2, ctx_len=64,
+                            load=lt, model_idx=1)
+    cb2.submit(SlotRequest(
+        id=9, tokens=RNG.integers(2, cfg.vocab_size, 6).astype(np.int32),
+        max_new=50))
+    cb2.run_until_drained(max_ticks=cb2.ticks + 1,
+                          cancel_leftover=False)
+    assert cb2.queue_depth() == 1
+    assert lt.snapshot()[1][1] == 1      # still inflight, by request
+    cb2.cancel()                         # explicit drain path
+    assert cb2.queue_depth() == 0
+    q, f, _, _ = lt.snapshot()
+    assert q[1] == 0 and f[1] == 0

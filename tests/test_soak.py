@@ -1,0 +1,153 @@
+"""Soak-harness building blocks: multi-tenant arrival traces, Jain
+fairness, the bare-name gauge/counter surface the soak SLO gate reads,
+and a miniature deterministic run of the virtual-time engine replay
+(fault injection + restart transparency) from ``benchmarks.soak``."""
+import numpy as np
+import pytest
+
+from repro.core.telemetry import Telemetry
+from repro.data.workload import (MultiTenantScenario, TenantSpec,
+                                 TrafficScenario, jain_fairness,
+                                 multi_tenant_arrivals)
+from repro.obs.export import metrics_from_prom, prometheus_text
+
+BASE = TrafficScenario(duration_s=8.0, base_rate=6.0, burst_rate=24.0,
+                       deadline_ms=400.0, seed=5)
+
+
+def _mt(**kw):
+    tenants = kw.pop("tenants", (
+        TenantSpec("acme", weight=2.0),
+        TenantSpec("globex"),
+        TenantSpec("flood", rate_scale=3.0, rate_limit=8.0,
+                   deadline_ms=250.0)))
+    return MultiTenantScenario(base=kw.pop("base", BASE), tenants=tenants)
+
+
+# ----------------------------------------------------------------------
+# multi-tenant traffic
+# ----------------------------------------------------------------------
+
+def test_multi_tenant_arrivals_deterministic_and_sorted():
+    sc = _mt()
+    t1, i1 = multi_tenant_arrivals(sc)
+    t2, i2 = multi_tenant_arrivals(sc)
+    np.testing.assert_array_equal(t1, t2)
+    np.testing.assert_array_equal(i1, i2)
+    assert (np.diff(t1) >= 0).all()
+    assert t1.size > 0 and t1.max() < BASE.duration_s
+    assert set(np.unique(i1)) == {0, 1, 2}
+
+
+def test_multi_tenant_rate_scale_shapes_volume():
+    t, i = multi_tenant_arrivals(_mt())
+    counts = np.bincount(i, minlength=3).astype(float)
+    # flood draws at 3x the base rates: ~3x the quiet tenants' volume
+    quiet = counts[:2].mean()
+    assert 2.0 * quiet < counts[2] < 4.5 * quiet
+    # per-tenant processes are independently seeded, not clones
+    assert not np.array_equal(t[i == 0][:10], t[i == 1][:10])
+
+
+def test_deadline_ms_of_override():
+    sc = _mt()
+    assert sc.deadline_ms_of(0) == BASE.deadline_ms
+    assert sc.deadline_ms_of(2) == 250.0
+
+
+def test_multi_tenant_validation():
+    with pytest.raises(AssertionError, match="duplicate"):
+        _mt(tenants=(TenantSpec("a"), TenantSpec("a"))).validate()
+    with pytest.raises(AssertionError):
+        _mt(tenants=()).validate()
+
+
+# ----------------------------------------------------------------------
+# fairness index
+# ----------------------------------------------------------------------
+
+def test_jain_fairness_properties():
+    assert jain_fairness([1.0, 1.0, 1.0]) == pytest.approx(1.0)
+    assert jain_fairness([5.0]) == pytest.approx(1.0)
+    assert jain_fairness([]) == 1.0
+    assert jain_fairness([0.0, 0.0]) == 1.0
+    # one tenant hogging everything floors at 1/n
+    assert jain_fairness([1.0, 0.0, 0.0, 0.0]) == pytest.approx(0.25)
+    mild = jain_fairness([1.0, 0.8, 0.9])
+    assert 0.9 < mild < 1.0
+
+
+# ----------------------------------------------------------------------
+# exported SLO surface (what the CI soak gate evaluates)
+# ----------------------------------------------------------------------
+
+def test_metrics_from_prom_bare_gauges_and_tenant_shed_rates():
+    tel = Telemetry()
+    tel.set_gauge("soak_p999_s", 0.104)
+    tel.set_gauge("soak_post_warmup_compiles", 0.0)
+    tel.inc("intake_rate_limited", 7)
+    for _ in range(9):
+        tel.record_admission("admitted", tenant="acme")
+    tel.record_admission("shed", tenant="acme")
+    for _ in range(4):
+        tel.record_admission("shed", tenant="flood")
+    tel.record_admission("admitted", tenant="flood")
+    m = metrics_from_prom(prometheus_text(tel))
+    # generic gauges/counters surface under their bare names so the
+    # label-free SLO rule grammar can target them
+    assert m["soak_p999_s"] == pytest.approx(0.104)
+    assert m["soak_post_warmup_compiles"] == 0.0
+    assert m["intake_rate_limited"] == 7.0
+    # per-tenant shed rates are derived from the tenant funnel
+    assert m["tenant_shed_rate_acme"] == pytest.approx(0.1)
+    assert m["tenant_shed_rate_flood"] == pytest.approx(0.8)
+    assert m["tenant_shed_rate_max"] == pytest.approx(0.8)
+
+
+# ----------------------------------------------------------------------
+# miniature engine soak (virtual time, deterministic)
+# ----------------------------------------------------------------------
+
+def _tiny_scenario():
+    return MultiTenantScenario(
+        base=TrafficScenario(duration_s=4.0, base_rate=5.0,
+                             burst_rate=15.0, deadline_ms=400.0, seed=3),
+        tenants=(TenantSpec("acme", weight=2.0),
+                 TenantSpec("flood", rate_scale=3.0, rate_limit=6.0,
+                            deadline_ms=300.0)))
+
+
+def test_replay_engine_soak_restart_is_transparent(tmp_path):
+    soak = pytest.importorskip("benchmarks.soak")
+    sc = _tiny_scenario()
+    tel = Telemetry()
+    control = soak.replay_engine_soak(sc, tel, max_batch=8,
+                                      max_wait_s=0.05)
+    restart = soak.replay_engine_soak(
+        sc, tel, max_batch=8, max_wait_s=0.05, restart_t=2.0,
+        ckpt_path=str(tmp_path / "router.npz"))
+    assert restart["restarted"]
+    assert restart["outcomes"] == control["outcomes"]
+    assert control["requests"] == len(control["outcomes"])
+    # the flooding tenant was limited at intake; quiet tenant was not
+    assert control["intake"]["flood"]["rate_limited"] > 0
+    assert control["tally"]["acme"]["shed"] == 0
+    # jit caches are module-level: the second full run recompiled nothing
+    assert (tel.route_step_stats()["compiles"]
+            == control["compiles_after_warmup"])
+
+
+def test_replay_engine_soak_fault_degrades_only_hot_group():
+    soak = pytest.importorskip("benchmarks.soak")
+    sc = _tiny_scenario()
+    tel = Telemetry()
+    res = soak.replay_engine_soak(sc, tel, max_batch=8, max_wait_s=0.05,
+                                  fail_t=1.0)
+    assert res["fault_seen"]
+    failed = [(rid, tenant, model)
+              for rid, tenant, adm, model in res["outcomes"]
+              if adm == "failed"]
+    assert failed, "injected fault produced no failed outcomes"
+    assert all(model == soak.HOT for _, _, model in failed)
+    # the batch survived: every arrival still has exactly one outcome
+    assert len(res["outcomes"]) == res["requests"]
