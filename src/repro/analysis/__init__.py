@@ -1,0 +1,30 @@
+"""repro.analysis — repo-specific static analysis + runtime sanitizers.
+
+The serving stack's load-bearing guarantees (single-dispatch routing,
+zero steady-state recompiles, lock-guarded shared state, every Pallas
+kernel pinned to a ``ref.py`` oracle) are enforced by convention in
+review.  This package makes them *mechanical*:
+
+* ``repro.analysis.lint`` — an AST lint engine with three repo-specific
+  rule families, run as ``python -m repro.analysis.lint src/repro`` and
+  gated in CI against a checked-in baseline (``analysis/baseline.json``)
+  so the gate starts green and ratchets: NEW violations fail, existing
+  ones are triaged or suppressed inline
+  (``# lint: ignore[rule] -- reason``).
+
+    - lock discipline   (``repro.analysis.locks``)
+    - jit / recompile hazards  (``repro.analysis.jit_hazards``)
+    - kernel-oracle conformance  (``repro.analysis.kernel_oracle``)
+
+* ``repro.analysis.sanitize`` — opt-in runtime sanitizers activated by
+  ``REPRO_SANITIZE=1``: an instrumented lock wrapper that builds a
+  global lock-order graph with cycle detection (potential-deadlock
+  detector), and a recompile sentinel that fails any test re-compiling
+  a route-step shape bucket the session already warmed.  Wired into
+  ``tests/conftest.py`` together with JAX's ``transfer_guard`` /
+  ``checking_leaks`` debug machinery.
+
+Import cost: this package is a leaf — nothing here imports jax or the
+serving stack at module scope, so the hot path's ``make_lock`` calls
+stay cheap and cycle-free.
+"""

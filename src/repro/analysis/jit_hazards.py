@@ -1,0 +1,390 @@
+"""Jit / recompile hazard rules.
+
+* ``jit-traced-branch`` — Python ``if``/``while`` whose test references
+  a traced value inside a jitted function.  Shape/dtype/static tests
+  are fine (``x.shape[0] > 4``, ``x is None``, ``len(xs)``,
+  ``isinstance(...)``) — the rule skips those forms; anything else
+  either fails under jit (`TracerBoolConversionError`) or silently
+  retraces per concrete value.
+
+* ``jit-host-sync`` — ``.item()`` / ``.tolist()`` /
+  ``.block_until_ready()`` on traced values, ``float()/int()/bool()``
+  of a traced value, ``np.asarray``/``np.array`` of a traced value, and
+  ``jax.device_get`` inside a jitted function: all force a device→host
+  sync in the middle of a traced computation.
+
+* ``jit-constant-rebuild`` — ``jnp.asarray``/``jnp.array`` of a Python
+  *literal* (list/tuple/number/comprehension) inside a function body.
+  Each call builds a fresh device constant; under jit each fresh
+  ndarray is a new tracer-constant, defeating the ``ops.py``
+  padded-constant cache.  Hoist to module scope or route through the
+  cache.
+
+* ``jit-bucket-bypass`` — calling a raw jitted kernel entry
+  (``route_step_jit``, ``router_topk_pallas``, ...) from outside
+  ``repro/kernels``.  Only the bucketed dispatchers (``route_step``,
+  ``router_topk_bucketed``) pad to the q/n shape buckets; raw calls
+  compile one executable per exact shape.
+
+Jitted scopes recognized (the repo's idioms):
+
+* ``@jax.jit`` / ``@jit`` decorators;
+* ``@functools.partial(jax.jit, static_argnames=(...))`` (statics are
+  excluded from the traced set);
+* ``name = jax.jit(fn, ...)`` module-level wraps (marks ``fn``);
+* ``*_kernel`` functions in ``kernels/`` files (Pallas kernel bodies —
+  traced by ``pallas_call``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.engine import Source
+from repro.analysis.findings import Finding
+
+# attribute reads that yield static (Python-level) values even on tracers
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "aval",
+                 "itemsize"}
+# calls whose result is static even with traced arguments
+_STATIC_CALLS = {"len", "isinstance", "type", "getattr", "hasattr",
+                 "range", "enumerate", "zip"}
+# method calls on a traced value that force a host sync
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+# builtins that force a concrete (host) value out of a tracer
+_SYNC_CASTS = {"float", "int", "bool", "complex"}
+_NUMPY_ALIASES = {"np", "numpy", "onp"}
+
+# raw jitted kernel entries that bypass q_bucket/n_bucket padding; the
+# sanctioned public dispatchers are route_step / router_topk_bucketed
+RAW_KERNEL_ENTRIES = {
+    "route_step_jit", "route_step_ivf_jit", "route_step_sharded_jit",
+    "router_topk_pallas", "router_topk_q8_pallas",
+}
+
+
+class _TracedRefFinder(ast.NodeVisitor):
+    """Collect Name nodes referring to traced values, skipping forms
+    that are static under tracing (shape reads, len(), `is None`, ...)."""
+
+    def __init__(self, traced: Set[str]) -> None:
+        self.traced = traced
+        self.found: List[ast.Name] = []
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if node.attr in _STATIC_ATTRS:
+            return                               # skip whole subtree
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if isinstance(node.func, ast.Name) and node.func.id in _STATIC_CALLS:
+            return
+        self.generic_visit(node)
+
+    def visit_Compare(self, node: ast.Compare) -> None:
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return                               # `x is None` style
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if node.id in self.traced:
+            self.found.append(node)
+
+
+def _traced_refs(expr: ast.AST, traced: Set[str]) -> List[ast.Name]:
+    finder = _TracedRefFinder(traced)
+    finder.visit(expr)
+    return finder.found
+
+
+# --------------------------------------------------------------------
+# jit-scope discovery
+# --------------------------------------------------------------------
+
+def _call_is(func: ast.AST, *names: str) -> bool:
+    """Match `jit` / `jax.jit` / `functools.partial` style references."""
+    if isinstance(func, ast.Name):
+        return func.id in names
+    if isinstance(func, ast.Attribute):
+        return func.attr in names
+    return False
+
+
+def _statics_from_call(call: ast.Call) -> Tuple[Set[str], Set[int]]:
+    names: Set[str] = set()
+    nums: Set[int] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    names.add(n.value)
+        elif kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    nums.add(n.value)
+    return names, nums
+
+
+def _jit_statics_of_def(fn) -> Optional[Tuple[Set[str], Set[int]]]:
+    """(static_argnames, static_argnums) if `fn` is jit-decorated."""
+    for dec in fn.decorator_list:
+        if _call_is(dec, "jit"):
+            return set(), set()
+        if isinstance(dec, ast.Call):
+            if _call_is(dec.func, "jit"):
+                return _statics_from_call(dec)
+            if _call_is(dec.func, "partial") and dec.args \
+                    and _call_is(dec.args[0], "jit"):
+                return _statics_from_call(dec)
+    return None
+
+
+def _collect_functions(tree: ast.AST):
+    """Yield (qualname, node) for every def, with Class.method names."""
+    def walk(body: Sequence[ast.stmt], prefix: str):
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{node.name}"
+                yield qual, node
+                yield from walk(node.body, f"{qual}.")
+            elif isinstance(node, ast.ClassDef):
+                yield from walk(node.body, f"{prefix}{node.name}.")
+    yield from walk(tree.body, "")               # type: ignore[attr-defined]
+
+
+def _find_jitted(src: Source) -> List[Tuple[str, object, Set[str]]]:
+    """[(qualname, fn_node, static_param_names)] for jitted scopes."""
+    funcs = list(_collect_functions(src.tree))
+    by_name: Dict[str, object] = {}
+    for qual, node in funcs:
+        by_name.setdefault(node.name, node)
+
+    # `foo_jit = jax.jit(foo, static_argnames=...)` wraps
+    wrapped: Dict[object, Tuple[Set[str], Set[int]]] = {}
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call) \
+                and _call_is(node.value.func, "jit") and node.value.args:
+            tgt = node.value.args[0]
+            if isinstance(tgt, ast.Name) and tgt.id in by_name:
+                wrapped[by_name[tgt.id]] = _statics_from_call(node.value)
+
+    in_kernels = "/kernels/" in f"/{src.rel}"
+    out: List[Tuple[str, object, Set[str], bool]] = []
+    for qual, node in funcs:
+        kernel_body = False
+        statics = _jit_statics_of_def(node)
+        if statics is None and node in wrapped:
+            statics = wrapped[node]
+        if statics is None and in_kernels and node.name.endswith("_kernel"):
+            statics = (set(), set())             # Pallas kernel body
+            kernel_body = True
+        if statics is None:
+            continue
+        names, nums = statics
+        params = [a.arg for a in (node.args.posonlyargs + node.args.args)]
+        static_params = set(names)
+        static_params.update(params[i] for i in nums if i < len(params))
+        out.append((qual, node, static_params, kernel_body))
+    return out
+
+
+# --------------------------------------------------------------------
+# per-scope scan
+# --------------------------------------------------------------------
+
+class _JitScopeScanner:
+    def __init__(self, src: Source, qual: str, fn, statics: Set[str],
+                 kernel_body: bool = False) -> None:
+        self.src = src
+        self.qual = qual
+        args = fn.args
+        if kernel_body:
+            # Pallas kernel bodies: positional `*_ref` params are the
+            # traced memory refs; everything else (keyword params bound
+            # through functools.partial at pallas_call time) is a
+            # compile-time Python constant, branched on freely.
+            params = [a.arg for a in (args.posonlyargs + args.args)]
+            self.traced: Set[str] = {p for p in params
+                                     if p.endswith("_ref")}
+        else:
+            params = [a.arg for a in (args.posonlyargs + args.args
+                                      + args.kwonlyargs)]
+            self.traced = {p for p in params
+                           if p not in statics and p != "self"}
+        self.findings: List[Finding] = []
+        for st in fn.body:
+            self._stmt(st)
+
+    def _finding(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(Finding(
+            rule=rule, path=self.src.rel, line=node.lineno,
+            col=node.col_offset + 1, symbol=self.qual, message=message))
+
+    # statement walk, propagating tracedness through simple assignments
+    def _stmt(self, node: ast.stmt) -> None:
+        if isinstance(node, (ast.If, ast.While)):
+            refs = _traced_refs(node.test, self.traced)
+            if refs:
+                kind = "if" if isinstance(node, ast.If) else "while"
+                self._finding(
+                    "jit-traced-branch", node,
+                    f"Python `{kind}` on traced value "
+                    f"`{refs[0].id}` — use jnp.where/lax.cond/lax.select "
+                    f"or hoist the decision out of the jitted scope")
+            self._expr(node.test)
+            for st in node.body:
+                self._stmt(st)
+            for st in node.orelse:
+                self._stmt(st)
+            return
+        if isinstance(node, ast.Assign):
+            self._expr(node.value)
+            if _traced_refs(node.value, self.traced):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        self.traced.add(t.id)
+                    elif isinstance(t, (ast.Tuple, ast.List)):
+                        for elt in t.elts:
+                            if isinstance(elt, ast.Name):
+                                self.traced.add(elt.id)
+            return
+        if isinstance(node, ast.AugAssign):
+            self._expr(node.value)
+            return
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            self._expr(node.iter)
+            for st in node.body:
+                self._stmt(st)
+            for st in node.orelse:
+                self._stmt(st)
+            return
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                self._expr(item.context_expr)
+            for st in node.body:
+                self._stmt(st)
+            return
+        if isinstance(node, ast.Try):
+            for part in (node.body, node.orelse, node.finalbody):
+                for st in part:
+                    self._stmt(st)
+            for h in node.handlers:
+                for st in h.body:
+                    self._stmt(st)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for st in node.body:                 # nested def: same scope
+                self._stmt(st)
+            return
+        if isinstance(node, ast.Return) and node.value is not None:
+            self._expr(node.value)
+            return
+        if isinstance(node, ast.Expr):
+            self._expr(node.value)
+            return
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.stmt):
+                self._stmt(child)
+            elif isinstance(child, ast.expr):
+                self._expr(child)
+
+    def _expr(self, node: ast.expr) -> None:
+        for call in [n for n in ast.walk(node) if isinstance(n, ast.Call)]:
+            self._check_call(call)
+
+    def _check_call(self, call: ast.Call) -> None:
+        func = call.func
+        if isinstance(func, ast.Attribute):
+            if func.attr in _SYNC_METHODS \
+                    and _traced_refs(func.value, self.traced):
+                self._finding(
+                    "jit-host-sync", call,
+                    f"`.{func.attr}()` on a traced value forces a "
+                    f"device→host sync inside a jitted function")
+                return
+            if func.attr in {"asarray", "array"} \
+                    and isinstance(func.value, ast.Name) \
+                    and func.value.id in _NUMPY_ALIASES \
+                    and call.args \
+                    and _traced_refs(call.args[0], self.traced):
+                self._finding(
+                    "jit-host-sync", call,
+                    f"`{func.value.id}.{func.attr}` of a traced value "
+                    f"materializes it on host inside a jitted function")
+                return
+            if func.attr == "device_get":
+                self._finding(
+                    "jit-host-sync", call,
+                    "`device_get` inside a jitted function is a host sync")
+                return
+        if isinstance(func, ast.Name) and func.id in _SYNC_CASTS \
+                and call.args and _traced_refs(call.args[0], self.traced):
+            self._finding(
+                "jit-host-sync", call,
+                f"`{func.id}()` of a traced value concretizes it "
+                f"(host sync / TracerConversionError) inside a jitted "
+                f"function")
+
+
+# --------------------------------------------------------------------
+# whole-file rules (constant rebuild, bucket bypass)
+# --------------------------------------------------------------------
+
+_LITERALS = (ast.List, ast.Tuple, ast.Constant, ast.ListComp, ast.Dict,
+             ast.Set)
+
+
+def _scan_constant_rebuild(src: Source) -> Iterable[Finding]:
+    for qual, fn in _collect_functions(src.tree):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            if not (isinstance(func, ast.Attribute)
+                    and func.attr in {"asarray", "array"}
+                    and isinstance(func.value, ast.Name)
+                    and func.value.id == "jnp"):
+                continue
+            if node.args and isinstance(node.args[0], _LITERALS):
+                yield Finding(
+                    rule="jit-constant-rebuild", path=src.rel,
+                    line=node.lineno, col=node.col_offset + 1, symbol=qual,
+                    message=(f"jnp.{func.attr} of a Python literal builds "
+                             f"a fresh device constant on every call — "
+                             f"hoist to module scope or use the ops.py "
+                             f"padded-constant cache"))
+
+
+def _scan_bucket_bypass(src: Source) -> Iterable[Finding]:
+    if "/kernels/" in f"/{src.rel}" or src.rel.startswith("kernels/"):
+        return
+    for qual, fn in _collect_functions(src.tree):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            name = None
+            if isinstance(func, ast.Name) and func.id in RAW_KERNEL_ENTRIES:
+                name = func.id
+            elif isinstance(func, ast.Attribute) \
+                    and func.attr in RAW_KERNEL_ENTRIES:
+                name = func.attr
+            if name:
+                yield Finding(
+                    rule="jit-bucket-bypass", path=src.rel,
+                    line=node.lineno, col=node.col_offset + 1, symbol=qual,
+                    message=(f"`{name}` is a raw jitted kernel entry — "
+                             f"call the bucketed dispatcher "
+                             f"(route_step / router_topk_bucketed) so "
+                             f"shapes hit the q_bucket/n_bucket pads"))
+
+
+def check_jit_hazards(src: Source) -> Iterable[Finding]:
+    findings: List[Finding] = []
+    for qual, fn, statics, kernel_body in _find_jitted(src):
+        findings.extend(
+            _JitScopeScanner(src, qual, fn, statics,
+                             kernel_body=kernel_body).findings)
+    findings.extend(_scan_constant_rebuild(src))
+    findings.extend(_scan_bucket_bypass(src))
+    return findings

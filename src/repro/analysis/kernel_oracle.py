@@ -1,0 +1,166 @@
+"""Kernel-oracle conformance (project rule).
+
+Every Pallas kernel entry exported from ``kernels/*.py`` — any
+module-level ``*_pallas`` or ``*_jit`` def/assignment — must have:
+
+* ``kernel-missing-oracle`` — a matching pure-JAX oracle in
+  ``kernels/ref.py``.  The oracle name is the entry's base name with
+  dispatch suffixes stripped (``_pallas`` / ``_jit``, then a trailing
+  quantization tag like ``_q8``), mapped through a small alias table
+  (``flash_attention`` → ``mha_attention``: the oracle implements plain
+  multi-head attention), with a prefix fallback for sharded variants
+  (``route_step_sharded`` validates against ``route_step`` — sharding
+  changes the partitioning, not the math).
+
+* ``kernel-missing-parity-test`` — at least one test under ``tests/``
+  that imports ``repro.kernels.ref`` and references the oracle by name
+  (discovered by AST scan, so a new kernel without a parity test fails
+  lint rather than review).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.engine import Project, Source
+from repro.analysis.findings import Finding
+
+# kernel whose oracle lives under a different name in ref.py
+ORACLE_ALIASES = {"flash_attention": "mha_attention"}
+
+_SUFFIXES = ("_pallas", "_jit")
+_QUANT_TAG = re.compile(r"_q\d+$")
+
+
+def oracle_name_for(entry: str, oracles: Set[str]) -> Optional[str]:
+    """Resolve a kernel entry name to its ref.py oracle, or None."""
+    base = entry
+    for suf in _SUFFIXES:
+        if base.endswith(suf):
+            base = base[: -len(suf)]
+            break
+    base = _QUANT_TAG.sub("", base)
+    base = ORACLE_ALIASES.get(base, base)
+    if base in oracles:
+        return base
+    # prefix fallback: route_step_sharded -> route_step (longest match)
+    for cand in sorted(oracles, key=len, reverse=True):
+        if base.startswith(cand + "_"):
+            return cand
+    return None
+
+
+def _kernel_entries(src: Source) -> List[Tuple[str, int, int]]:
+    """Module-level *_pallas / *_jit names with their def locations."""
+    out: List[Tuple[str, int, int]] = []
+
+    def is_entry(name: str) -> bool:
+        return not name.startswith("_") and (
+            name.endswith("_pallas") or name.endswith("_jit")
+            or _QUANT_TAG.sub("", name).endswith("_pallas"))
+
+    for node in src.tree.body:                   # type: ignore[attr-defined]
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if is_entry(node.name):
+                out.append((node.name, node.lineno, node.col_offset + 1))
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and is_entry(t.id):
+                    out.append((t.id, node.lineno, node.col_offset + 1))
+    return out
+
+
+def _oracle_names(ref_src: Source) -> Set[str]:
+    return {node.name
+            for node in ref_src.tree.body       # type: ignore[attr-defined]
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and not node.name.startswith("_")}
+
+
+def _imports_ref(tree: ast.AST) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            if any(a.name.startswith("repro.kernels.ref")
+                   for a in node.names):
+                return True
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod.startswith("repro.kernels.ref"):
+                return True
+            if mod == "repro.kernels" and any(a.name == "ref"
+                                              for a in node.names):
+                return True
+    return False
+
+
+def _referenced_names(tree: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            out.add(node.attr)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            # `from repro.kernels.ref import route_step` references the
+            # oracle even before any call site
+            out.update(a.name for a in node.names)
+    return out
+
+
+def _parity_tested_oracles(tests_dir: str) -> Set[str]:
+    """Union of names referenced by every ref-importing test file."""
+    tested: Set[str] = set()
+    for fn in sorted(os.listdir(tests_dir)):
+        if not fn.endswith(".py"):
+            continue
+        path = os.path.join(tests_dir, fn)
+        try:
+            with open(path, encoding="utf-8") as f:
+                tree = ast.parse(f.read(), filename=path)
+        except SyntaxError:                      # pragma: no cover
+            continue
+        if _imports_ref(tree):
+            tested |= _referenced_names(tree)
+    return tested
+
+
+def check_kernel_oracles(project: Project) -> Iterable[Finding]:
+    ref_src = project.source("kernels/ref.py")
+    kernel_srcs = [s for s in project.sources
+                   if "kernels/" in s.rel and not s.rel.endswith("/ref.py")]
+    if ref_src is None or not kernel_srcs:
+        return []
+    oracles = _oracle_names(ref_src)
+    tested: Optional[Set[str]] = None
+    if project.tests_dir and os.path.isdir(project.tests_dir):
+        tested = _parity_tested_oracles(project.tests_dir)
+
+    findings: List[Finding] = []
+    resolved: Dict[str, List[Tuple[Source, str, int, int]]] = {}
+    for src in kernel_srcs:
+        for name, line, col in _kernel_entries(src):
+            oracle = oracle_name_for(name, oracles)
+            if oracle is None:
+                findings.append(Finding(
+                    rule="kernel-missing-oracle", path=src.rel,
+                    line=line, col=col, symbol=name,
+                    message=(f"kernel entry `{name}` has no matching "
+                             f"oracle in kernels/ref.py — add a pure-JAX "
+                             f"reference implementation")))
+            else:
+                resolved.setdefault(oracle, []).append((src, name, line, col))
+
+    if tested is not None:
+        for oracle, entries in sorted(resolved.items()):
+            if oracle in tested:
+                continue
+            src, name, line, col = entries[0]
+            findings.append(Finding(
+                rule="kernel-missing-parity-test", path=src.rel,
+                line=line, col=col, symbol=name,
+                message=(f"oracle `{oracle}` (validating `{name}`) is "
+                         f"never referenced by a ref-importing test "
+                         f"under tests/ — add a parity test")))
+    return findings

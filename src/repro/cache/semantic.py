@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core.preferences import N_METRICS, TaskSignature, resolve
 from repro.obs.trace import NOOP_SPAN
+from repro.analysis.sanitize import make_lock
 
 # cache_funnel outcome kinds (Telemetry.cache_funnel key set, stable
 # even on empty engines): lookup outcomes, then insert outcomes
@@ -124,7 +125,7 @@ class SemanticCache:
         # the ~1e-2 rounding bound of 8-bit rows
         self.quantize = bool(quantize)
         self._time = time_fn
-        self._lock = threading.Lock()
+        self._lock = make_lock("cache.semantic")
         C = self.capacity
         self.vecs = np.zeros((C, self.dim), np.float32)
         self.fps = np.zeros(C, np.int64)

@@ -20,6 +20,7 @@ from typing import Dict, List, Sequence, Tuple
 import numpy as np
 
 from repro.core.preferences import TaskSignature
+from repro.analysis.sanitize import make_lock
 
 Cluster = Tuple[str, str, int]
 
@@ -42,7 +43,7 @@ class FeedbackStore:
         self._bias: Dict[Tuple[Cluster, str], float] = {}
         self._count: Dict[Tuple[Cluster, str], int] = {}
         self._log: List[FeedbackEvent] = []
-        self._lock = threading.Lock()
+        self._lock = make_lock("core.feedback")
 
     def record(self, sig: TaskSignature, model: str, thumbs_up: bool) -> float:
         """EMA update; returns the new bias (always within [-1, 1])."""

@@ -16,6 +16,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.preferences import DOMAINS, METRICS, N_METRICS, TASK_TYPES
+from repro.analysis.sanitize import make_lock
 
 # Layout of the fused routing matrix (see MRES docstring): normalized
 # metric embeddings, then one-hot task-type bonus columns (+ an
@@ -165,7 +166,7 @@ class MRES:
         self._name_list: List[str] = []
         self._ivf: Optional[IVFIndex] = None
         self._dirty = True
-        self._lock = threading.Lock()
+        self._lock = make_lock("core.mres")
 
     # ---------------- registry ----------------
     def register(self, entry: ModelEntry) -> None:

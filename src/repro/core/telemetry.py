@@ -26,6 +26,7 @@ from dataclasses import dataclass
 from typing import Any, Deque, Dict, Optional
 
 from repro.obs.metrics import LogHistogram
+from repro.analysis.sanitize import make_lock
 
 # latency histograms cover 10us .. 100s at ~0.54% relative resolution;
 # cost histograms cover 1e-3 .. 1e4 simulated-cost units
@@ -84,7 +85,7 @@ class Telemetry:
         self._sharding: Dict[str, int] = {"silent_replications": 0}
         self._counters: Dict[str, float] = {}
         self._gauges: Dict[str, float] = {}
-        self._lock = threading.Lock()
+        self._lock = make_lock("core.telemetry")
 
     # ------------------------------------------------------------------
     def record(self, event: RouteEvent) -> None:

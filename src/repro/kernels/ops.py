@@ -86,11 +86,11 @@ def n_bucket_sharded(n: int, ndev: int) -> int:
 # never misattribute each other's activity.  A "dispatch" counts one
 # fused-op invocation (each issues exactly one jitted call); the
 # compile counter is the real recompilation guard.
-import threading as _threading
+from repro.analysis.sanitize import make_lock as _make_lock
 
 _STATS = {"route_step_dispatches": 0, "route_step_compiles": 0,
           "topk_dispatches": 0, "topk_compiles": 0}
-_STATS_LOCK = _threading.Lock()
+_STATS_LOCK = _make_lock("ops.stats")
 
 
 def route_step_stats() -> dict:
@@ -122,6 +122,24 @@ def set_cost_profiler(profiler) -> None:
     """Attach (or detach with ``None``) a per-bucket cost profiler."""
     global _COST_PROFILER
     _COST_PROFILER = profiler
+
+
+# optional recompile hook (analysis.sanitize.RecompileSentinel): when
+# attached, route_step reports every dispatch's shape-bucket signature
+# and jit cache-miss delta so the sentinel can fail tests that
+# recompile an already-warm bucket.  Same shape as the cost-profiler
+# hook: module global, None when detached, zero hot-path cost.
+_RECOMPILE_HOOK = None
+
+
+def set_recompile_hook(hook) -> None:
+    """Attach (or detach with ``None``) a per-dispatch recompile hook.
+
+    The hook is called as ``hook(event)`` with ``event = {"path",
+    "q_bucket", "n_bucket", "quant", "shards", "compiles"}`` after
+    every ``route_step`` dispatch."""
+    global _RECOMPILE_HOOK
+    _RECOMPILE_HOOK = hook
 
 
 _DUMMIES = None
@@ -639,6 +657,10 @@ def route_step(emb, tt_matrix, dm_matrix, gmask, T, W, ti, di, *,
     else:
         out, compiles = _count_compiles(jit_fn, call)
     _bump("route_step", compiles)
+    hook = _RECOMPILE_HOOK
+    if hook is not None:
+        hook({"path": path, "q_bucket": qp, "n_bucket": n_pad,
+              "quant": quant, "shards": shards, "compiles": compiles})
     if telemetry is not None:
         telemetry.record_route_step(dispatches=1, compiles=compiles)
     out = jax.device_get(out)           # ONE host transfer for all

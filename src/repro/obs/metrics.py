@@ -21,6 +21,7 @@ import threading
 from typing import Dict, Iterable, Tuple
 
 import numpy as np
+from repro.analysis.sanitize import make_lock
 
 
 class Counter:
@@ -31,7 +32,7 @@ class Counter:
         self.name = name
         self.help = help
         self._vals: Dict[str, float] = {}
-        self._lock = threading.Lock()
+        self._lock = make_lock("obs.metrics.counter")
 
     def inc(self, amount: float = 1.0, label: str = "") -> None:
         assert amount >= 0, amount
@@ -55,7 +56,7 @@ class Gauge:
         self.name = name
         self.help = help
         self._vals: Dict[str, float] = {}
-        self._lock = threading.Lock()
+        self._lock = make_lock("obs.metrics.gauge")
 
     def set(self, value: float, label: str = "") -> None:
         with self._lock:

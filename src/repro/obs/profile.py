@@ -20,6 +20,7 @@ from __future__ import annotations
 import contextlib
 import threading
 from typing import Any, Dict, Optional
+from repro.analysis.sanitize import make_lock
 
 
 def _extract_costs(analysis) -> Dict[str, Optional[float]]:
@@ -45,7 +46,7 @@ class DeviceCostProfiler:
     """
 
     def __init__(self):
-        self._lock = threading.Lock()
+        self._lock = make_lock("obs.profiler")
         self._by_bucket: Dict[Any, Dict[str, Optional[float]]] = {}
         self.captures = 0
         self.errors = 0

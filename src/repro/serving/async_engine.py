@@ -44,6 +44,7 @@ from typing import (Any, AsyncIterator, Deque, Dict, List, Optional,
                     Sequence, Tuple)
 
 from repro.serving.engine import Request, Response, ServingEngine
+from repro.analysis.sanitize import make_lock
 
 __all__ = ["TokenBucket", "TenantPolicy", "MicroBatcher",
            "AsyncServingEngine", "DEFAULT_TENANT"]
@@ -142,7 +143,7 @@ class MicroBatcher:
         self._deficit: Dict[str, float] = {}
         self._buckets: Dict[str, Optional[TokenBucket]] = {}
         self._pending = 0
-        self._lock = threading.Lock()
+        self._lock = make_lock("serving.microbatcher")
         # intake accounting per tenant: offered / queued / rate-limited
         # / backlog-shed (the async engine exports these as gauges)
         self.stats: Dict[str, Dict[str, int]] = {}

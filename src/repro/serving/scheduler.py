@@ -26,6 +26,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.training.steps import make_decode_step
+from repro.analysis.sanitize import make_lock
 
 
 @dataclass
@@ -68,7 +69,7 @@ class ContinuousBatcher:
         # guards queue/active membership so submit() from request
         # threads, queue_depth() from the router's scoring path and the
         # tick driver all see one consistent outstanding-work count
-        self._lock = threading.Lock()
+        self._lock = make_lock("serving.scheduler")
         if load is not None:
             load.ensure(model_idx + 1)
             load.set_capacity(model_idx, float(slots))
@@ -200,6 +201,10 @@ class ContinuousBatcher:
         of staying inflated forever; pass ``cancel_leftover=False`` to
         keep the backlog (and its tracker counters) for a later drain.
         """
+        # lint: ignore[lock-unlocked-read] -- run_until_drained is the
+        # single tick-driver thread; submitters only ever grow `queue`,
+        # so a stale read here costs one extra loop iteration, not a
+        # torn decision (tick() re-checks everything under the lock)
         while (self.queue or any(r is not None for r in self.active)) \
                 and self.ticks < max_ticks:
             self.tick()

@@ -12,7 +12,47 @@ if "--xla_force_host_platform_device_count" not in \
 import numpy as np
 import pytest
 
+from repro.analysis import sanitize
 from repro.core.mres import MRES, ModelEntry
+
+# ---------------------------------------------------------------------
+# opt-in runtime sanitizers (REPRO_SANITIZE=1) — see repro.analysis
+# ---------------------------------------------------------------------
+_SANITIZE = sanitize.enabled()
+
+if _SANITIZE:
+    import jax
+
+    # transfer_guard: default "allow" — the CPU/interpreter fallback
+    # paths legitimately shuttle host<->device; tighten per-run with
+    # REPRO_TRANSFER_GUARD=disallow/log to hunt stray transfers.
+    jax.config.update("jax_transfer_guard",
+                      os.environ.get("REPRO_TRANSFER_GUARD", "allow"))
+
+    _SENTINEL = sanitize.RecompileSentinel().install()
+
+    @pytest.fixture(autouse=True)
+    def _sanitizers(request):
+        """Per-test: fail on tracer leaks, steady-state route-step
+        recompiles, and lock-order inversions observed during the test."""
+        # per-test warmup window: tests may legitimately clear jit
+        # caches (perf/compile-count tests), so cross-test recompiles
+        # are not violations — re-compiling a bucket the SAME test
+        # already dispatched is
+        _SENTINEL.forget()
+        n_lock_viol = len(sanitize.lock_order_violations())
+        with jax.checking_leaks():
+            yield
+        recompiles = _SENTINEL.drain()
+        if recompiles:
+            pytest.fail("recompile sentinel tripped:\n  "
+                        + "\n  ".join(recompiles), pytrace=False)
+        lock_viol = sanitize.lock_order_violations()[n_lock_viol:]
+        if lock_viol:
+            msgs = [f"{a} -> {b} closes cycle {' -> '.join(cyc)}"
+                    for a, b, cyc in lock_viol]
+            pytest.fail("lock-order inversion(s) detected:\n  "
+                        + "\n  ".join(msgs), pytrace=False)
 
 
 @pytest.fixture

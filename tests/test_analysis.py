@@ -1,0 +1,514 @@
+"""Lint-engine tests: good/bad fixture pairs per rule, suppression
+syntax, the baseline ratchet, JSON schema stability, and a self-check
+that the repo itself lints clean against the checked-in baseline."""
+import json
+import os
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.engine import lint_source, run_lint
+from repro.analysis.findings import (RULES, SCHEMA_VERSION, Finding,
+                                     load_baseline, save_baseline,
+                                     split_new, stale_baseline)
+from repro.analysis.lint import main as lint_main
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def snip(text: str, rel: str = "serving/snippet.py"):
+    return lint_source(textwrap.dedent(text), rel=rel)
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------
+# lock discipline
+# ---------------------------------------------------------------------
+
+LOCKED_CLASS = """
+    import threading
+
+    class C:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.items = []
+            self.total = 0
+
+        def add(self, x):
+            with self._lock:
+                self.items.append(x)
+                self.total += 1
+"""
+
+
+def test_lock_mixed_mutation_bad():
+    findings = snip(LOCKED_CLASS + """
+        def sneaky(self, x):
+            self.items.append(x)
+    """)
+    assert rules_of(findings) == ["lock-mixed-mutation"]
+    assert findings[0].symbol == "C.sneaky"
+
+
+def test_lock_mixed_mutation_good_all_locked():
+    assert snip(LOCKED_CLASS) == []
+
+
+def test_lock_init_is_pre_publication():
+    # the __init__ assignments themselves are unlocked mutations of
+    # guarded attrs but must not be flagged
+    findings = snip(LOCKED_CLASS)
+    assert findings == []
+
+
+def test_lock_locked_suffix_convention():
+    # *_locked methods are called with the lock held — no finding
+    findings = snip(LOCKED_CLASS + """
+        def _flush_locked(self):
+            self.items.clear()
+            self.total = 0
+    """)
+    assert findings == []
+
+
+def test_lock_unlocked_read_bad():
+    findings = snip(LOCKED_CLASS + """
+        def totals(self):
+            return (len(self.items), self.total)
+    """)
+    assert rules_of(findings) == ["lock-unlocked-read"]
+    assert findings[0].symbol == "C.totals"
+    assert "items" in findings[0].message and "total" in findings[0].message
+
+
+def test_lock_unlocked_read_good_under_lock():
+    findings = snip(LOCKED_CLASS + """
+        def totals(self):
+            with self._lock:
+                return (len(self.items), self.total)
+    """)
+    assert findings == []
+
+
+def test_lock_unlocked_read_single_attr_below_threshold():
+    # one guarded attr alone is an atomic snapshot under the GIL
+    findings = snip(LOCKED_CLASS + """
+        def count(self):
+            return len(self.items)
+    """)
+    assert findings == []
+
+
+def test_lock_unlocked_read_private_method_exempt():
+    findings = snip(LOCKED_CLASS + """
+        def _peek(self):
+            return (len(self.items), self.total)
+    """)
+    assert findings == []
+
+
+def test_lock_module_global_mixed_mutation():
+    findings = snip("""
+        import threading
+
+        _LOCK = threading.Lock()
+        _STATS = {"a": 0}
+
+        def bump():
+            with _LOCK:
+                _STATS["a"] += 1
+
+        def sneaky():
+            _STATS["a"] += 1
+    """, rel="kernels/snippet.py")
+    assert rules_of(findings) == ["lock-mixed-mutation"]
+    assert findings[0].symbol == "sneaky"
+
+
+def test_lock_make_lock_factory_recognized():
+    findings = snip("""
+        from repro.analysis.sanitize import make_lock
+
+        class C:
+            def __init__(self):
+                self._lock = make_lock("c")
+                self.n = 0
+
+            def inc(self):
+                with self._lock:
+                    self.n += 1
+
+            def sneaky(self):
+                self.n = 0
+    """)
+    assert rules_of(findings) == ["lock-mixed-mutation"]
+
+
+# ---------------------------------------------------------------------
+# jit hazards
+# ---------------------------------------------------------------------
+
+def test_jit_traced_branch_bad():
+    findings = snip("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+    """)
+    assert rules_of(findings) == ["jit-traced-branch"]
+    assert findings[0].symbol == "f"
+
+
+def test_jit_traced_branch_good_static_and_shape():
+    findings = snip("""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("flag",))
+        def g(x, flag):
+            if flag:
+                x = x + 1
+            if x.shape[0] > 2:
+                x = x * 2
+            if x is None:
+                return x
+            return x
+    """)
+    assert findings == []
+
+
+def test_jit_traced_branch_propagates_through_assignment():
+    findings = snip("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            y = x + 1
+            while y > 0:
+                y = y - 1
+            return y
+    """)
+    assert rules_of(findings) == ["jit-traced-branch"]
+
+
+def test_jit_wrapped_assignment_form():
+    # name = jax.jit(fn) marks fn as a jitted scope
+    findings = snip("""
+        import jax
+
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+
+        f_jit = jax.jit(f)
+    """)
+    assert rules_of(findings) == ["jit-traced-branch"]
+
+
+def test_jit_host_sync_bad():
+    findings = snip("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            s = float(x.sum())
+            return s + x.mean().item()
+    """)
+    assert rules_of(findings) == ["jit-host-sync", "jit-host-sync"]
+
+
+def test_jit_host_sync_good_outside_jit():
+    findings = snip("""
+        def report(x):
+            return float(x.sum())
+    """)
+    assert findings == []
+
+
+def test_jit_kernel_body_kwargs_are_static():
+    # Pallas kernel bodies: *_ref params traced, keyword params static
+    findings = snip("""
+        def _toy_kernel(x_ref, o_ref, *, causal, softcap):
+            if causal:
+                o_ref[...] = x_ref[...]
+            if softcap > 0:
+                o_ref[...] = x_ref[...] * softcap
+    """, rel="kernels/toy.py")
+    assert findings == []
+
+
+def test_jit_kernel_body_ref_branch_flagged():
+    findings = snip("""
+        def _toy_kernel(x_ref, o_ref):
+            if x_ref[0] > 0:
+                o_ref[...] = x_ref[...]
+    """, rel="kernels/toy.py")
+    assert rules_of(findings) == ["jit-traced-branch"]
+
+
+def test_jit_constant_rebuild_bad():
+    findings = snip("""
+        import jax.numpy as jnp
+
+        def f():
+            return jnp.asarray([1.0, 2.0, 3.0])
+    """)
+    assert rules_of(findings) == ["jit-constant-rebuild"]
+
+
+def test_jit_constant_rebuild_good_module_scope_or_variable():
+    findings = snip("""
+        import jax.numpy as jnp
+
+        _C = jnp.asarray([1.0, 2.0, 3.0])
+
+        def f(xs):
+            return jnp.asarray(xs)
+    """)
+    assert findings == []
+
+
+def test_jit_bucket_bypass_bad():
+    findings = snip("""
+        from repro.kernels.route_step import route_step_jit
+
+        def f(*args):
+            return route_step_jit(*args)
+    """)
+    assert rules_of(findings) == ["jit-bucket-bypass"]
+
+
+def test_jit_bucket_bypass_good_sanctioned_and_in_kernels():
+    assert snip("""
+        from repro import kernels as K
+
+        def f(*args):
+            return K.route_step(*args)
+    """) == []
+    # raw entries are fair game inside the kernels package itself
+    assert snip("""
+        from repro.kernels.route_step import route_step_jit
+
+        def f(*args):
+            return route_step_jit(*args)
+    """, rel="kernels/ops.py") == []
+
+
+# ---------------------------------------------------------------------
+# kernel-oracle conformance (project rule, synthetic tree)
+# ---------------------------------------------------------------------
+
+def _kernel_project(tmp_path, *, oracle_for_bar=True, test_refs_foo=True):
+    kdir = tmp_path / "src" / "kernels"
+    kdir.mkdir(parents=True)
+    (kdir / "foo.py").write_text(
+        "def foo_pallas(x):\n    return x\n\n"
+        "def bar_pallas(x):\n    return x\n")
+    ref = "def foo(x):\n    return x\n"
+    if oracle_for_bar:
+        ref += "\n\ndef bar(x):\n    return x\n"
+    (kdir / "ref.py").write_text(ref)
+    tdir = tmp_path / "tests"
+    tdir.mkdir()
+    body = "from repro.kernels.ref import foo\n" if test_refs_foo \
+        else "import os\n"
+    if oracle_for_bar:
+        body += "from repro.kernels.ref import bar\nassert bar\n"
+    (tdir / "test_foo.py").write_text(body)
+    return run_lint([str(tmp_path / "src")], root=str(tmp_path),
+                    tests_dir=str(tdir))
+
+
+def test_kernel_oracle_clean(tmp_path):
+    result = _kernel_project(tmp_path)
+    assert result.findings == []
+
+
+def test_kernel_missing_oracle_fires(tmp_path):
+    result = _kernel_project(tmp_path, oracle_for_bar=False)
+    assert rules_of(result.findings) == ["kernel-missing-oracle"]
+    assert result.findings[0].symbol == "bar_pallas"
+
+
+def test_kernel_missing_parity_test_fires(tmp_path):
+    result = _kernel_project(tmp_path, test_refs_foo=False)
+    assert rules_of(result.findings) == ["kernel-missing-parity-test"]
+    assert "foo" in result.findings[0].message
+
+
+# ---------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------
+
+def test_suppression_silences_named_rule():
+    findings = snip(LOCKED_CLASS + """
+        def sneaky(self, x):
+            self.items.append(x)  # lint: ignore[lock-mixed-mutation] -- fixture
+    """)
+    assert findings == []
+
+
+def test_suppression_comment_block_above_statement():
+    findings = snip(LOCKED_CLASS + """
+        def sneaky(self, x):
+            # lint: ignore[lock-mixed-mutation] -- a reason that wraps
+            # over two comment lines before the flagged statement
+            self.items.append(x)
+    """)
+    assert findings == []
+
+
+def test_bare_suppression_is_a_finding():
+    findings = snip("""
+        def f():
+            return 1  # lint: ignore
+    """)
+    assert rules_of(findings) == ["bad-suppression"]
+
+
+def test_suppression_unknown_rule_is_a_finding():
+    findings = snip("""
+        def f():
+            return 1  # lint: ignore[no-such-rule] -- whatever
+    """)
+    assert rules_of(findings) == ["bad-suppression"]
+    assert "no-such-rule" in findings[0].message
+
+
+def test_suppression_in_docstring_is_inert():
+    findings = snip('''
+        def f():
+            """Example: # lint: ignore[lock-mixed-mutation] -- nope."""
+            return 1
+    ''')
+    assert findings == []
+
+
+def test_suppression_does_not_cover_other_rules():
+    findings = snip(LOCKED_CLASS + """
+        def sneaky(self, x):
+            self.items.append(x)  # lint: ignore[jit-host-sync] -- wrong rule
+    """)
+    assert rules_of(findings) == ["lock-mixed-mutation"]
+
+
+# ---------------------------------------------------------------------
+# baseline ratchet
+# ---------------------------------------------------------------------
+
+def _f(rule="lock-mixed-mutation", path="a.py", line=3, symbol="C.m",
+       message="msg"):
+    return Finding(rule=rule, path=path, line=line, col=1,
+                   symbol=symbol, message=message)
+
+
+def test_fingerprint_is_line_free():
+    assert _f(line=3).fingerprint == _f(line=99).fingerprint
+    assert _f(message="x").fingerprint != _f(message="y").fingerprint
+    assert _f().fingerprint.startswith("lock-mixed-mutation:")
+
+
+def test_baseline_roundtrip_and_split(tmp_path):
+    bl = tmp_path / "baseline.json"
+    save_baseline(str(bl), [_f(), _f(line=9)])
+    counts = load_baseline(str(bl))
+    assert counts == {_f().fingerprint: 2}
+    # 2 baselined + 1 genuinely new
+    new, old = split_new([_f(), _f(line=9), _f(message="other")], counts)
+    assert [x.message for x in new] == ["other"]
+    assert len(old) == 2
+
+
+def test_baseline_multiplicity_ratchets():
+    counts = {_f().fingerprint: 1}
+    # second occurrence of a once-baselined finding counts as NEW
+    new, old = split_new([_f(), _f(line=50)], counts)
+    assert len(new) == 1 and len(old) == 1
+
+
+def test_stale_baseline_reported():
+    counts = {_f().fingerprint: 2, _f(message="gone").fingerprint: 1}
+    stale = stale_baseline([_f()], counts)
+    assert stale == {_f().fingerprint: 1, _f(message="gone").fingerprint: 1}
+
+
+def test_missing_baseline_is_empty(tmp_path):
+    assert load_baseline(str(tmp_path / "nope.json")) == {}
+
+
+# ---------------------------------------------------------------------
+# CLI (exit codes, --write-baseline, JSON schema)
+# ---------------------------------------------------------------------
+
+BAD_FILE = textwrap.dedent(LOCKED_CLASS + """
+        def sneaky(self, x):
+            self.items.append(x)
+""")
+
+
+def _cli_project(tmp_path):
+    pkg = tmp_path / "src"
+    pkg.mkdir()
+    (pkg / "mod.py").write_text(BAD_FILE)
+    return pkg
+
+
+def test_cli_ratchet_lifecycle(tmp_path, capsys):
+    pkg = _cli_project(tmp_path)
+    bl = str(tmp_path / "analysis" / "baseline.json")
+    args = [str(pkg), "--root", str(tmp_path), "--baseline", bl]
+    assert lint_main(args) == 1                  # new finding fails
+    assert lint_main(args + ["--write-baseline"]) == 0
+    assert lint_main(args) == 0                  # baselined passes
+    # a second violation rides in -> fails again
+    (pkg / "mod2.py").write_text(BAD_FILE)
+    assert lint_main(args) == 1
+    capsys.readouterr()
+
+
+def test_cli_json_schema_stable(tmp_path, capsys):
+    pkg = _cli_project(tmp_path)
+    rc = lint_main([str(pkg), "--root", str(tmp_path), "--no-baseline",
+                    "--json"])
+    assert rc == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["schema_version"] == SCHEMA_VERSION
+    assert set(doc) == {"schema_version", "n_files", "findings",
+                        "baselined", "stale_baseline", "errors"}
+    assert doc["n_files"] == 1 and len(doc["findings"]) == 1
+    row = doc["findings"][0]
+    assert set(row) == {"rule", "path", "line", "col", "symbol",
+                        "message", "fingerprint"}
+    assert row["rule"] == "lock-mixed-mutation"
+    assert row["path"] == "src/mod.py"
+    assert row["fingerprint"].split(":")[0] == row["rule"]
+
+
+def test_rule_catalog_pinned():
+    assert set(RULES) == {
+        "lock-mixed-mutation", "lock-unlocked-read", "jit-traced-branch",
+        "jit-host-sync", "jit-constant-rebuild", "jit-bucket-bypass",
+        "kernel-missing-oracle", "kernel-missing-parity-test",
+        "bad-suppression"}
+
+
+# ---------------------------------------------------------------------
+# the repo itself is clean against the checked-in baseline
+# ---------------------------------------------------------------------
+
+def test_repo_lints_clean_against_baseline():
+    result = run_lint([str(REPO_ROOT / "src" / "repro")],
+                      root=str(REPO_ROOT),
+                      tests_dir=str(REPO_ROOT / "tests"))
+    assert result.errors == []
+    baseline = load_baseline(str(REPO_ROOT / "analysis" / "baseline.json"))
+    new, _old = split_new(result.findings, baseline)
+    assert new == [], "\n".join(f.render() for f in new)

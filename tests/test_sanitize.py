@@ -1,0 +1,206 @@
+"""Runtime-sanitizer tests: the lock-order cycle detector fires on a
+seeded ABBA inversion (and stays silent on consistent ordering), and
+the recompile sentinel fires on a deliberately cleared jit cache (and
+stays silent on warm steady-state dispatch)."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.analysis import sanitize
+from repro.analysis.sanitize import (LockOrderError, OrderedLock,
+                                     RecompileSentinel, make_lock)
+from repro.core.preferences import DOMAINS, METRICS, TASK_TYPES
+from repro.kernels import ops
+from repro.kernels.route_step import route_step_jit
+
+
+@pytest.fixture
+def clean_lock_graph():
+    """Isolate the global lock-order graph: tests here seed deliberate
+    inversions that must not leak into (or inherit from) the suite's
+    real lock edges."""
+    sanitize.reset_lock_order()
+    yield
+    sanitize.reset_lock_order()
+
+
+# ---------------------------------------------------------------------
+# lock-order detector
+# ---------------------------------------------------------------------
+
+def test_abba_cycle_fires(clean_lock_graph):
+    a, b = OrderedLock("t.A"), OrderedLock("t.B")
+    with a:
+        with b:                 # establishes A -> B
+            pass
+    with pytest.raises(LockOrderError, match="t.A"):
+        with b:
+            with a:             # B -> A closes the cycle
+                pass
+    assert sanitize.lock_order_violations(), \
+        "violation must be recorded for post-mortem reporting"
+
+
+def test_abba_cycle_fires_across_threads(clean_lock_graph):
+    """The graph is global: thread 1 establishes A -> B, thread 2's
+    B -> A acquisition is refused deterministically — no unlucky
+    interleaving needed."""
+    a, b = OrderedLock("x.A"), OrderedLock("x.B")
+    errors = []
+
+    def t1():
+        with a:
+            with b:
+                pass
+
+    def t2():
+        try:
+            with b:
+                with a:
+                    pass
+        except LockOrderError as e:
+            errors.append(e)
+
+    th1 = threading.Thread(target=t1)
+    th1.start()
+    th1.join()
+    th2 = threading.Thread(target=t2)
+    th2.start()
+    th2.join()
+    assert len(errors) == 1
+    assert sanitize.lock_order_violations()[-1][:2] == ("x.B", "x.A")
+
+
+def test_consistent_order_is_silent(clean_lock_graph):
+    a, b, c = (OrderedLock(n) for n in ("s.A", "s.B", "s.C"))
+    for _ in range(3):
+        with a:
+            with b:
+                with c:
+                    pass
+    with b:                     # partial chains in the same order: fine
+        with c:
+            pass
+    assert sanitize.lock_order_violations() == []
+    graph = sanitize.lock_order_graph()
+    assert "s.B" in graph["s.A"] and "s.C" in graph["s.B"]
+
+
+def test_transitive_cycle_detected(clean_lock_graph):
+    a, b, c = (OrderedLock(n) for n in ("v.A", "v.B", "v.C"))
+    with a:
+        with b:
+            pass
+    with b:
+        with c:
+            pass
+    with pytest.raises(LockOrderError):
+        with c:
+            with a:             # A ->* C exists, C -> A closes it
+                pass
+
+
+def test_same_name_nesting_skipped(clean_lock_graph):
+    # two instances of the same component (same role name) locked
+    # nested — instance-level ordering is out of scope for a name graph
+    l1, l2 = OrderedLock("dup"), OrderedLock("dup")
+    with l1:
+        with l2:
+            pass
+    with l2:
+        with l1:
+            pass
+    assert sanitize.lock_order_violations() == []
+
+
+def test_make_lock_honors_env(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert not isinstance(make_lock("m"), OrderedLock)
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    lk = make_lock("m")
+    assert isinstance(lk, OrderedLock)
+    with lk:                    # context-manager protocol works
+        assert lk.locked()
+    assert not lk.locked()
+
+
+# ---------------------------------------------------------------------
+# recompile sentinel
+# ---------------------------------------------------------------------
+
+def _event(compiles, path="dense", q=8, n=256):
+    return {"path": path, "q_bucket": q, "n_bucket": n, "quant": "f32",
+            "shards": 1, "compiles": compiles}
+
+
+def test_sentinel_warmup_then_steady_state_silent():
+    s = RecompileSentinel()
+    s(_event(1))                # first compile per signature: warmup
+    s(_event(0))
+    s(_event(0))
+    s(_event(1, n=512))         # new bucket: its own warmup
+    assert s.drain() == []
+
+
+def test_sentinel_fires_on_post_warmup_compile():
+    s = RecompileSentinel()
+    s(_event(1))
+    s(_event(1))                # same signature compiles again
+    viols = s.drain()
+    assert len(viols) == 1 and "n_bucket=256" in viols[0]
+    assert s.drain() == []      # drain clears
+    s.forget()
+    s(_event(1))                # after forget, warmup restarts
+    assert s.drain() == []
+
+
+def _tiny_problem(seed=0):
+    rng = np.random.default_rng(seed)
+    B, N, M = 2, 8, len(METRICS)
+    nt, nd = len(TASK_TYPES), len(DOMAINS)
+    emb = rng.random((N, M)).astype(np.float32)
+    tt = np.ones((nt + 1, N), bool)
+    dm = np.ones((nd + 1, N), bool)
+    gmask = np.zeros(N, bool)
+    T = rng.random((B, M)).astype(np.float32)
+    W = rng.random((B, M)).astype(np.float32)
+    ti = np.zeros(B, np.int32)
+    di = np.zeros(B, np.int32)
+    return emb, tt, dm, gmask, T, W, ti, di
+
+
+def test_sentinel_end_to_end_on_route_step():
+    """Installed on the real dispatcher: warm dispatches are silent; a
+    deliberately cleared jit cache (the seeded breakage) trips it."""
+    args = _tiny_problem()
+    prev_hook = ops._RECOMPILE_HOOK
+    s = RecompileSentinel().install()
+    try:
+        ops.route_step(*args, k=3, r=3)        # warmup (compile or cached)
+        ops.route_step(*args, k=3, r=3)        # steady state
+        assert s.drain() == []
+        route_step_jit._clear_cache()        # deliberate breakage
+        ops.route_step(*args, k=3, r=3)        # recompiles a seen bucket
+        viols = s.drain()
+        assert viols and "after warmup" in viols[0]
+    finally:
+        ops.set_recompile_hook(prev_hook)
+
+
+def test_set_recompile_hook_detach():
+    events = []
+    prev_hook = ops._RECOMPILE_HOOK
+    ops.set_recompile_hook(events.append)
+    try:
+        ops.route_step(*_tiny_problem(1), k=2, r=2)
+        assert len(events) == 1
+        ev = events[0]
+        assert set(ev) == {"path", "q_bucket", "n_bucket", "quant",
+                           "shards", "compiles"}
+        assert ev["path"] == "dense"
+        ops.set_recompile_hook(None)
+        ops.route_step(*_tiny_problem(1), k=2, r=2)
+        assert len(events) == 1              # detached: no more events
+    finally:
+        ops.set_recompile_hook(prev_hook)
