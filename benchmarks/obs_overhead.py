@@ -42,6 +42,7 @@ MAX_OVERHEAD = 0.05
 # from the dumped .prom file via `python -m repro.obs.slo`
 SMOKE_RULES = (
     "no_recompiles: route_step_compiles == 0",
+    "analyze_recompiles: analyze_step_compiles == 0",
     "no_shedding:   shed_rate <= 0.0",
     "cache_warm:    cache_hit_rate >= 0.4",
     "events_flow:   events >= 1",
@@ -134,6 +135,7 @@ def traced_serving_smoke(metrics_path=None, trace_path=None, b: int = 16,
     fresh = Telemetry()
     router.telemetry = fresh
     router.engine.telemetry = fresh
+    router.analyzer.telemetry = fresh
 
     out = engine.submit(reqs("steady"))        # all miss: full path
     engine.observe(out, [0.9] * len(out))      # validates -> cache fill

@@ -44,6 +44,7 @@ SMOKE = {
     "load_aware": load_aware.main,
     "cache_hit": cache_hit.main,
     "obs_overhead": obs_overhead.main,
+    "analyzer_pruning": analyzer_pruning.main,
     "soak": soak.main,
 }
 

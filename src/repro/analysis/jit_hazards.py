@@ -60,6 +60,7 @@ _NUMPY_ALIASES = {"np", "numpy", "onp"}
 RAW_KERNEL_ENTRIES = {
     "route_step_jit", "route_step_ivf_jit", "route_step_sharded_jit",
     "router_topk_pallas", "router_topk_q8_pallas",
+    "analyze_step_jit", "analyze_route_step_jit",
 }
 
 

@@ -23,8 +23,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.preferences import DOMAINS, TASK_TYPES, TaskSignature
-from repro.data.tokenizer import PAD_ID, HashTokenizer
+from repro.data.tokenizer import HashTokenizer
 from repro.data.workload import QueryRecord, make_workload
+from repro.kernels import ops
+# the traced encoder lives with the kernels now (it runs inside the
+# fused analyze->route program); re-exported here for existing callers
+from repro.kernels.analyze_step import (_ln, _maybe_deq,  # noqa: F401
+                                        analyzer_forward)
 from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
 
 N_TT = len(TASK_TYPES)
@@ -55,7 +60,10 @@ class AnalyzerConfig:
 # ----------------------------------------------------------------------
 
 def prune_text(cfg: AnalyzerConfig, text: str, seed: int = 0) -> str:
-    """Edge-preserving pruning of long queries (deterministic)."""
+    """Edge-preserving pruning of long queries (deterministic).
+
+    Reference implementation — ``prune_texts`` is the vectorized batch
+    twin used on the hot path (property-tested equivalent)."""
     words = text.split()
     budget = cfg.prune_head + cfg.prune_tail + cfg.prune_mid
     if len(words) <= budget:
@@ -67,6 +75,32 @@ def prune_text(cfg: AnalyzerConfig, text: str, seed: int = 0) -> str:
     pick = sorted(rng.choice(len(middle), size=cfg.prune_mid, replace=False))
     mid = [middle[i] for i in pick]
     return " ".join(head + mid + tail)
+
+
+def prune_texts(cfg: AnalyzerConfig, texts: Sequence[str],
+                seed: int = 0) -> List[str]:
+    """Batch ``prune_text``: short queries pass through untouched
+    (the overwhelmingly common case — one split and a length check),
+    long ones build the keep-index set with numpy fancy indexing
+    instead of per-word Python slicing/comprehension.
+    """
+    budget = cfg.prune_head + cfg.prune_tail + cfg.prune_mid
+    out = list(texts)
+    for i, text in enumerate(texts):
+        words = text.split()
+        n = len(words)
+        if n <= budget:
+            continue
+        # identical draw to prune_text: same rng seed, same choice call
+        rng = np.random.default_rng(seed + n)
+        pick = np.sort(rng.choice(n - cfg.prune_head - cfg.prune_tail,
+                                  size=cfg.prune_mid, replace=False))
+        keep = np.concatenate([
+            np.arange(cfg.prune_head),
+            pick + cfg.prune_head,
+            np.arange(n - cfg.prune_tail, n)])
+        out[i] = " ".join(np.asarray(words, object)[keep].tolist())
+    return out
 
 
 # ----------------------------------------------------------------------
@@ -99,51 +133,6 @@ def init_analyzer(key, cfg: AnalyzerConfig) -> Dict:
         "head_dm": mat(ks[-2], (d, N_DM), scale=0.02),
         "head_cx": mat(ks[-1], (d, 1), scale=0.02),
     }
-
-
-def _ln(x, g, eps=1e-6):
-    mu = jnp.mean(x, axis=-1, keepdims=True)
-    var = jnp.var(x, axis=-1, keepdims=True)
-    return (x - mu) * jax.lax.rsqrt(var + eps) * g
-
-
-def _maybe_deq(w):
-    """Transparent int8 dequant: w is either f32 or (int8, scale)."""
-    if isinstance(w, tuple):
-        q, s = w
-        return q.astype(jnp.float32) * s
-    return w
-
-
-def analyzer_forward(params: Dict, cfg: AnalyzerConfig, tokens: jnp.ndarray
-                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """tokens (B, L) int32 -> (tt_logits, dm_logits, complexity (B,))."""
-    B, L = tokens.shape
-    mask = tokens != PAD_ID                                 # (B, L)
-    emb = _maybe_deq(params["embed"])
-    x = emb[tokens] + _maybe_deq(params["pos"])[None, :L]
-    H, hd = cfg.n_heads, cfg.head_dim
-    neg = jnp.where(mask, 0.0, -1e30)[:, None, None, :]     # key mask
-
-    for p in params["layers"]:
-        h = _ln(x, p["ln1"])
-        q = (h @ _maybe_deq(p["wq"])).reshape(B, L, H, hd)
-        k = (h @ _maybe_deq(p["wk"])).reshape(B, L, H, hd)
-        v = (h @ _maybe_deq(p["wv"])).reshape(B, L, H, hd)
-        s = jnp.einsum("blhd,bmhd->bhlm", q, k) / math.sqrt(hd) + neg
-        a = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("bhlm,bmhd->blhd", a, v).reshape(B, L, -1)
-        x = x + o @ _maybe_deq(p["wo"])
-        h = _ln(x, p["ln2"])
-        x = x + jax.nn.gelu(h @ _maybe_deq(p["wi"])) @ _maybe_deq(p["wp"])
-
-    x = _ln(x, params["ln_f"])
-    denom = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1)
-    pooled = jnp.sum(x * mask[..., None], axis=1) / denom   # (B, d)
-    tt = pooled @ _maybe_deq(params["head_tt"])
-    dm = pooled @ _maybe_deq(params["head_dm"])
-    cx = jax.nn.sigmoid(pooled @ _maybe_deq(params["head_cx"]))[:, 0]
-    return tt, dm, cx
 
 
 # ----------------------------------------------------------------------
@@ -192,12 +181,20 @@ def analyzer_loss(params, cfg, tokens, labels):
 class TaskAnalyzer:
     """Trainable analyzer with the paper's predict-json contract."""
 
+    # marker the orchestrator checks before fusing analyze into the
+    # routing dispatch (stub/oracle analyzers lack params/cfg)
+    supports_fused_route = True
+
     def __init__(self, cfg: AnalyzerConfig = AnalyzerConfig(), seed: int = 0):
         self.cfg = cfg
         self.tok = HashTokenizer(cfg.vocab_size)
         self.params = init_analyzer(jax.random.PRNGKey(seed), cfg)
         self._fwd = jax.jit(
             lambda p, t: analyzer_forward(p, self.cfg, t))
+        # wired by the orchestrator so analyzer dispatches land in the
+        # same observability stream as route_step
+        self.telemetry = None
+        self.tracer = None
 
     # -------------------------- training --------------------------
     def train(self, n_samples: int = 4096, steps: int = 300,
@@ -248,35 +245,46 @@ class TaskAnalyzer:
         }
 
     # -------------------------- inference --------------------------
-    def _encode(self, texts: Sequence[str]) -> np.ndarray:
-        pruned = [prune_text(self.cfg, t) for t in texts]
+    def encode_batch(self, texts: Sequence[str]) -> np.ndarray:
+        """Prune + tokenize: (B, max_len) int32 token ids.
+
+        Public because the fused routing path feeds these token ids
+        straight into the single analyze->route device program."""
+        pruned = prune_texts(self.cfg, texts)
         return self.tok.encode_batch(pruned, self.cfg.max_len)
+
+    # old private name, kept for callers/tests that use it
+    _encode = encode_batch
 
     def quantize(self) -> None:
         self.params = quantize_int8(self.params)
 
     def analyze_batch(self, texts: Sequence[str]) -> List[TaskSignature]:
-        toks = self._encode(texts)
-        # bucket the batch dim to powers of two so the jitted forward
-        # compiles once per bucket, not once per request-batch size
-        n = toks.shape[0]
-        bucket = 1 << max(n - 1, 0).bit_length()
-        if bucket != n:
-            toks = np.concatenate(
-                [toks, np.zeros((bucket - n, toks.shape[1]), toks.dtype)])
-        tt, dm, cx = self._fwd(self.params, jnp.asarray(toks))
-        tt_p = np.asarray(jax.nn.softmax(tt, axis=-1))
-        dm_p = np.asarray(jax.nn.softmax(dm, axis=-1))
-        cx = np.asarray(cx)
-        out = []
-        for i in range(len(texts)):
-            conf = float(min(tt_p[i].max(), dm_p[i].max()))
-            out.append(TaskSignature(
-                task_type=TASK_TYPES[int(tt_p[i].argmax())],
-                domain=DOMAINS[int(dm_p[i].argmax())],
-                complexity=float(np.clip(cx[i], 0.0, 1.0)),
-                confidence=conf))
-        return out
+        if len(texts) == 0:
+            # fast path: never pad an empty batch up to a bucket of 1
+            # and run the forward on a garbage row
+            return []
+        return self.analyze_tokens(self.encode_batch(texts))
+
+    def analyze_tokens(self, tokens: np.ndarray) -> List[TaskSignature]:
+        """Tokens -> signatures: the staged half of the decision path
+        (``route_tokens_batch`` fuses this stage into the route
+        dispatch instead of materializing signatures on the host)."""
+        if len(tokens) == 0:
+            return []
+        # ops.analyze_step buckets the batch dim to powers of two (one
+        # compile per bucket) and runs the softmax/argmax/confidence
+        # epilogue on device — the host sees four (B,) arrays, and
+        # bucket-padding rows are sliced off before this loop
+        out = ops.analyze_step(self.params, self.cfg, tokens,
+                               telemetry=self.telemetry,
+                               tracer=self.tracer)
+        return [TaskSignature(task_type=TASK_TYPES[ti],
+                              domain=DOMAINS[di],
+                              complexity=cx, confidence=conf)
+                for ti, di, cx, conf in zip(
+                    out["tt_idx"].tolist(), out["dm_idx"].tolist(),
+                    out["cx"].tolist(), out["conf"].tolist())]
 
     def analyze(self, text: str) -> TaskSignature:
         return self.analyze_batch([text])[0]

@@ -19,7 +19,7 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.preferences import TaskSignature
+from repro.core.preferences import DOMAINS, TASK_TYPES, TaskSignature
 from repro.analysis.sanitize import make_lock
 
 Cluster = Tuple[str, str, int]
@@ -43,6 +43,8 @@ class FeedbackStore:
         self._bias: Dict[Tuple[Cluster, str], float] = {}
         self._count: Dict[Tuple[Cluster, str], int] = {}
         self._log: List[FeedbackEvent] = []
+        self._version = 0
+        self._tables: Dict[Tuple, np.ndarray] = {}
         self._lock = make_lock("core.feedback")
 
     def record(self, sig: TaskSignature, model: str, thumbs_up: bool) -> float:
@@ -56,7 +58,55 @@ class FeedbackStore:
             self._bias[key] = float(np.clip(new, -1.0, 1.0))
             self._count[key] = self._count.get(key, 0) + 1
             self._log.append(FeedbackEvent(c, model, thumbs_up))
+            self._version += 1
+            self._tables.clear()
             return self._bias[key]
+
+    def version(self) -> int:
+        """Monotonic mutation counter — bumped by ``record`` and
+        ``load_state``.  Lets callers detect staleness of anything
+        derived from the bias map without diffing it."""
+        with self._lock:
+            return self._version
+
+    def bias_table(self, models: Sequence[str],
+                   buckets: int = 4) -> np.ndarray:
+        """Dense (len(TASK_TYPES) * len(DOMAINS) * buckets, N) bias
+        table for the fused routing path: row
+        ``(tt_idx * len(DOMAINS) + dm_idx) * buckets + cb`` holds the
+        per-model biases of cluster ``(TASK_TYPES[tt_idx],
+        DOMAINS[dm_idx], cb)`` — the same raw-predicted cluster
+        ``cluster_of`` keys on (confidence thresholding never enters
+        the feedback cluster).
+
+        Memoized per (version, models, buckets): the returned array's
+        *identity* is stable until feedback actually changes, so the
+        device-side padded copy in ``kernels.ops`` caches on ``id()``
+        and steady-state serving re-ships nothing.
+        """
+        with self._lock:
+            key = (self._version, tuple(models), int(buckets))
+            table = self._tables.get(key)
+            if table is not None:
+                return table
+            n_tt, n_dm = len(TASK_TYPES), len(DOMAINS)
+            table = np.zeros((n_tt * n_dm * buckets, len(models)),
+                             np.float32)
+            if self._bias:
+                tt_row = {t: i for i, t in enumerate(TASK_TYPES)}
+                dm_row = {d: i for i, d in enumerate(DOMAINS)}
+                name_col = {m: j for j, m in enumerate(models)}
+                for ((t, d, cb), m), v in self._bias.items():
+                    ti, di, j = tt_row.get(t), dm_row.get(d), \
+                        name_col.get(m)
+                    if ti is None or di is None or j is None \
+                            or not 0 <= cb < buckets:
+                        continue
+                    table[(ti * n_dm + di) * buckets + cb, j] = v
+            if len(self._tables) >= 4:
+                self._tables.clear()
+            self._tables[key] = table
+            return table
 
     def has_bias(self) -> bool:
         """True when ANY (cluster, model) bias is recorded — the fused
@@ -145,6 +195,8 @@ class FeedbackStore:
         with self._lock:
             self._bias = bias
             self._count = count
+            self._version += 1
+            self._tables.clear()
 
     def save(self, path: str) -> None:
         """Atomic snapshot: a crash or a concurrent reader never sees a

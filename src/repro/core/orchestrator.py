@@ -25,7 +25,7 @@ from repro.core.analyzer import TaskAnalyzer
 from repro.core.feedback import FeedbackStore
 from repro.core.merging import ModelMerger
 from repro.core.mres import MRES, ModelEntry
-from repro.core.preferences import (TaskSignature, UserPreferences, resolve,
+from repro.core.preferences import (TaskSignature, UserPreferences,
                                     resolve_batch)
 from repro.core.routing import RoutingDecision, RoutingEngine
 from repro.obs.trace import NOOP_SPAN
@@ -51,17 +51,16 @@ class RoutedQuery:
     observed BEFORE the engine stamps keys, and that must not starve
     the cache of the post-generation write-back.
     """
-    __slots__ = ("text", "sig", "analyzer_s", "route_s", "response",
+    __slots__ = ("text", "analyzer_s", "route_s", "response",
                  "observed", "cache_key", "cache_fp", "cache_written",
-                 "_decision", "_batch", "_bidx")
+                 "_sig", "_decision", "_batch", "_bidx")
 
-    def __init__(self, text: str, sig: TaskSignature,
+    def __init__(self, text: str, sig: Optional[TaskSignature] = None,
                  decision: Optional[RoutingDecision] = None,
                  analyzer_s: float = 0.0, route_s: float = 0.0,
                  response: Any = None, batch=None, batch_idx: int = -1):
         assert decision is not None or batch is not None
         self.text = text
-        self.sig = sig
         self.analyzer_s = analyzer_s
         self.route_s = route_s
         self.response = response
@@ -69,9 +68,18 @@ class RoutedQuery:
         self.cache_key: Optional[np.ndarray] = None
         self.cache_fp = 0
         self.cache_written = False
+        self._sig = sig
         self._decision = decision
         self._batch = batch
         self._bidx = batch_idx
+
+    @property
+    def sig(self) -> TaskSignature:
+        """Task signature — eager on the staged path, materialized
+        lazily from the fused batch's analyzer arrays otherwise."""
+        if self._sig is None:
+            self._sig = self._batch.signature(self._bidx)
+        return self._sig
 
     @property
     def decision(self) -> RoutingDecision:
@@ -143,30 +151,42 @@ class OptiRoute:
         # consults it before routing; ``observe`` writes validated
         # responses back so future near-duplicates short-circuit
         self.cache = cache
+        # analyzer dispatches report into the same telemetry/trace
+        # stream as route_step (fused path and batched analyze alike)
+        if getattr(analyzer, "supports_fused_route", False):
+            if analyzer.telemetry is None:
+                analyzer.telemetry = telemetry
+            if analyzer.tracer is None:
+                analyzer.tracer = tracer
 
     # ------------------------- interactive -------------------------
     def route(self, text: str, prefs) -> RoutedQuery:
-        t0 = time.time()
-        sig = self.analyzer.analyze(text)
-        t1 = time.time()
-        decision = self.engine.route(prefs, sig)
-        if (self.merger is not None
-                and decision.score < self.merger.score_threshold):
-            merged = self.merger.maybe_merge(resolve(prefs), sig,
-                                             decision.score)
-            if merged is not None:     # re-route against the grown catalog
-                decision = self.engine.route(prefs, sig)
-        t2 = time.time()               # close AFTER the merge + re-route
-        rq = RoutedQuery(text=text, sig=sig, decision=decision,
-                         analyzer_s=t1 - t0, route_s=t2 - t1)
-        self._record(rq)
-        return rq
+        """Single-query routing — B=1 wrapper over ``route_all``.
+
+        Sharing the batched entry means a lone interactive query rides
+        the same shape-bucketed (and, when eligible, fused) device
+        program as serving batches: the B=1 dispatch reuses the
+        8-row-floor bucket instead of compiling its own shape."""
+        return self.route_all([text], prefs)[0]
 
     def _record(self, rq: RoutedQuery) -> None:
         if self.telemetry is not None:
             entry = self.mres.entry(rq.model)
             self.telemetry.record_decision(
                 rq, sim_cost=entry.raw_metrics.get("cost_per_mtok", 0.0))
+
+    def _fully_fused_ok(self) -> bool:
+        """Whether the single analyze->route device program can serve
+        this configuration: a fusable engine (no Thompson bandit, no
+        mesh sharding, no IVF pruning — those keep the staged analyze),
+        no merger (it needs eager scores and may grow the catalog
+        mid-pass), and an analyzer exposing its params/config for
+        in-program execution (stub/oracle analyzers do not)."""
+        return (self.merger is None
+                and getattr(self.analyzer, "supports_fused_route", False)
+                and self.engine._fused_ok()
+                and self.engine.mesh is None
+                and not self.engine.ivf)
 
     # --------------------- batched per-query ---------------------
     def route_all(self, texts: Sequence[str], prefs) -> List[RoutedQuery]:
@@ -191,6 +211,31 @@ class OptiRoute:
             raise ValueError(f"prefs batch size {len(prefs_list)} != "
                              f"text batch size {B}")
         tr = self.tracer
+        if self._fully_fused_ok():
+            # ONE device program from token ids to model choice: the
+            # "analyze" span covers only host-side prune+tokenize (the
+            # encoder itself runs inside the fused dispatch, which
+            # emits its own route_step span with path="fused")
+            an = self.analyzer
+            t0 = time.time()
+            if tr is not None:
+                with tr.span("analyze", path="fused", batch=B):
+                    toks = an.encode_batch(list(texts))
+            else:
+                toks = an.encode_batch(list(texts))
+            t1 = time.time()
+            batch = self.engine.route_tokens_batch(
+                an.params, an.cfg, toks, prefs_list)
+            t2 = time.time()
+            out = [RoutedQuery(text=t, batch=batch, batch_idx=i,
+                               analyzer_s=(t1 - t0) / B,
+                               route_s=(t2 - t1) / B)
+                   for i, t in enumerate(texts)]
+            for rq in out:
+                self._record(rq)
+            if self.adaptive is not None and self.reward_fn is not None:
+                self.observe(out)
+            return out
         t0 = time.time()
         if tr is not None:
             with tr.span("analyze", batch=B):

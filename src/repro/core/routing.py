@@ -151,12 +151,43 @@ class RoutingBatch:
     catalog_n: int
     knn_k: int
     r: int                            # max candidates per decision
+    # analyzer outputs, present only on the fused tokens->decision path
+    # (``route_tokens_batch``): TaskSignature materialization is lazy —
+    # callers that never read ``signature(b)`` never pay the object loop
+    tt_idx: Optional[np.ndarray] = None   # (B,) i32 raw head argmax
+    dm_idx: Optional[np.ndarray] = None   # (B,) i32 raw head argmax
+    cx: Optional[np.ndarray] = None       # (B,) f32 complexity, [0, 1]
+    conf: Optional[np.ndarray] = None     # (B,) f32 min softmax max
     _cache: Optional[List[Optional[RoutingDecision]]] = field(
+        default=None, repr=False, compare=False)
+    _sigs: Optional[List[Optional[TaskSignature]]] = field(
         default=None, repr=False, compare=False)
 
     def __post_init__(self):
         if self._cache is None:
             self._cache = [None] * int(self.model_idx.shape[0])
+        if self._sigs is None:
+            self._sigs = [None] * int(self.model_idx.shape[0])
+
+    def signature(self, b: int) -> TaskSignature:
+        """Materialize (and memoize) row ``b``'s TaskSignature from the
+        fused program's analyzer outputs."""
+        if self.tt_idx is None:
+            raise ValueError("no analyzer outputs on this batch — "
+                             "signatures exist only on the fused "
+                             "route_tokens_batch path")
+        s = self._sigs[b]
+        if s is None:
+            s = TaskSignature(
+                task_type=TASK_TYPES[int(self.tt_idx[b])],
+                domain=DOMAINS[int(self.dm_idx[b])],
+                complexity=float(self.cx[b]),
+                confidence=float(self.conf[b]))
+            self._sigs[b] = s
+        return s
+
+    def signatures(self) -> List[TaskSignature]:
+        return [self.signature(b) for b in range(len(self))]
 
     def __len__(self) -> int:
         return int(self.model_idx.shape[0])
@@ -204,6 +235,17 @@ class RoutingBatch:
     def decisions(self) -> List[RoutingDecision]:
         return [self.decision(b) for b in range(len(self))]
 
+
+
+def _prefs_matrix(prefs_list) -> np.ndarray:
+    """(B, M) preference-weight rows.  ``resolve_batch`` broadcasts a
+    single prefs/profile as B references to ONE object — tile its
+    memoized vector instead of restacking B identical rows (a
+    measurable slice of the per-batch host budget at B=256)."""
+    first = prefs_list[0]
+    if all(p is first for p in prefs_list):
+        return np.tile(first.vector(), (len(prefs_list), 1))
+    return np.stack([p.vector() for p in prefs_list])
 
 class RoutingEngine:
     def __init__(self, mres: MRES, feedback=None, *, knn_k: int = 8,
@@ -345,7 +387,7 @@ class RoutingEngine:
         if B == 0:
             return sigs, prefs_list, None, None, None, None
         # (B, M) scoring weights and task vectors (one vector() pass)
-        W = np.stack([p.vector() for p in prefs_list])
+        W = _prefs_matrix(prefs_list)
         T = W.copy()
         if getattr(self, "use_complexity", True):
             cx = np.array([s.complexity for s in sigs], np.float32)
@@ -472,6 +514,102 @@ class RoutingEngine:
             n_filtered=out["n_filtered"],
             n_candidates=out["n_candidates"],
             catalog_n=n, knn_k=k, r=r)
+
+    # ------------------------------------------------------------------
+    def route_tokens_batch(self, params, cfg, tokens,
+                           prefs_batch) -> RoutingBatch:
+        """Fused tokens->decision routing: ONE device program.
+
+        ``tokens`` is the analyzer's (B, L) int32 token batch
+        (``TaskAnalyzer.encode_batch``); ``params``/``cfg`` its weights
+        and config.  The analyzer encoder, softmax heads, complexity
+        clamp, confidence thresholding, task-vector build, feedback
+        gather, and the whole ``route_step`` pipeline execute as a
+        single jitted ``ops.analyze_route_step`` dispatch — no
+        intermediate touches the host.  Dense single-device only (the
+        sharded/IVF mega-catalog paths keep the staged analyze).
+
+        Returns a ``RoutingBatch`` carrying the analyzer outputs;
+        ``TaskSignature`` objects materialize lazily via
+        ``signature(b)``.
+        """
+        if not self._fused_ok():
+            raise ValueError(
+                "engine configuration is not fusable (Thompson-policy "
+                "bandit or fused=False) — analyze + route_many_staged")
+        if self.mesh is not None:
+            raise ValueError("route_tokens_batch is single-device only "
+                             "(mesh-sharded catalogs keep the staged "
+                             "analyze)")
+        tokens = np.asarray(tokens, np.int32)
+        B = tokens.shape[0]
+        prefs_list = resolve_batch(prefs_batch, B)
+        if len(prefs_list) != B:
+            raise ValueError(f"prefs batch size {len(prefs_list)} != "
+                             f"token batch size {B}")
+        if B == 0:
+            z = np.zeros(0, np.int32)
+            zf = np.zeros(0, np.float32)
+            return RoutingBatch(
+                names=[], model_idx=z, score=zf, stage=z,
+                similarity=zf, task_vectors=np.zeros((0, len(METRICS)),
+                                                     np.float32),
+                cand_idx=np.zeros((0, 1), np.int32),
+                cand_score=np.zeros((0, 1), np.float32),
+                n_filtered=z, n_candidates=z,
+                catalog_n=0, knn_k=0, r=0,
+                tt_idx=z, dm_idx=z, cx=zf, conf=zf)
+        snap = self.mres.snapshot()
+        emb, names, tt_matrix, dm_matrix, gmask, _ = snap
+        n = emb.shape[0]
+        if n == 0:
+            raise RuntimeError("empty MRES catalog")
+        if self.ivf and n >= self.ivf_min_n:
+            raise ValueError("route_tokens_batch does not compose with "
+                             "IVF pruning — use the staged analyze")
+        k = min(self.knn_k, n)
+        r = min(max(5, k), n)
+        W = _prefs_matrix(prefs_list)
+
+        theta = ainv = None
+        alpha = ad_w = 0.0
+        if self.adaptive is not None and self.adaptive_weight != 0.0:
+            self.adaptive.ensure(n)
+            theta, ainv = self.adaptive.posterior()
+            alpha = float(self.adaptive.alpha)
+            ad_w = self.adaptive_weight
+        lpen = None
+        if self.load is not None and self.load_weight != 0.0:
+            self.load.ensure(n)
+            lpen = self.load_weight * self.load.penalty()[:n]
+        fb_table = None
+        if self.feedback is not None and self.feedback.has_bias():
+            # dense per-cluster table, identity-stable per store
+            # version, so its padded device copy caches in ops
+            fb_table = self.feedback.bias_table(names)
+
+        from repro.kernels import ops as K
+        out = K.analyze_route_step(
+            params, cfg, tokens, emb, tt_matrix, dm_matrix, gmask, W,
+            k=k, r=r, threshold=self.confidence_threshold, acc_col=_ACC,
+            use_complexity=getattr(self, "use_complexity", True),
+            fb_table=fb_table, fb_weight=self.feedback_weight,
+            theta=theta, ainv=ainv, alpha=alpha, ad_weight=ad_w,
+            lpen=lpen,
+            use_pallas=self.use_kernel and n >= self._kernel_min_n,
+            quant=self.quantize,
+            telemetry=self.telemetry, tracer=self.tracer)
+        return RoutingBatch(
+            names=names, model_idx=out["model_idx"],
+            score=out["score"], stage=out["stage"],
+            similarity=out["similarity"],
+            task_vectors=out["task_vectors"],
+            cand_idx=out["cand_idx"], cand_score=out["cand_score"],
+            n_filtered=out["n_filtered"],
+            n_candidates=out["n_candidates"],
+            catalog_n=n, knn_k=k, r=r,
+            tt_idx=out["tt_idx"], dm_idx=out["dm_idx"],
+            cx=out["cx"], conf=out["conf"])
 
     # ------------------------------------------------------------------
     def route_many_staged(self, prefs_batch, sigs: Sequence[TaskSignature]

@@ -82,6 +82,8 @@ class Telemetry:
         self._cache: Dict[str, int] = {}
         self._route_step: Dict[str, int] = {"dispatches": 0,
                                             "compiles": 0}
+        self._analyze_step: Dict[str, int] = {"dispatches": 0,
+                                              "compiles": 0}
         self._sharding: Dict[str, int] = {"silent_replications": 0}
         self._counters: Dict[str, float] = {}
         self._gauges: Dict[str, float] = {}
@@ -143,6 +145,23 @@ class Telemetry:
         """Fused-dispatch counters: {dispatches, compiles}."""
         with self._lock:
             return dict(self._route_step)
+
+    def record_analyze_step(self, *, dispatches: int = 0,
+                            compiles: int = 0) -> None:
+        """Count analyzer-stage device activity: one dispatch per
+        analyzed batch, whether the analyzer ran alone
+        (``ops.analyze_step``) or inside the fused analyze->route
+        program (``ops.analyze_route_step``, which feeds BOTH counter
+        families from its single dispatch).  Same health read as
+        ``record_route_step``: compiles must go FLAT after warmup."""
+        with self._lock:
+            self._analyze_step["dispatches"] += int(dispatches)
+            self._analyze_step["compiles"] += int(compiles)
+
+    def analyze_step_stats(self) -> Dict[str, int]:
+        """Analyzer-dispatch counters: {dispatches, compiles}."""
+        with self._lock:
+            return dict(self._analyze_step)
 
     def record_sharding(self, *, silent_replications: int = 0) -> None:
         """Count partition-spec fallbacks: ``silent_replications`` is
@@ -318,6 +337,7 @@ class Telemetry:
                 "cache_funnel": {k: self._cache.get(k, 0)
                                  for k in CACHE_KINDS},
                 "route_step": dict(self._route_step),
+                "analyze_step": dict(self._analyze_step),
                 "sharding": dict(self._sharding),
                 "latency": lat_p,
                 "latency_percentiles": lat_p,

@@ -1,0 +1,172 @@
+"""Fused analyze→route device programs.
+
+The decision hot path used to be two device programs with a host
+round-trip in the middle: the analyzer forward synced its logits to
+host, Python built one ``TaskSignature`` per row, the host rebuilt task
+vectors and filter indices, and only then re-entered the fused
+``route_step``.  This module collapses the whole path — token ids →
+analyzer encoder → softmax heads / complexity clamp / confidence →
+task-vector construction → feedback-bias gather → kNN/bias/bandit/load
+blend → model choice — into ONE jitted program:
+
+* ``analyze_step_jit`` — the analyzer half alone (encoder + heads +
+  in-program argmax/confidence), for callers that still need staged
+  ``TaskSignature`` batches.  The softmax→argmax→min-of-maxes epilogue
+  runs on device, so the host only ever sees four small (B,) arrays
+  instead of full logit matrices.
+* ``analyze_route_step_jit`` — the full fusion: the analyzer epilogue
+  feeds the confidence-thresholded filter-row indices, the
+  complexity-clamped task vectors, and the per-cluster feedback-bias
+  rows directly into ``route_step._route_step_body``, so no
+  intermediate ever touches the host.
+
+Both are raw shape-specialized entries; go through the bucketed
+``ops.analyze_step`` / ``ops.analyze_route_step`` dispatchers.
+
+``analyzer_forward`` (and its ``_ln`` / ``_maybe_deq`` helpers) moved
+here from ``core/analyzer.py`` so the kernel layer owns the traced
+encoder; ``core.analyzer`` re-exports them for existing callers.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.tokenizer import PAD_ID
+from repro.kernels.route_step import _route_step_body
+
+
+def _ln(x, g, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g
+
+
+def _maybe_deq(w):
+    """Transparent int8 dequant: w is either f32 or (int8, scale)."""
+    if isinstance(w, tuple):
+        q, s = w
+        return q.astype(jnp.float32) * s
+    return w
+
+
+def analyzer_forward(params: Dict, cfg, tokens: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """tokens (B, L) int32 -> (tt_logits, dm_logits, complexity (B,))."""
+    B, L = tokens.shape
+    mask = tokens != PAD_ID                                 # (B, L)
+    emb = _maybe_deq(params["embed"])
+    x = emb[tokens] + _maybe_deq(params["pos"])[None, :L]
+    H, hd = cfg.n_heads, cfg.head_dim
+    neg = jnp.where(mask, 0.0, -1e30)[:, None, None, :]     # key mask
+
+    for p in params["layers"]:
+        h = _ln(x, p["ln1"])
+        q = (h @ _maybe_deq(p["wq"])).reshape(B, L, H, hd)
+        k = (h @ _maybe_deq(p["wk"])).reshape(B, L, H, hd)
+        v = (h @ _maybe_deq(p["wv"])).reshape(B, L, H, hd)
+        s = jnp.einsum("blhd,bmhd->bhlm", q, k) / math.sqrt(hd) + neg
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhlm,bmhd->blhd", a, v).reshape(B, L, -1)
+        x = x + o @ _maybe_deq(p["wo"])
+        h = _ln(x, p["ln2"])
+        x = x + jax.nn.gelu(h @ _maybe_deq(p["wi"])) @ _maybe_deq(p["wp"])
+
+    x = _ln(x, params["ln_f"])
+    denom = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1)
+    pooled = jnp.sum(x * mask[..., None], axis=1) / denom   # (B, d)
+    tt = pooled @ _maybe_deq(params["head_tt"])
+    dm = pooled @ _maybe_deq(params["head_dm"])
+    cx = jax.nn.sigmoid(pooled @ _maybe_deq(params["head_cx"]))[:, 0]
+    return tt, dm, cx
+
+
+def _analyze_heads(params, cfg, tokens):
+    """Encoder + the staged host epilogue, traced: softmax heads,
+    first-occurrence argmax over the PROBABILITIES (exactly what the
+    host ``np.argmax`` did), complexity clamp, min-of-maxes confidence.
+    All-PAD bucket-padding rows pool to zeros → uniform probs → low
+    confidence; they cost nothing extra and are sliced off by ops."""
+    tt, dm, cx = analyzer_forward(params, cfg, tokens)
+    tt_p = jax.nn.softmax(tt, axis=-1)
+    dm_p = jax.nn.softmax(dm, axis=-1)
+    return (jnp.argmax(tt_p, axis=1).astype(jnp.int32),
+            jnp.argmax(dm_p, axis=1).astype(jnp.int32),
+            jnp.clip(cx, 0.0, 1.0),
+            jnp.minimum(tt_p.max(axis=1), dm_p.max(axis=1)))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def analyze_step_jit(params, tokens, *, cfg):
+    """Analyzer half of the fused path over a bucket-padded batch.
+
+    tokens (Qp, L) int32; ``cfg`` is the hashable ``AnalyzerConfig``
+    (static — one executable per config).  Returns (Qp,) arrays:
+    ``tt_idx``/``dm_idx`` (raw head argmax), ``cx`` (clipped [0, 1]),
+    ``conf`` (min of the two softmax maxima).
+    """
+    tt_idx, dm_idx, cx, conf = _analyze_heads(params, cfg, tokens)
+    return {"tt_idx": tt_idx, "dm_idx": dm_idx, "cx": cx, "conf": conf}
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "acc_col", "use_complexity", "fb_buckets",
+                     "k", "r", "n_tt", "n_dm", "has_fb", "has_ad",
+                     "has_load", "use_pallas", "blk_q", "blk_n",
+                     "interpret", "quant"))
+def analyze_route_step_jit(params, tokens, W, ascalars, fb_table,
+                           e2, e2s, masks_table, counts_table,
+                           theta, ainv_flat, lpen, rparams, *,
+                           cfg, acc_col: int, use_complexity: bool,
+                           fb_buckets: int, k: int, r: int,
+                           n_tt: int, n_dm: int, has_fb: bool,
+                           has_ad: bool, has_load: bool,
+                           use_pallas: bool, blk_q: int, blk_n: int,
+                           interpret: bool, quant: bool = False):
+    """ONE program from token ids to model choice.
+
+    tokens (Qp, L) int32 bucket-padded queries; W (Qp, M) preference
+    weight rows; ascalars (1,) f32 ``[confidence_threshold]`` (traced:
+    threshold changes must not recompile); fb_table
+    (n_tt_raw * n_dm_raw * fb_buckets, Np) dense per-cluster feedback
+    bias table (dummy when ``has_fb`` False) — the traced epilogue
+    gathers each query's row from its RAW predicted (tt, dm, complexity
+    bucket), matching ``feedback.cluster_of`` which clusters on the
+    predicted signature regardless of confidence.  The remaining
+    operands and statics are ``route_step_jit``'s, with ``n_tt``/
+    ``n_dm`` counting the trailing ANY rows (so the raw head widths are
+    ``n_tt - 1`` / ``n_dm - 1``); ``acc_col``/``use_complexity``
+    replicate the staged task-vector build ``T[:, acc] =
+    max(W[:, acc], cx)``.
+
+    Returns ``route_step_jit``'s dict plus the analyzer outputs
+    (``tt_idx``/``dm_idx``/``cx``/``conf``) and the in-program task
+    vectors (``task_vectors`` (Qp, M)) for lazy ``TaskSignature`` /
+    observation accessors.
+    """
+    tt_idx, dm_idx, cx, conf = _analyze_heads(params, cfg, tokens)
+    confident = conf >= ascalars[0]
+    ti = jnp.where(confident, tt_idx, n_tt - 1).astype(jnp.int32)
+    di = jnp.where(confident, dm_idx, n_dm - 1).astype(jnp.int32)
+    T = W
+    if use_complexity:
+        T = W.at[:, acc_col].set(jnp.maximum(W[:, acc_col], cx))
+    fb = fb_table
+    if has_fb:
+        cb = jnp.clip((cx * fb_buckets).astype(jnp.int32),
+                      0, fb_buckets - 1)
+        fb = fb_table[(tt_idx * (n_dm - 1) + dm_idx) * fb_buckets + cb]
+    out = _route_step_body(
+        e2, e2s, masks_table, counts_table, T, W, ti, di, fb,
+        theta, ainv_flat, lpen, rparams, k=k, r=r, n_tt=n_tt,
+        n_dm=n_dm, has_fb=has_fb, has_ad=has_ad, has_load=has_load,
+        use_pallas=use_pallas, blk_q=blk_q, blk_n=blk_n,
+        interpret=interpret, quant=quant)
+    out.update(tt_idx=tt_idx, dm_idx=dm_idx, cx=cx, conf=conf,
+               task_vectors=T)
+    return out

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.analyze_step import (analyze_route_step_jit,
+                                        analyze_step_jit)
 from repro.kernels.bandit_update import bandit_update_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.moe_gating import moe_gating_pallas
@@ -89,7 +91,8 @@ def n_bucket_sharded(n: int, ndev: int) -> int:
 from repro.analysis.sanitize import make_lock as _make_lock
 
 _STATS = {"route_step_dispatches": 0, "route_step_compiles": 0,
-          "topk_dispatches": 0, "topk_compiles": 0}
+          "topk_dispatches": 0, "topk_compiles": 0,
+          "analyze_step_dispatches": 0, "analyze_step_compiles": 0}
 _STATS_LOCK = _make_lock("ops.stats")
 
 
@@ -137,7 +140,12 @@ def set_recompile_hook(hook) -> None:
 
     The hook is called as ``hook(event)`` with ``event = {"path",
     "q_bucket", "n_bucket", "quant", "shards", "compiles"}`` after
-    every ``route_step`` dispatch."""
+    every ``route_step`` dispatch, and likewise after every
+    ``analyze_step`` dispatch (``path="analyze"``, ``n_bucket`` = the
+    token axis, ``quant`` = analyzer int8) and every fused
+    ``analyze_route_step`` dispatch (``path="fused"``, ``quant`` =
+    ``(catalog_int8, analyzer_int8)`` — both axes change the compiled
+    program, so both belong to the shape-bucket signature)."""
     global _RECOMPILE_HOOK
     _RECOMPILE_HOOK = hook
 
@@ -663,6 +671,186 @@ def route_step(emb, tt_matrix, dm_matrix, gmask, T, W, ti, di, *,
               "quant": quant, "shards": shards, "compiles": compiles})
     if telemetry is not None:
         telemetry.record_route_step(dispatches=1, compiles=compiles)
+    out = jax.device_get(out)           # ONE host transfer for all
+    return {key: v[:B] for key, v in out.items()}
+
+
+# ----------------------------------------------------------------------
+# analyze_step / analyze_route_step: the fused tokens->decision path
+# ----------------------------------------------------------------------
+
+def analyzer_quantized(params) -> bool:
+    """True when the analyzer params pytree is int8-quantized —
+    ``core.analyzer.quantize_int8`` turns every 2-D leaf into an
+    ``(int8, scale)`` pair, ``embed`` always among them."""
+    return isinstance(params.get("embed"), tuple)
+
+
+def _fb_table_pack(fb_table, np_pad: int):
+    """Device copy of the dense per-cluster feedback-bias table with
+    its catalog axis padded to the capacity bucket — cached on the
+    table's identity (``FeedbackStore.bias_table`` memoizes per store
+    version, so the id is stable until feedback actually changes)."""
+    key = (id(fb_table), "fbt", np_pad)
+    packed = _cache_lookup(key)
+    if packed is not None:
+        return packed
+    t = np.asarray(fb_table, np.float32)
+    packed = jnp.asarray(np.pad(t, ((0, 0), (0, np_pad - t.shape[1]))))
+    _cache_put(key, fb_table, packed)
+    return packed
+
+
+def analyze_step(params, cfg, tokens, *, telemetry=None,
+                 tracer=None) -> dict:
+    """Bucketed analyzer dispatch: ONE jitted program per (Q bucket,
+    token length, config, params structure).
+
+    tokens (B, L) int32, B >= 1 — padded up to the power-of-two query
+    bucket with all-PAD rows (uniform heads, never read back).  Emits
+    the same stats/hook/profiler/telemetry plumbing as ``route_step``
+    under the ``analyze_step_*`` counters, with ``path="analyze"`` and
+    the token axis as the bucket signature's ``n_bucket``.  Returns
+    host numpy ``{tt_idx, dm_idx, cx, conf}`` arrays of length B.
+    """
+    tokens = np.asarray(tokens, np.int32)
+    B, L = tokens.shape
+    assert B >= 1, "analyze_step requires a non-empty batch"
+    qp = q_bucket(B)
+    if qp != B:
+        tokens = np.pad(tokens, ((0, qp - B), (0, 0)))
+    quant = analyzer_quantized(params)
+    call = functools.partial(analyze_step_jit, params,
+                             jnp.asarray(tokens), cfg=cfg)
+    prof = _COST_PROFILER
+    if prof is not None:
+        prof.capture(("analyze", qp, L, quant, 1), analyze_step_jit,
+                     call)
+    if tracer is not None:
+        with tracer.span("analyze_step", path="analyze", batch=B,
+                         q_bucket=qp, n_bucket=L, quant=quant,
+                         shards=1) as sp:
+            out, compiles = _count_compiles(analyze_step_jit, call)
+            sp.set(compiles=compiles)
+    else:
+        out, compiles = _count_compiles(analyze_step_jit, call)
+    _bump("analyze_step", compiles)
+    hook = _RECOMPILE_HOOK
+    if hook is not None:
+        hook({"path": "analyze", "q_bucket": qp, "n_bucket": L,
+              "quant": quant, "shards": 1, "compiles": compiles})
+    if telemetry is not None:
+        telemetry.record_analyze_step(dispatches=1, compiles=compiles)
+    out = jax.device_get(out)           # ONE host transfer for all
+    return {key: v[:B] for key, v in out.items()}
+
+
+def analyze_route_step(params, cfg, tokens, emb, tt_matrix, dm_matrix,
+                       gmask, W, *, k: int, r: int, threshold: float,
+                       acc_col: int, use_complexity: bool = True,
+                       fb_table=None, fb_buckets: int = 4,
+                       fb_weight: float = 0.0,
+                       theta: Optional[np.ndarray] = None,
+                       ainv: Optional[np.ndarray] = None,
+                       alpha: float = 0.0, ad_weight: float = 0.0,
+                       lpen: Optional[np.ndarray] = None,
+                       use_pallas: bool = False,
+                       interpret: Optional[bool] = None,
+                       quant: bool = False,
+                       telemetry=None, tracer=None) -> dict:
+    """ONE device dispatch from token ids to model choice per batch
+    (see ``kernels/analyze_step.analyze_route_step_jit``).
+
+    The analyzer operands ride ``route_step``'s dense-path recipe:
+    tokens (B, L) pad to the power-of-two Q bucket with all-PAD rows,
+    W (B, M) preference rows pad with zero rows, the catalog packs
+    through the same padded-constant cache, and the confidence
+    ``threshold`` ships as a traced scalar so tuning it never
+    recompiles.  ``fb_table`` is ``FeedbackStore.bias_table(names)``
+    ((n_tt * n_dm * fb_buckets, N) dense clusters); its padded device
+    copy is cached on table identity.  Dense single-device only — the
+    sharded/IVF mega-catalog paths keep the staged analyze.
+
+    One dispatch feeds BOTH counter families (``route_step_*`` and
+    ``analyze_step_*``), one ``path="fused"`` hook event whose
+    ``quant`` field is ``(catalog_int8, analyzer_int8)``, and one
+    ``route_step`` tracer span with an ``analyzer_quant`` attr.
+    Returns host numpy ``route_step`` outputs plus ``tt_idx`` /
+    ``dm_idx`` / ``cx`` / ``conf`` / ``task_vectors`` sliced to B.
+    """
+    tokens = np.asarray(tokens, np.int32)
+    emb = np.asarray(emb, np.float32)
+    W = np.asarray(W, np.float32)
+    n, m = emb.shape
+    B, L = tokens.shape
+    assert B >= 1, "analyze_route_step requires a non-empty batch"
+    assert 1 <= k <= n and 1 <= r <= n, (k, r, n)
+    qp = q_bucket(B)
+    interp = default_interpret() if interpret is None else interpret
+    n_tt = np.asarray(tt_matrix).shape[0]
+    n_dm = np.asarray(dm_matrix).shape[0]
+
+    qpad = qp - B
+    toksp, Wp = tokens, W
+    if qpad:
+        toksp = np.pad(tokens, ((0, qpad), (0, 0)))
+        Wp = np.pad(W, ((0, qpad), (0, 0)))
+
+    dummy1 = _dummies()
+    has_fb = fb_table is not None
+    has_ad = theta is not None
+    has_load = lpen is not None
+    np_pad = n_bucket(n)
+    npad = np_pad - n
+    blk_n = 512 if np_pad % 512 == 0 else LANE
+    e2_d, e2s_d, masks_d, counts_d = _catalog_pack(
+        emb, tt_matrix, dm_matrix, gmask, np_pad, quant=quant)
+    fbt = _fb_table_pack(fb_table, np_pad) if has_fb else dummy1[0]
+    if has_ad:
+        thp = np.pad(np.asarray(theta, np.float32)[:n],
+                     ((0, npad), (0, 0)))
+        aip = np.pad(np.asarray(ainv, np.float32)[:n].reshape(n, -1),
+                     ((0, npad), (0, 0)))
+    else:
+        thp = aip = dummy1[0]
+    lpp = np.pad(np.asarray(lpen, np.float32)[:n], (0, npad)) \
+        if has_load else dummy1[1]
+    ascalars = np.array([threshold], np.float32)
+    rparams = np.array([fb_weight, ad_weight, alpha], np.float32)
+    aquant = analyzer_quantized(params)
+    call = functools.partial(
+        analyze_route_step_jit, params, jnp.asarray(toksp), Wp,
+        ascalars, fbt, e2_d, e2s_d, masks_d, counts_d, thp, aip, lpp,
+        rparams, cfg=cfg, acc_col=int(acc_col),
+        use_complexity=bool(use_complexity),
+        fb_buckets=int(fb_buckets), k=k, r=r, n_tt=n_tt, n_dm=n_dm,
+        has_fb=has_fb, has_ad=has_ad, has_load=has_load,
+        use_pallas=use_pallas, blk_q=8, blk_n=blk_n,
+        interpret=interp, quant=quant)
+    prof = _COST_PROFILER
+    if prof is not None:
+        prof.capture(("fused", qp, np_pad, (quant, aquant), 1),
+                     analyze_route_step_jit, call)
+    if tracer is not None:
+        with tracer.span("route_step", path="fused", batch=B,
+                         q_bucket=qp, n_bucket=np_pad, catalog_n=n,
+                         quant=quant, analyzer_quant=aquant,
+                         shards=1) as sp:
+            out, compiles = _count_compiles(analyze_route_step_jit,
+                                            call)
+            sp.set(compiles=compiles)
+    else:
+        out, compiles = _count_compiles(analyze_route_step_jit, call)
+    _bump("route_step", compiles)
+    _bump("analyze_step", compiles)
+    hook = _RECOMPILE_HOOK
+    if hook is not None:
+        hook({"path": "fused", "q_bucket": qp, "n_bucket": np_pad,
+              "quant": (quant, aquant), "shards": 1,
+              "compiles": compiles})
+    if telemetry is not None:
+        telemetry.record_route_step(dispatches=1, compiles=compiles)
+        telemetry.record_analyze_step(dispatches=1, compiles=compiles)
     out = jax.device_get(out)           # ONE host transfer for all
     return {key: v[:B] for key, v in out.items()}
 

@@ -276,6 +276,119 @@ def route_step_ivf(emb, tt_matrix, dm_matrix, gmask, T, W, ti, di,
 
 
 # ----------------------------------------------------------------------
+# analyze_step / analyze_route_step: fused tokens -> decision path
+# ----------------------------------------------------------------------
+
+def analyze_step(params, cfg, tokens, *, pad_id: int = 0) -> dict:
+    """Ground truth of the analyzer half of the fused decision path.
+
+    A pre-LN transformer encoder over hash-token ids with a key-side
+    pad mask, masked mean pooling, and three linear heads — then the
+    staged host epilogue, traced: softmax per head, first-occurrence
+    argmax over the PROBABILITIES, complexity clamped to [0, 1], and
+    confidence = min of the two softmax maxima.  Any ``params`` leaf
+    may be an ``(int8, scale)`` pair (symmetric per-channel weight
+    quantization); it dequantizes transparently.
+
+    params: the ``core.analyzer.init_analyzer`` pytree; cfg: anything
+    with ``n_heads``; tokens (B, L) int32 (``pad_id`` =
+    ``data.tokenizer.PAD_ID``).  Returns (B,) arrays ``tt_idx`` /
+    ``dm_idx`` (int32), ``cx``, ``conf`` (f32).
+    """
+    def deq(w):
+        return w[0].astype(jnp.float32) * w[1] if isinstance(w, tuple) else w
+
+    def ln(h, g):
+        mu = h.mean(axis=-1, keepdims=True)
+        return (h - mu) * jax.lax.rsqrt(
+            h.var(axis=-1, keepdims=True) + 1e-6) * g
+
+    tokens = jnp.asarray(tokens)
+    Bq, L = tokens.shape
+    live = tokens != pad_id
+    x = deq(params["embed"])[tokens] + deq(params["pos"])[None, :L]
+    H = cfg.n_heads
+    hd = x.shape[-1] // H
+    neg = jnp.where(live, 0.0, -1e30)
+
+    for p in params["layers"]:
+        h = ln(x, p["ln1"])
+        q = (h @ deq(p["wq"])).reshape(Bq, L, H, hd)
+        k = (h @ deq(p["wk"])).reshape(Bq, L, H, hd)
+        v = (h @ deq(p["wv"])).reshape(Bq, L, H, hd)
+        s = jnp.einsum("blhd,bmhd->bhlm", q, k) / math.sqrt(hd)
+        o = jnp.einsum("bhlm,bmhd->blhd",
+                       jax.nn.softmax(s + neg[:, None, None, :], axis=-1),
+                       v)
+        x = x + o.reshape(Bq, L, H * hd) @ deq(p["wo"])
+        h = ln(x, p["ln2"])
+        x = x + jax.nn.gelu(h @ deq(p["wi"])) @ deq(p["wp"])
+
+    x = ln(x, params["ln_f"])
+    pooled = (x * live[..., None]).sum(axis=1) \
+        / jnp.maximum(live.sum(axis=1, keepdims=True), 1)
+    tt_p = jax.nn.softmax(pooled @ deq(params["head_tt"]), axis=-1)
+    dm_p = jax.nn.softmax(pooled @ deq(params["head_dm"]), axis=-1)
+    cx = jax.nn.sigmoid(pooled @ deq(params["head_cx"]))[:, 0]
+    return {
+        "tt_idx": jnp.argmax(tt_p, axis=1).astype(jnp.int32),
+        "dm_idx": jnp.argmax(dm_p, axis=1).astype(jnp.int32),
+        "cx": jnp.clip(cx, 0.0, 1.0),
+        "conf": jnp.minimum(tt_p.max(axis=1), dm_p.max(axis=1)),
+    }
+
+
+def analyze_route_step(params, cfg, tokens, emb, tt_matrix, dm_matrix,
+                       gmask, W, k: int, r: int, *,
+                       threshold: float = 0.3,
+                       use_complexity: bool = True, acc_col: int = 0,
+                       fb_table: Optional[jnp.ndarray] = None,
+                       fb_buckets: int = 4, fb_weight: float = 0.0,
+                       theta: Optional[jnp.ndarray] = None,
+                       ainv: Optional[jnp.ndarray] = None,
+                       alpha: float = 0.0, ad_weight: float = 0.0,
+                       lpen: Optional[jnp.ndarray] = None,
+                       quant: bool = False, pad_id: int = 0) -> dict:
+    """Ground truth of the fully fused tokens→decision step (unpadded).
+
+    ``analyze_step``'s heads feed the staged glue, traced: filter-row
+    indices fall back to the trailing ANY rows below ``threshold``;
+    task vectors are the preference weights with the accuracy column
+    (``acc_col``) floored at predicted complexity (``use_complexity``);
+    the per-query feedback-bias row is gathered from ``fb_table``
+    ((n_tt_raw * n_dm_raw * fb_buckets, N), layout of
+    ``feedback.FeedbackStore.bias_table``) at the RAW predicted cluster
+    — matching ``feedback.cluster_of``, which ignores confidence.  The
+    rest is ``route_step`` verbatim.  Returns ``route_step``'s dict
+    plus ``tt_idx``/``dm_idx``/``cx``/``conf``/``task_vectors``.
+    """
+    heads = analyze_step(params, cfg, tokens, pad_id=pad_id)
+    tt_idx, dm_idx = heads["tt_idx"], heads["dm_idx"]
+    cx, conf = heads["cx"], heads["conf"]
+    n_tt, n_dm = tt_matrix.shape[0], dm_matrix.shape[0]
+    confident = conf >= threshold
+    ti = jnp.where(confident, tt_idx, n_tt - 1).astype(jnp.int32)
+    di = jnp.where(confident, dm_idx, n_dm - 1).astype(jnp.int32)
+    W = jnp.asarray(W, jnp.float32)
+    T = W
+    if use_complexity:
+        T = W.at[:, acc_col].set(jnp.maximum(W[:, acc_col], cx))
+    fb = None
+    if fb_table is not None:
+        cb = jnp.clip((cx * fb_buckets).astype(jnp.int32),
+                      0, fb_buckets - 1)
+        fb = jnp.asarray(fb_table, jnp.float32)[
+            (tt_idx * (n_dm - 1) + dm_idx) * fb_buckets + cb]
+    out = route_step(emb, tt_matrix, dm_matrix, gmask, T, W, ti, di,
+                     k, r, fb=fb, fb_weight=fb_weight, theta=theta,
+                     ainv=ainv, alpha=alpha, ad_weight=ad_weight,
+                     lpen=lpen, quant=quant)
+    out.update(tt_idx=tt_idx, dm_idx=dm_idx, cx=cx, conf=conf,
+               task_vectors=T)
+    return out
+
+
+# ----------------------------------------------------------------------
 # bandit_update: batched rank-1 posterior updates + UCB scoring matmul
 # ----------------------------------------------------------------------
 

@@ -225,18 +225,16 @@ def _quant_operands(e2, e2s, M: int):
 # dense single-device program
 # ----------------------------------------------------------------------
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("k", "r", "n_tt", "n_dm", "has_fb",
-                     "has_ad", "has_load", "use_pallas", "blk_q",
-                     "blk_n", "interpret", "quant"))
-def route_step_jit(e2, e2s, masks_table, counts_table, T, W, ti, di, fb,
-                   theta, ainv_flat, lpen, params, *, k: int, r: int,
-                   n_tt: int, n_dm: int, has_fb: bool,
-                   has_ad: bool, has_load: bool, use_pallas: bool,
-                   blk_q: int, blk_n: int, interpret: bool,
-                   quant: bool = False):
-    """One fused routing step over a bucket-padded batch.
+def _route_step_body(e2, e2s, masks_table, counts_table, T, W, ti, di, fb,
+                     theta, ainv_flat, lpen, params, *, k: int, r: int,
+                     n_tt: int, n_dm: int, has_fb: bool,
+                     has_ad: bool, has_load: bool, use_pallas: bool,
+                     blk_q: int, blk_n: int, interpret: bool,
+                     quant: bool = False):
+    """Traced body of ``route_step_jit`` (same signature, un-jitted) —
+    split out so ``analyze_step.analyze_route_step_jit`` can inline the
+    whole routing step after the analyzer encoder inside ONE program
+    instead of paying a second dispatch.
 
     The live catalog size is deliberately NOT a parameter: liveness is
     fully encoded in the mask table (padded columns are False in every
@@ -403,6 +401,13 @@ def route_step_jit(e2, e2s, masks_table, counts_table, T, W, ti, di, fb,
         "n_candidates": jnp.where(has_primary, nf,
                                   counts_table[fi]).astype(jnp.int32),
     }
+
+
+route_step_jit = jax.jit(
+    _route_step_body,
+    static_argnames=("k", "r", "n_tt", "n_dm", "has_fb",
+                     "has_ad", "has_load", "use_pallas", "blk_q",
+                     "blk_n", "interpret", "quant"))
 
 
 # ----------------------------------------------------------------------

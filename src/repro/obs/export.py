@@ -114,6 +114,16 @@ def prometheus_text(telemetry, *, load=None, tracer=None,
              "Fused route-step recompiles (0 after warmup)")
     w.sample("repro_route_step_compiles_total", rs["compiles"])
 
+    an = s.get("analyze_step")
+    if an is not None:
+        w.header("repro_analyze_step_dispatches_total", "counter",
+                 "Analyzer-stage device dispatches (solo or fused)")
+        w.sample("repro_analyze_step_dispatches_total",
+                 an["dispatches"])
+        w.header("repro_analyze_step_compiles_total", "counter",
+                 "Analyzer-stage recompiles (0 after warmup)")
+        w.sample("repro_analyze_step_compiles_total", an["compiles"])
+
     w.header("repro_sharding_silent_replications_total", "counter",
              "Catalog shards silently replicated instead of split")
     w.sample("repro_sharding_silent_replications_total",
@@ -280,6 +290,10 @@ def metrics_from_prom(text: str) -> Dict[str, float]:
         "repro_route_step_compiles_total", 0.0)
     m["route_step_dispatches"] = raw.get(
         "repro_route_step_dispatches_total", 0.0)
+    m["analyze_step_compiles"] = raw.get(
+        "repro_analyze_step_compiles_total", 0.0)
+    m["analyze_step_dispatches"] = raw.get(
+        "repro_analyze_step_dispatches_total", 0.0)
     m["silent_replications"] = raw.get(
         "repro_sharding_silent_replications_total", 0.0)
     m["route_latency_p99"] = lab("repro_route_latency_seconds",

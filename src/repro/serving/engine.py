@@ -6,6 +6,10 @@ in one vectorized ``route_all`` pass (interactive mode) or one
 sample-and-aggregate call (batch mode), groups requests by their routed
 model, executes each group as ONE batched generate call on that model's
 runner, and returns per-request results with latency / cost accounting.
+With a real ``TaskAnalyzer`` attached, that ``route_all`` pass is ONE
+fused device program per batch — token ids in, model choices out
+(``kernels/analyze_step``); the engine itself needs no knowledge of
+the fusion beyond the lazy ``RoutedQuery`` accessors it already uses.
 Thumbs feedback flows back into the router's FeedbackStore, and
 post-generation quality observations flow into the router's adaptive
 bandit via ``observe`` (shaped rewards against each routed context).
